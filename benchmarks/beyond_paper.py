@@ -1,0 +1,79 @@
+"""Beyond-paper optimizations, benchmarked against the paper-faithful
+baseline (B7/B8):
+
+B7: cached per-node top-K (materialized, cf. Li[9]) vs the beam engine —
+    the TPU-native trade the paper rejected for CPU (DESIGN §2.3).
+B8: Pallas kernel microbenches (interpret-mode iteration counts only on
+    CPU; structural VMEM/block shapes reported for the TPU target).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (SIZES, build_index, dataset, emit,
+                               fixed_batches, time_batches)
+from repro.data.strings import make_workload
+
+
+def b7_cached_vs_beam(k: int = 10, batch: int = 256, name: str = "usps"):
+    ds = dataset(name)
+    qs = make_workload(ds, SIZES["queries"] // 2, seed=11, max_len=14)
+    rows = []
+    for label, kw in [("et_beam(paper)", {}),
+                      ("et_cached_k16(beyond)", {"cache_k": 16})]:
+        idx = build_index(ds, "et", **kw)
+        batches = fixed_batches(qs, batch)
+        sec = time_batches(lambda b: idx.complete(b, k=k), batches)
+        rows.append([label, round(idx.stats.bytes_per_string, 1),
+                     round(sec * 1e6, 1)])
+    emit(rows, ["engine", "bytes_per_string", "us_per_q"])
+    return rows
+
+
+def b8_kernels(reps: int = 3):
+    from repro.core import CompletionIndex, make_rules
+    from repro.core.alphabet import pad_queries
+    from repro.kernels import ops, ref
+
+    rows = []
+    strings = [f"entry {i:06d} payload" for i in range(20_000)]
+    idx = CompletionIndex.build(strings, list(range(len(strings))),
+                                make_rules([]), kind="plain")
+    t = idx.device
+    qs, qlens = pad_queries([s[:10] for s in strings[:1024]], 16)
+    qs, qlens = jnp.asarray(qs), jnp.asarray(qlens)
+
+    def timeit(fn, *a, **kw):
+        fn(*a, **kw)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*a, **kw))
+        return (time.perf_counter() - t0) / reps * 1e3
+
+    rows.append(["trie_walk(pallas-interp)", round(timeit(
+        ops.trie_walk, t.first_child, t.edge_char, t.edge_child, qs, qlens), 2)])
+    rows.append(["trie_walk(jnp-ref)", round(timeit(
+        jax.jit(ref.trie_walk_ref), t.first_child, t.edge_char,
+        t.edge_child, qs, qlens), 2)])
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=128).astype(np.float32))
+    cand = jnp.asarray(rng.normal(size=(65536, 128)).astype(np.float32))
+    rows.append(["candidate_topk(pallas-interp)", round(timeit(
+        ops.candidate_topk, q, cand, 100), 2)])
+    rows.append(["candidate_topk(jnp-ref)", round(timeit(
+        jax.jit(ref.candidate_topk_ref, static_argnames="k"),
+        q, cand, 100), 2)])
+    emit(rows, ["kernel", "ms_per_call"])
+    return rows
+
+
+ALL = {
+    "b7": ("cached top-K vs beam engine (beyond paper)", b7_cached_vs_beam),
+    "b8": ("Pallas kernel microbench (interpret mode)", b8_kernels),
+}

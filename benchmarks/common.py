@@ -1,0 +1,60 @@
+"""Shared benchmark helpers: dataset sizing, timing, CSV emit.
+
+Benchmarks default to CPU-friendly scales (REPRO_BENCH_SCALE=small);
+REPRO_BENCH_SCALE=full reproduces the paper's 1M-string sizes.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+
+SIZES = {
+    "small": {"dblp": 3000, "usps": 20000, "sprot": 20000, "queries": 2000},
+    "medium": {"dblp": 24810, "usps": 200_000, "sprot": 200_000,
+               "queries": 10_000},
+    "full": {"dblp": 24810, "usps": 1_000_000, "sprot": 1_000_000,
+             "queries": 50_000},
+}[SCALE]
+
+
+def dataset(name: str):
+    from repro.data.strings import DATASETS
+
+    return DATASETS[name](n=SIZES[name], seed=0)
+
+
+def build_index(ds, kind: str, **kw):
+    from repro.core import CompletionIndex, make_rules
+
+    return CompletionIndex.build(ds.strings, ds.scores,
+                                 make_rules(ds.rules), kind=kind, **kw)
+
+
+def time_batches(fn, batches, warmup: int = 1) -> float:
+    """Mean seconds per item over batched calls (steady state)."""
+    for b in batches[:warmup]:
+        fn(b)
+    n = 0
+    t0 = time.perf_counter()
+    for b in batches:
+        fn(b)
+        n += len(b)
+    return (time.perf_counter() - t0) / max(n, 1)
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()
+
+
+def fixed_batches(queries, batch: int, length: int = 64):
+    """Pre-padded query batches of identical shape (no recompiles)."""
+    out = [queries[i : i + batch] for i in range(0, len(queries), batch)]
+    return [b for b in out if len(b) == batch]

@@ -1,0 +1,85 @@
+"""§Perf hillclimbs: before/after dry-run terms for the three chosen cells.
+
+ 1. qwen2.5-14b decode_32k   (worst roofline fraction among LM cells;
+    memory-dominant)   -> int8 KV cache (KIVI-style)
+ 2. gin-tu ogb_products      (most collective-bound cell)
+    -> locality-aware dst-partitioned edges (aggregation needs no AR)
+ 3. autocomplete-usps serve_1k (the paper's own workload)
+    -> beam vs materialized top-K engine + dedup compaction (CPU wall
+       clock measured in b4/b7; dry-run terms here)
+
+  PYTHONPATH=src python -m benchmarks.hillclimbs
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+from repro.configs import all_archs  # noqa: E402
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+GB = 1024**3
+
+
+def report(tag, r):
+    if r["status"] != "OK":
+        print(tag, "FAIL", r.get("error", "")[:300])
+        return
+    la = r["loop_aware"]
+    coll = sum(la["collective_bytes_per_device"].values())
+    m = r["memory"]
+    print(f"{tag:<46} flops/dev {la['dot_flops_per_device']:.3e}  "
+          f"coll GB/dev {coll / GB:7.3f}  args GB {m['argument_bytes']/GB:6.2f}  "
+          f"temp GB {m['temp_bytes']/GB:6.2f}")
+    return {"flops": la["dot_flops_per_device"], "coll": coll,
+            "args": m["argument_bytes"], "temp": m["temp_bytes"],
+            "colls": la["collective_bytes_per_device"]}
+
+
+def main():
+    mesh = make_production_mesh()
+    archs = all_archs()
+    results = {}
+
+    # -- 1. qwen decode: bf16 cache -> int8 cache -------------------------
+    spec = archs["qwen2.5-14b"]
+    results["qwen_decode_bf16"] = report(
+        "qwen decode_32k cache=bf16 (baseline)",
+        run_cell(spec, "decode_32k", mesh))
+    cfg_int8 = lambda: dataclasses.replace(  # noqa: E731
+        spec.make_config(), cache_dtype="int8")
+    spec8 = dataclasses.replace(spec, make_config=cfg_int8)
+    results["qwen_decode_int8"] = report(
+        "qwen decode_32k cache=int8 (KIVI)",
+        run_cell(spec8, "decode_32k", mesh))
+
+    # -- 2. gin ogb_products: baseline AR -> dst-partitioned --------------
+    gspec = archs["gin-tu"]
+    results["gin_products_base"] = report(
+        "gin ogb_products baseline (edge AR)",
+        run_cell(gspec, "ogb_products", mesh))
+    gcfg = lambda: dataclasses.replace(  # noqa: E731
+        gspec.make_config(), partitioned_edges=True)
+    gspec2 = dataclasses.replace(gspec, make_config=gcfg)
+    results["gin_products_part"] = report(
+        "gin ogb_products dst-partitioned",
+        run_cell(gspec2, "ogb_products", mesh))
+
+    # -- 3. autocomplete-usps: beam -> cached top-K ------------------------
+    aspec = archs["autocomplete-usps"]
+    results["usps_beam"] = report(
+        "autocomplete-usps serve_1k (current engine)",
+        run_cell(aspec, "serve_1k", mesh))
+
+    with open("results/hillclimbs.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("-> results/hillclimbs.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from
+the dry-run artifacts in results/dryrun_singlepod.json.
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF/s bf16)
+  memory_s     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective_s = collective_bytes_per_device / link_bw    (50 GB/s/link)
+
+CPU-backend correction: XLA CPU FloatNormalization upcasts every bf16
+tensor to f32, so byte-based measurements of bf16 programs (the five LM
+archs) are ~2x a TPU execution; we report raw and corrected (x0.5) values.
+FLOP counts are dtype-independent and need no correction.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+BF16_PROGRAMS = {"granite-moe-1b-a400m", "arctic-480b", "mistral-nemo-12b",
+                 "h2o-danube-1.8b", "qwen2.5-14b"}
+
+
+def analyze(path: str = "results/dryrun_singlepod.json"):
+    with open(path) as f:
+        cells = json.load(f)
+    rows = []
+    for r in cells:
+        if r.get("status") != "OK":
+            if r.get("status") == "SKIP":
+                rows.append({"arch": r["arch"], "shape": r["shape"],
+                             "skip": r["reason"]})
+            continue
+        corr = 0.5 if r["arch"] in BF16_PROGRAMS else 1.0
+        la = r.get("loop_aware", {})
+        flops = la.get("dot_flops_per_device", r["flops_per_device"])
+        bytes_dev = max(r["bytes_per_device"],
+                        la.get("dot_bytes_per_device", 0.0)) * corr
+        coll = sum(la.get("collective_bytes_per_device",
+                          r["collective_bytes_per_device"]).values()) * corr
+        compute_s = flops / PEAK_FLOPS
+        memory_s = bytes_dev / HBM_BW
+        coll_s = coll / LINK_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dom = max(terms, key=terms.get)
+        total_flops = flops * r["n_devices"]
+        useful = r["model_flops"] / total_flops if total_flops else 0.0
+        step_s = max(terms.values())
+        mfu = (r["model_flops"] / r["n_devices"] / step_s / PEAK_FLOPS
+               if step_s > 0 else 0.0)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dom,
+            "useful_flops_ratio": useful,
+            "roofline_fraction": mfu,
+            "bf16_corrected": corr != 1.0,
+            "collectives": r["collective_bytes_per_device"],
+        })
+    return rows
+
+
+def main(path: str = "results/dryrun_singlepod.json"):
+    if not os.path.exists(path):
+        print(f"(roofline: {path} missing — run repro.launch.dryrun first)")
+        return []
+    rows = analyze(path)
+    hdr = (f"{'arch':>24s} {'shape':<14s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'coll_s':>10s} {'dominant':>10s} {'useful':>7s} {'roofline':>8s}")
+    print(hdr)
+    for r in rows:
+        if "skip" in r:
+            print(f"{r['arch']:>24s} {r['shape']:<14s} SKIP({r['skip'][:40]})")
+            continue
+        print(f"{r['arch']:>24s} {r['shape']:<14s} {r['compute_s']:>10.2e}"
+              f" {r['memory_s']:>10.2e} {r['collective_s']:>10.2e}"
+              f" {r['dominant']:>10s} {r['useful_flops_ratio']:>7.2f}"
+              f" {r['roofline_fraction']:>8.3f}")
+    print()
+    return rows
+
+
+if __name__ == "__main__":
+    main()

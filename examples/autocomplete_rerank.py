@@ -1,0 +1,59 @@
+"""Trie proposes, model re-ranks (DESIGN §3.1): the paper's completion index
+fetches cheap candidates; a SASRec-style user model re-scores them by
+per-user affinity. This is how the technique composes with the assigned
+recsys architectures.
+
+  PYTHONPATH=src python examples/autocomplete_rerank.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompletionIndex, make_rules
+from repro.models import recsys
+from repro.serving import CompletionService
+
+# --- a tiny product-title catalogue with abbreviations -----------------------
+products = [
+    "mechanical keyboard rgb", "mechanical keyboard silent",
+    "memory card 128gb", "memory card 256gb", "monitor 27 inch 4k",
+    "monitor 32 inch curved", "mouse wireless ergonomic",
+    "mouse pad extended", "microphone usb condenser",
+    "macbook case 14 inch",
+]
+scores = [90, 70, 85, 60, 95, 55, 80, 40, 75, 65]
+rules = make_rules([("mech", "mechanical"), ("kb", "keyboard"),
+                    ("mem", "memory"), ("mon", "monitor"),
+                    ("mic", "microphone"), ("wl", "wireless")])
+index = CompletionIndex.build(products, scores, rules, kind="et")
+
+# --- a user-affinity reranker (SASRec user embedding vs title embedding) ----
+cfg = recsys.SASRecConfig(vocab=len(products), seq_len=8, d_embed=16)
+params, _ = recsys.init_sasrec(jax.random.PRNGKey(0), cfg)
+title_to_id = {t: i for i, t in enumerate(products)}
+# pretend the user recently browsed monitors
+user_hist = jnp.asarray([[title_to_id["monitor 27 inch 4k"],
+                          title_to_id["monitor 32 inch curved"],
+                          -1, -1, -1, -1, -1, -1]])
+user_vec = recsys.sasrec_user_embedding(params, {"hist": user_hist}, cfg)[0]
+item_emb = params["items"]
+
+
+def rerank(query, candidates):
+    if not candidates:
+        return candidates
+    ids = jnp.asarray([title_to_id[s] for _, s in candidates])
+    affinity = item_emb[ids] @ user_vec
+    order = np.argsort(-np.asarray(affinity))
+    return [(float(affinity[i]), candidates[i][1]) for i in order]
+
+
+service = CompletionService(index, reranker=rerank, overfetch=2)
+plain = CompletionService(index)
+
+for q in ("m", "mon", "mem c", "mech kb"):
+    a = [s for _, s in plain.complete([q], k=3)[0]]
+    b = [s for _, s in service.complete([q], k=3)[0]]
+    print(f"{q!r:8} popularity: {a}")
+    print(f"{'':8} user-aware: {b}\n")

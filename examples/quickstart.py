@@ -1,0 +1,21 @@
+"""Quickstart: the paper's Fig. 1 example in ten lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import CompletionIndex, make_rules
+
+strings = ["Andrew Pavlo", "Andrew Parker", "Andrew Packard",
+           "Andy Warhol Museum", "William Smith"]
+scores = [50, 40, 30, 25, 20]
+rules = make_rules([("Andy", "Andrew"), ("Bill", "William")])
+
+for kind in ("tt", "et", "ht"):
+    index = CompletionIndex.build(strings, scores, rules, kind=kind)
+    print(f"\n== {kind.upper()} "
+          f"({index.stats.bytes_per_string:.0f} bytes/string) ==")
+    for query in ("Andy Pa", "Bill", "Andrew P"):
+        suggestions = index.complete([query], k=3)[0]
+        print(f"  {query!r:12} -> "
+              + (", ".join(f"{s}:{score}" for score, s in suggestions)
+                 or "(no match)"))

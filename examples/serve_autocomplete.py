@@ -1,0 +1,60 @@
+"""End-to-end serving driver (deliverable b): build a USPS-scale synonym
+completion index, replay a batched query workload through the
+CompletionService, report latency + throughput per structure.
+
+  PYTHONPATH=src python examples/serve_autocomplete.py [--n 100000]
+"""
+
+import argparse
+import time
+
+from repro.core import CompletionIndex, make_rules
+from repro.data.strings import make_usps, make_workload
+from repro.serving import CompletionService
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--queries", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    print(f"building USPS-like dataset: {args.n} strings ...")
+    ds = make_usps(n=args.n, seed=0)
+    queries = make_workload(ds, args.queries, seed=1, max_len=16)
+    batches = [queries[i : i + args.batch]
+               for i in range(0, len(queries), args.batch)
+               if len(queries[i : i + args.batch]) == args.batch]
+
+    for kind, kw in [("tt", {}), ("et", {}), ("ht", {"alpha": 0.5}),
+                     ("et+cache", {"cache_k": 16})]:
+        base = kind.split("+")[0]
+        t0 = time.perf_counter()
+        idx = CompletionIndex.build(ds.strings, ds.scores,
+                                    make_rules(ds.rules), kind=base, **kw)
+        build_s = time.perf_counter() - t0
+        svc = CompletionService(idx)
+        svc.complete(batches[0], k=args.k)            # compile/warmup
+        t0 = time.perf_counter()
+        n = 0
+        for b in batches:
+            svc.complete(b, k=args.k)
+            n += len(b)
+        dt = time.perf_counter() - t0
+        print(f"{kind:9s} build {build_s:6.1f}s  "
+              f"{idx.stats.bytes_per_string:7.1f} B/string  "
+              f"{dt / n * 1e6:8.1f} us/completion  "
+              f"{n / dt:8.0f} q/s")
+
+    # show a few suggestions
+    idx = CompletionIndex.build(ds.strings, ds.scores, make_rules(ds.rules),
+                                kind="et", cache_k=16)
+    for q in queries[:5]:
+        out = idx.complete([q], k=3)[0]
+        print(f"  {q!r} -> {[s for _, s in out]}")
+
+
+if __name__ == "__main__":
+    main()

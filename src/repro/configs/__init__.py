@@ -1,0 +1,4 @@
+from repro.configs.base import (ArchSpec, ShapeCell, all_archs, get_arch,
+                                REGISTRY)
+
+__all__ = ["ArchSpec", "ShapeCell", "all_archs", "get_arch", "REGISTRY"]

@@ -1,0 +1,49 @@
+"""The paper's own workloads as serving archs: autocomplete-{dblp,usps,sprot}.
+
+The dry-run lowers the *sharded* completion serve step (DESIGN 2.5) with
+synthetic trie arrays sized from the real datasets' statistics (Table 1);
+benchmarks build the actual tries from repro.data.strings generators.
+"""
+from dataclasses import dataclass
+
+from repro.configs.base import ArchSpec, ShapeCell, register
+from repro.optim import OptimizerConfig
+
+
+@dataclass(frozen=True)
+class AutocompleteConfig:
+    name: str
+    n_strings: int
+    n_rules: int
+    avg_len: int
+    index_kind: str = "et"
+    cache_k: int = 16
+
+
+def _shapes(n_strings, n_rules, avg_len, n_shards=16):
+    # per-shard trie sizing: nodes ~ strings/shard * distinct-suffix factor
+    nodes = max(int(n_strings / n_shards * avg_len * 0.4), 1024)
+    return {
+        "serve_1k": ShapeCell("serve_1k", "serve", {
+            "batch": 1024, "query_len": 32, "k": 10,
+            "nodes_per_shard": nodes, "edges_per_shard": nodes,
+            "rule_nodes": n_rules * 8, "rules": n_rules, "cache_k": 16}),
+    }
+
+
+def _make(name, n_strings, n_rules, avg_len):
+    cfg = AutocompleteConfig(name, n_strings, n_rules, avg_len)
+    return register(ArchSpec(
+        arch_id=f"autocomplete-{name}", family="autocomplete",
+        source="this paper (CS.IR 2016), Table 1",
+        make_config=lambda: cfg,
+        make_smoke_config=lambda: AutocompleteConfig(
+            name + "-smoke", 500, 24, avg_len),
+        shapes=_shapes(n_strings, n_rules, avg_len),
+        optimizer=OptimizerConfig(name="sgd"),
+        notes="construction is offline (Alg.1/3/5); serve step is lowered"))
+
+
+DBLP = _make("dblp", 24_810, 368, 60)
+USPS = _make("usps", 1_000_000, 341, 25)
+SPROT = _make("sprot", 1_000_000, 1_000, 20)

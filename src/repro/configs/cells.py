@@ -1,0 +1,511 @@
+"""Cell builder: (arch x shape x mesh) -> jit-lowerable step function +
+ShapeDtypeStruct inputs (with shardings). This is the single entry point
+used by launch/dryrun.py, benchmarks/roofline.py and the smoke tests.
+
+No device allocation happens here: parameter/optimizer/batch shapes come
+from jax.eval_shape.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchSpec, ShapeCell
+from repro.distributed import sharding as sh
+from repro.models import gnn as gnn_m
+from repro.models import recsys as rec_m
+from repro.models import transformer as tf
+from repro.optim import OptimizerConfig, apply_updates, init_optimizer
+
+
+@dataclass
+class CellBuild:
+    step_fn: Callable
+    args: tuple
+    donate: tuple
+    model_flops: float
+    desc: str
+
+
+def _shaped(shapes_tree, axes_tree, mesh):
+    """ShapeDtypeStructs with shardings; any dim that does not divide its
+    mapped mesh axes falls back to replicated (reduced smoke configs, odd
+    head counts, etc. — full configs divide by construction)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(s, spec):
+        parts = []
+        for dim, entry in zip(s.shape, tuple(spec) + (None,) * s.ndim):
+            if entry is None:
+                parts.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= axis_sizes[a]
+            parts.append(entry if dim % n == 0 else None)
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, P(*parts)))
+
+    specs = jax.tree.map(lambda ax: sh.spec_for(ax, mesh), axes_tree,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(one, shapes_tree, specs)
+
+
+def _sds(shape, dtype, axes, mesh):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=sh.sharding_for(axes, mesh))
+
+
+def _fix_batch(axes_tree, mesh, batch: int):
+    """Replace the 'batch' logical axis by None when the global batch does
+    not divide the dp axes (e.g. long_500k / retrieval_cand with batch=1 —
+    the sequence replicates and model parallelism does the work)."""
+    if batch % max(sh.dp_size(mesh), 1) == 0:
+        return axes_tree
+    return jax.tree.map(
+        lambda ax: tuple(None if a == "batch" else a for a in ax),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def optimizer_axes(opt_cfg: OptimizerConfig, param_axes, param_shapes):
+    if opt_cfg.name in ("adamw",):
+        return {"m": param_axes, "v": param_axes, "step": ()}
+    if opt_cfg.name == "sgd":
+        return {"m": param_axes, "step": ()}
+    if opt_cfg.name == "adafactor":
+        from repro.optim.optimizers import _is_factored
+
+        def vr_ax(ax, s):
+            return ax[:-1] if _is_factored(s.shape, opt_cfg) else ax
+
+        def vc_ax(ax, s):
+            return (ax[:-2] + ax[-1:]) if _is_factored(s.shape, opt_cfg) \
+                else (None,)
+
+        is_ax = lambda x: isinstance(x, tuple)
+        vr = jax.tree.map(vr_ax, param_axes, param_shapes, is_leaf=is_ax)
+        vc = jax.tree.map(vc_ax, param_axes, param_shapes, is_leaf=is_ax)
+        return {"vr": vr, "vc": vc, "step": ()}
+    raise ValueError(opt_cfg.name)
+
+
+def make_train_step(loss_fn, model_cfg, opt_cfg, param_axes=None):
+    """param_axes: logical-axes tree — gradients are constrained to the
+    parameter sharding, forcing a reduce-scatter over the fsdp axis instead
+    of an all-reduce that would leave grads replicated (ZeRO-2 semantics;
+    the difference is 58 GB/device for arctic-480b, §Perf).
+
+    opt_cfg.accum_steps > 1 runs microbatched gradient accumulation (scan
+    over micro-batches, grads accumulated in param dtype): activation peak
+    scales 1/accum — the standard fit-it-in-HBM knob at 480B scale."""
+    accum = max(opt_cfg.accum_steps, 1)
+
+    def constrain_grads(grads):
+        if param_axes is not None and sh.current_mesh() is not None:
+            shardings = sh.tree_shardings(param_axes)
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, shardings)
+        return grads
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, model_cfg)
+            grads = constrain_grads(grads)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (l, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb, model_cfg)
+                g = constrain_grads(g)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype),
+                                   acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            gsum, (ls, ms) = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = ls.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        params, opt_state, om = apply_updates(opt_cfg, params, grads,
+                                              opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def _shapes_and_axes(init, cfg):
+    """(ShapeDtypeStruct params tree, logical-axes tree) with NO allocation:
+    init runs under eval_shape; the axes tree (concrete python tuples) is
+    captured on the side."""
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    def capture():
+        p, a = init(key, cfg)
+        out["axes"] = a
+        return p
+
+    p_shapes = jax.eval_shape(capture)
+    return p_shapes, out["axes"]
+
+
+def _train_shapes(spec, cfg, init, loss_fn, batch_shapes, batch_axes, mesh):
+    p_shapes, p_axes = _shapes_and_axes(init, cfg)
+    opt_shapes = jax.eval_shape(
+        lambda: init_optimizer(spec.optimizer, p_shapes))
+    o_axes = optimizer_axes(spec.optimizer, p_axes, p_shapes)
+    args = (
+        _shaped(p_shapes, p_axes, mesh),
+        _shaped(opt_shapes, o_axes, mesh),
+        _shaped(batch_shapes, batch_axes, mesh),
+    )
+    step = make_train_step(loss_fn, cfg, spec.optimizer, param_axes=p_axes)
+    return step, args
+
+
+# -- LM ---------------------------------------------------------------------
+
+
+def _lm_init(key, cfg):
+    return tf.init_lm(key, cfg)
+
+
+def _serve_param_axes(p_shapes, p_axes, mesh, budget_bytes=8 << 30):
+    """§Perf (decode hillclimb): FSDP weight sharding is the wrong trade at
+    serve time — it re-gathers every layer's weights for every decoded
+    token (3.4 GB/device/token for qwen decode_32k). When the TP-resident
+    copy fits the per-device budget, strip the 'fsdp' axis so weights stay
+    resident; a 480B arctic keeps FSDP (cannot fit) and pays the gathers."""
+    n_model = max(sh.model_size(mesh), 1)
+    total = sum(s.size * s.dtype.itemsize
+                for s in jax.tree.leaves(p_shapes))
+    if total / n_model > budget_bytes:
+        return p_axes
+    return jax.tree.map(
+        lambda ax: tuple(None if a == "fsdp" else a for a in ax),
+        p_axes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _build_lm(spec: ArchSpec, cell: ShapeCell, mesh, cfg) -> CellBuild:
+    B, S = cell.params["batch"], cell.params["seq"]
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        batch_shapes = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+        }
+        batch_axes = _fix_batch(
+            {"tokens": ("batch", None), "targets": ("batch", None),
+             "mask": ("batch", None)}, mesh, B)
+        step, args = _train_shapes(spec, cfg, _lm_init, tf.loss_fn,
+                                   batch_shapes, batch_axes, mesh)
+        return CellBuild(step, args, (0, 1), 6.0 * n_active * B * S,
+                         f"train {B}x{S}")
+    if cell.kind == "prefill":
+        p_shapes, p_axes = _shapes_and_axes(_lm_init, cfg)
+        p_axes = _serve_param_axes(p_shapes, p_axes, mesh)
+        toks = _sds((B, S), jnp.int32,
+                    _fix_batch({"t": ("batch", None)}, mesh, B)["t"], mesh)
+
+        def step(params, tokens):
+            return tf.prefill(params, tokens, cfg, max_len=S)
+
+        return CellBuild(step, (_shaped(p_shapes, p_axes, mesh), toks), (),
+                         2.0 * n_active * B * S, f"prefill {B}x{S}")
+    if cell.kind == "decode":
+        p_shapes, p_axes = _shapes_and_axes(_lm_init, cfg)
+        p_axes = _serve_param_axes(p_shapes, p_axes, mesh)
+        cache_shapes = jax.eval_shape(
+            lambda: tf.init_cache(cfg, B, S))
+        cache_shapes["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        c_axes = _fix_batch(
+            tf.cache_axes("k_scale" in cache_shapes) | {"pos": ()}, mesh, B)
+        toks = _sds((B,), jnp.int32,
+                    _fix_batch({"t": ("batch",)}, mesh, B)["t"], mesh)
+
+        def step(params, cache, tokens):
+            return tf.decode_step(params, cache, tokens, cfg)
+
+        return CellBuild(
+            step,
+            (_shaped(p_shapes, p_axes, mesh),
+             _shaped(cache_shapes, c_axes, mesh), toks),
+            (1,), 2.0 * n_active * B, f"decode B={B} ctx={S}")
+    raise ValueError(cell.kind)
+
+
+# -- GNN ----------------------------------------------------------------------
+
+
+def _gnn_init(key, cfg):
+    return gnn_m.init_gin(key, cfg)
+
+
+def _gnn_cfg_for_cell(spec: ArchSpec, cell: ShapeCell, smoke=False):
+    base = spec.make_smoke_config() if smoke else spec.make_config()
+    p = cell.params
+    return gnn_m.GINConfig(
+        name=base.name, n_layers=base.n_layers, d_hidden=base.d_hidden,
+        d_feat=p["d_feat"], n_classes=p["n_classes"],
+        learnable_eps=base.learnable_eps,
+        graph_level=(cell.name == "molecule"),
+        partitioned_edges=base.partitioned_edges)
+
+
+def _build_gnn(spec: ArchSpec, cell: ShapeCell, mesh, cfg) -> CellBuild:
+    p = cell.params
+    d, h, L_ = p["d_feat"], cfg.d_hidden, cfg.n_layers
+    if cell.name == "molecule":
+        G, Nn, Ne = p["batch"], p["n_nodes"], p["n_edges"]
+        batch_shapes = {
+            "feats": jax.ShapeDtypeStruct((G, Nn, d), jnp.float32),
+            "src": jax.ShapeDtypeStruct((G, Ne), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((G, Ne), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((G,), jnp.int32),
+        }
+        ba = _fix_batch(
+            {"feats": ("batch", None, None), "src": ("batch", None),
+             "dst": ("batch", None), "labels": ("batch",)}, mesh, G)
+        step, args = _train_shapes(spec, cfg, _gnn_init,
+                                   gnn_m.loss_batched_graphs,
+                                   batch_shapes, ba, mesh)
+        flops = 2.0 * G * (Ne * h + Nn * (d * h + h * h) * 1) * L_ * 3
+        return CellBuild(step, args, (0, 1), flops, f"molecule G={G}")
+
+    if cell.name == "minibatch_lg":
+        seeds = p["batch_nodes"]
+        f1, f2 = p["fanout"]
+        n_pad = seeds * (1 + f1 + f1 * f2)
+        e_pad = seeds * (f1 + f1 * f2)
+        N, E = n_pad, e_pad
+    else:
+        N, E = p["n_nodes"], p["n_edges"]
+    E += (-E) % mesh.size  # edge list tiles evenly over the mesh (-1 pad)
+    N += (-N) % mesh.size  # node dim sharded for the per-node MLPs
+    batch_shapes = {
+        "feats": jax.ShapeDtypeStruct((N, d), jnp.float32),
+        "src": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((N,), jnp.int32),
+        "label_mask": jax.ShapeDtypeStruct((N,), jnp.bool_),
+    }
+    ba = {"feats": (None, None), "src": ("edges",), "dst": ("edges",),
+          "labels": (None,), "label_mask": (None,)}
+    step, args = _train_shapes(spec, cfg, _gnn_init,
+                               gnn_m.loss_full_graph,
+                               batch_shapes, ba, mesh)
+    mm = d * h + (L_ - 1) * h * h + L_ * h * h
+    flops = 2.0 * 3 * (N * mm + L_ * E * h)
+    return CellBuild(step, args, (0, 1), flops, f"gnn N={N} E={E}")
+
+
+# -- RecSys -------------------------------------------------------------------
+
+
+_REC_FNS = {
+    "dlrm-rm2": (rec_m.init_dlrm, rec_m.dlrm_loss, rec_m.dlrm_forward,
+                 rec_m.dlrm_user_embedding, "tables"),
+    "din": (rec_m.init_din, rec_m.din_loss, rec_m.din_forward,
+            lambda p, b, c: rec_m.din_user_embedding(p, b, c)[0], "items"),
+    "sasrec": (rec_m.init_sasrec, rec_m.sasrec_loss,
+               lambda p, b, c: rec_m.sasrec_user_embedding(p, b, c),
+               rec_m.sasrec_user_embedding, "items"),
+    "mind": (rec_m.init_mind, rec_m.mind_loss,
+             lambda p, b, c: rec_m.mind_user_embedding(p, b, c),
+             rec_m.mind_user_embedding, "items"),
+}
+
+
+def _recsys_batch(arch_id: str, cfg, B: int, mesh, with_label=True):
+    i32, f32 = jnp.int32, jnp.float32
+    if arch_id == "dlrm-rm2":
+        shapes = {"dense": jax.ShapeDtypeStruct((B, cfg.n_dense), f32),
+                  "sparse": jax.ShapeDtypeStruct((B, cfg.n_sparse), i32)}
+        axes = {"dense": ("batch", None), "sparse": ("batch", None)}
+    elif arch_id == "din":
+        shapes = {"hist": jax.ShapeDtypeStruct((B, cfg.seq_len), i32),
+                  "target": jax.ShapeDtypeStruct((B,), i32)}
+        axes = {"hist": ("batch", None), "target": ("batch",)}
+    elif arch_id == "sasrec":
+        shapes = {"hist": jax.ShapeDtypeStruct((B, cfg.seq_len), i32),
+                  "pos": jax.ShapeDtypeStruct((B, cfg.seq_len), i32),
+                  "neg": jax.ShapeDtypeStruct((B, cfg.seq_len), i32)}
+        axes = {"hist": ("batch", None), "pos": ("batch", None),
+                "neg": ("batch", None)}
+    elif arch_id == "mind":
+        shapes = {"hist": jax.ShapeDtypeStruct((B, cfg.seq_len), i32),
+                  "target": jax.ShapeDtypeStruct((B,), i32),
+                  "neg": jax.ShapeDtypeStruct((B, 8), i32)}
+        axes = {"hist": ("batch", None), "target": ("batch",),
+                "neg": ("batch", None)}
+    else:
+        raise ValueError(arch_id)
+    if with_label:
+        shapes["label"] = jax.ShapeDtypeStruct((B,), f32)
+        axes["label"] = ("batch",)
+    return shapes, _fix_batch(axes, mesh, B)
+
+
+def _rec_flops(arch_id, cfg, B):
+    if arch_id == "dlrm-rm2":
+        mlps = sum(a * b for a, b in zip((cfg.n_dense,) + cfg.bot_mlp[:-1],
+                                         cfg.bot_mlp))
+        n_inter = (cfg.n_sparse + 1)
+        top_in = n_inter * (n_inter - 1) // 2 + cfg.bot_mlp[-1]
+        mlps += sum(a * b for a, b in zip((top_in,) + cfg.top_mlp[:-1],
+                                          cfg.top_mlp))
+        inter = n_inter * n_inter * cfg.d_embed
+        return 2.0 * B * (mlps + inter)
+    if arch_id == "din":
+        d = cfg.d_embed
+        attn = cfg.seq_len * (4 * d * cfg.attn_mlp[0]
+                              + cfg.attn_mlp[0] * cfg.attn_mlp[1])
+        out = 3 * d * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1]
+        return 2.0 * B * (attn + out)
+    if arch_id == "sasrec":
+        d, T = cfg.d_embed, cfg.seq_len
+        per_block = T * (4 * d * d) + 2 * T * T * d + T * 2 * d * d
+        return 2.0 * B * cfg.n_blocks * per_block
+    if arch_id == "mind":
+        d, T, K = cfg.d_embed, cfg.seq_len, cfg.n_interests
+        return 2.0 * B * (T * d * d + cfg.capsule_iters * 2 * T * K * d)
+    raise ValueError(arch_id)
+
+
+def _build_recsys(spec: ArchSpec, cell: ShapeCell, mesh, cfg) -> CellBuild:
+    init, loss, fwd, user_fn, table_name = _REC_FNS[spec.arch_id]
+    B = cell.params["batch"]
+    p_shapes, p_axes = _shapes_and_axes(init, cfg)
+    flops = _rec_flops(spec.arch_id, cfg, B)
+
+    if cell.kind == "train":
+        bs, ba = _recsys_batch(spec.arch_id, cfg, B, mesh)
+        step, args = _train_shapes(spec, cfg, init, loss, bs, ba, mesh)
+        return CellBuild(step, args, (0, 1), 3 * flops, f"train B={B}")
+    if cell.kind == "serve":
+        bs, ba = _recsys_batch(spec.arch_id, cfg, B, mesh, with_label=False)
+
+        def step(params, batch):
+            return fwd(params, batch, cfg)
+
+        return CellBuild(step, (_shaped(p_shapes, p_axes, mesh),
+                                _shaped(bs, ba, mesh)), (),
+                         flops, f"serve B={B}")
+    if cell.kind == "retrieval":
+        C = cell.params["n_candidates"]
+        bs, ba = _recsys_batch(spec.arch_id, cfg, B, mesh, with_label=False)
+
+        def step(params, batch):
+            u = user_fn(params, batch, cfg)
+            cand = params[table_name]
+            if cand.ndim == 3:          # stacked dlrm tables: table 0
+                cand = cand[0]
+            cand = cand[:C]
+            return rec_m.retrieval_topk(u, cand, k=100)
+
+        return CellBuild(step, (_shaped(p_shapes, p_axes, mesh),
+                                _shaped(bs, ba, mesh)), (),
+                         flops + 2.0 * B * C * cfg.d_embed,
+                         f"retrieval B={B} C={C}")
+    raise ValueError(cell.kind)
+
+
+# -- autocomplete (the paper's own serving workload) -------------------------
+
+
+def _build_autocomplete(spec: ArchSpec, cell: ShapeCell, mesh, cfg) -> CellBuild:
+    """Dry-run spec for the sharded completion index: synthetic trie arrays
+    of the configured size, queries sharded over dp."""
+    from repro.core import engine as eng
+    from repro.core.distributed import sharded_complete
+
+    p = cell.params
+    n_model = sh.model_size(mesh)
+    B, Lq, k = p["batch"], p["query_len"], p["k"]
+    n = p["nodes_per_shard"]
+    e = p["edges_per_shard"]
+    i32 = jnp.int32
+
+    def shard_arr(shape, dtype=i32):
+        return _sds((n_model,) + shape, dtype, ("rows",) + (None,) * len(shape),
+                    mesh)
+
+    K = max(p.get("cache_k", 0), 1)
+    trie = eng.DeviceTrie(
+        depth=shard_arr((n,)), max_score=shard_arr((n,)),
+        leaf_score=shard_arr((n,)), leaf_sid=shard_arr((n,)),
+        syn_mask=shard_arr((n,), jnp.bool_), tout=shard_arr((n,)),
+        first_child=shard_arr((n + 1,)), edge_char=shard_arr((e,)),
+        edge_child=shard_arr((e,)),
+        s_first_child=shard_arr((n + 1,)),
+        s_edge_char=shard_arr((max(e // 8, 1),)),
+        s_edge_child=shard_arr((max(e // 8, 1),)),
+        emit_ptr=shard_arr((n + 1,)), emit_node=shard_arr((e + n,)),
+        emit_score=shard_arr((e + n,)),
+        emit_is_leaf=shard_arr((e + n,), jnp.bool_),
+        syn_ptr=shard_arr((n + 1,)), syn_tgt=shard_arr((max(e // 8, 1),)),
+        link_anchor=shard_arr((max(e // 4, 1),)),
+        link_rule=shard_arr((max(e // 4, 1),)),
+        link_target=shard_arr((max(e // 4, 1),)),
+        r_first_child=shard_arr((p["rule_nodes"] + 1,)),
+        r_edge_char=shard_arr((p["rule_nodes"],)),
+        r_edge_child=shard_arr((p["rule_nodes"],)),
+        r_term_ptr=shard_arr((p["rule_nodes"] + 1,)),
+        r_term_rule=shard_arr((p["rules"],)),
+        r_rule_len=shard_arr((p["rules"],)),
+        topk_score=shard_arr((n, K)), topk_sid=shard_arr((n, K)),
+    )
+    ecfg = eng.EngineConfig(
+        frontier=16, gens=32, expand=8, max_steps=64,
+        rule_matches=2, max_lhs_len=12, max_terms_per_node=2, teleports=2,
+        use_cache=p.get("cache_k", 0) > 0, cache_k=p.get("cache_k", 0))
+    qs = _sds((B, Lq), i32, ("batch", None), mesh)
+    qlens = _sds((B,), i32, ("batch",), mesh)
+
+    def step(trie, qs, qlens):
+        return sharded_complete(trie, ecfg, qs, qlens, k, mesh=mesh,
+                                sid_stride=10**7,
+                                data_axes=sh.dp_axes(mesh))
+
+    # locus DP gathers + beam steps: count gather/compare ops as "flops"
+    flops = B * (Lq * ecfg.frontier * 64 + ecfg.max_steps * ecfg.expand * 8)
+    return CellBuild(step, (trie, qs, qlens), (),
+                     flops, f"autocomplete B={B} L={Lq}")
+
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh,
+               smoke: bool = False) -> CellBuild:
+    cell = spec.shapes[shape_name]
+    if cell.skip:
+        raise ValueError(f"cell {spec.arch_id}/{shape_name} is skipped: "
+                         f"{cell.skip}")
+    if spec.family == "lm":
+        import dataclasses
+        cfg = spec.make_smoke_config() if smoke else spec.make_config()
+        cfg = dataclasses.replace(cfg, tp_heads=sh.model_size(mesh))
+        return _build_lm(spec, cell, mesh, cfg)
+    if spec.family == "gnn":
+        cfg = _gnn_cfg_for_cell(spec, cell, smoke)
+        return _build_gnn(spec, cell, mesh, cfg)
+    if spec.family == "recsys":
+        cfg = spec.make_smoke_config() if smoke else spec.make_config()
+        return _build_recsys(spec, cell, mesh, cfg)
+    if spec.family == "autocomplete":
+        cfg = spec.make_smoke_config() if smoke else spec.make_config()
+        return _build_autocomplete(spec, cell, mesh, cfg)
+    raise ValueError(spec.family)

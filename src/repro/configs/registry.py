@@ -1,0 +1,13 @@
+"""Import every architecture so base.REGISTRY is populated."""
+from repro.configs import (arctic_480b, autocomplete, din, dlrm_rm2, gin_tu,  # noqa: F401
+                           granite_moe_1b_a400m, h2o_danube_1_8b, mind,
+                           mistral_nemo_12b, qwen2_5_14b, sasrec)
+
+from repro.configs.base import REGISTRY, all_archs, get_arch  # noqa: F401
+
+ASSIGNED = [
+    "granite-moe-1b-a400m", "arctic-480b", "mistral-nemo-12b",
+    "h2o-danube-1.8b", "qwen2.5-14b", "gin-tu",
+    "mind", "sasrec", "din", "dlrm-rm2",
+]
+BONUS = ["autocomplete-dblp", "autocomplete-usps", "autocomplete-sprot"]

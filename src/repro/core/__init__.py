@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — synonym-aware top-k string completion."""
+
+from repro.core.api import BuildStats, CompletionIndex
+from repro.core.engine import DeviceTrie, EngineConfig
+from repro.core.oracle import OracleIndex
+from repro.core.trie_build import SynonymRule, make_rules
+
+__all__ = [
+    "BuildStats",
+    "CompletionIndex",
+    "DeviceTrie",
+    "EngineConfig",
+    "OracleIndex",
+    "SynonymRule",
+    "make_rules",
+]

@@ -1,0 +1,448 @@
+"""Device-side top-k completion engine (pure jnp over array tries).
+
+The paper's best-first heap search (Alg. 2 / Alg. 4) is re-cast for TPU as:
+
+  phase 1 — *locus DP*: a fixed-width frontier sweep over query positions.
+      reach[pos] = set of trie nodes reachable by consuming p[:pos] under
+      some rewriting.  Transitions: literal char step (dict + synonym-branch
+      children), synonym teleports (ET/HT expanded rules), and rule steps
+      through the link store (TT/HT unexpanded rules).  All fixed shapes.
+
+  phase 2 — *top-k*: either
+      (a) beam generators: each locus becomes a lazy generator over its
+          score-sorted emission list; every step pops the best P emissions
+          across all generators (lax.top_k) and re-arms them.  This is the
+          paper's priority queue, vectorized P-at-a-time, with the same
+          admissible bound (max descendant score).  Exactness is tracked:
+          if the width-bounded pools ever dropped a candidate better than
+          the k-th result, the query is flagged for a host-side retry with
+          doubled widths.
+      (b) cached top-K (beyond-paper, cf. Li et al. [9]): gather the
+          materialized per-node top-K lists of the locus antichain and merge.
+          O(1) lookups, no while_loop; exact for k <= K.
+
+Everything here lowers under jit/vmap/shard_map with ShapeDtypeStruct
+inputs, which is what the multi-pod dry-run exercises.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT_MAX = np.int32(2**31 - 1)
+NEG_ONE = np.int32(-1)
+
+
+class DeviceTrie(NamedTuple):
+    # dict-trie node arrays
+    depth: jax.Array        # int32[N]
+    max_score: jax.Array    # int32[N]
+    leaf_score: jax.Array   # int32[N]
+    leaf_sid: jax.Array     # int32[N]
+    syn_mask: jax.Array     # bool[N]
+    tout: jax.Array         # int32[N]
+    # dict child CSR
+    first_child: jax.Array  # int32[N+1]
+    edge_char: jax.Array    # int32[E]
+    edge_child: jax.Array   # int32[E]
+    # synonym child CSR
+    s_first_child: jax.Array
+    s_edge_char: jax.Array
+    s_edge_child: jax.Array
+    # emissions
+    emit_ptr: jax.Array
+    emit_node: jax.Array
+    emit_score: jax.Array
+    emit_is_leaf: jax.Array
+    # teleports
+    syn_ptr: jax.Array
+    syn_tgt: jax.Array
+    # link store
+    link_anchor: jax.Array
+    link_rule: jax.Array
+    link_target: jax.Array
+    # rule trie
+    r_first_child: jax.Array
+    r_edge_char: jax.Array
+    r_edge_child: jax.Array
+    r_term_ptr: jax.Array
+    r_term_rule: jax.Array
+    r_rule_len: jax.Array
+    # materialized per-node top-K (dummy (1,1) when disabled)
+    topk_score: jax.Array
+    topk_sid: jax.Array
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static engine shape parameters (hashable; part of the jit key)."""
+
+    frontier: int = 32          # F: locus DP width
+    gens: int = 48              # W: generator pool width (beam phase)
+    expand: int = 8             # P: emissions popped per beam step
+    max_steps: int = 256        # beam step cap
+    rule_matches: int = 0       # M: max lhs matches per query position
+    max_lhs_len: int = 0        # rule-trie walk depth
+    max_terms_per_node: int = 1
+    teleports: int = 0          # Ts: max teleport targets per node
+    use_cache: bool = False     # phase-2 via materialized top-K
+    cache_k: int = 0
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def _iters_for(n: int) -> int:
+    return max(1, int(math.ceil(math.log2(max(n, 1) + 1))))
+
+
+def _lower_bound(arr: jax.Array, lo, hi, x, iters: int):
+    """First index in [lo, hi) with arr[idx] >= x (vectorized, fixed iters)."""
+    size = max(int(arr.shape[0]), 1)
+    for _ in range(iters):
+        cont = lo < hi
+        mid = (lo + hi) >> 1
+        v = arr[jnp.clip(mid, 0, size - 1)]
+        go_right = v < x
+        lo = jnp.where(cont & go_right, mid + 1, lo)
+        hi = jnp.where(cont & ~go_right, mid, hi)
+    return lo
+
+
+def _csr_child_lookup(ptr, chars, children, nodes, ch, iters: int):
+    """children[nodes] labelled ch via binary search in each CSR row; -1 if
+    absent. nodes may contain -1 entries (propagated)."""
+    if int(chars.shape[0]) == 0:
+        return jnp.full(jnp.broadcast_shapes(nodes.shape, jnp.shape(ch)),
+                        NEG_ONE, jnp.int32)
+    valid = nodes >= 0
+    n = jnp.where(valid, nodes, 0)
+    lo = ptr[n]
+    hi = ptr[n + 1]
+    pos = _lower_bound(chars, lo, hi, ch, iters)
+    size = max(int(chars.shape[0]), 1)
+    found = (pos < hi) & (chars[jnp.clip(pos, 0, size - 1)] == ch) & valid & (ch >= 0)
+    return jnp.where(found, children[jnp.clip(pos, 0, size - 1)], NEG_ONE)
+
+
+def _dedup_pad(vec: jax.Array, width: int):
+    """Unique ids of vec (-1 = empty), first `width` kept (ascending id order).
+
+    Returns (out[width] int32 with -1 pad, n_dropped int32).
+
+    §Perf iteration: one sort + O(n) scatter compaction (rank = running
+    count of kept) instead of the original sort-mask-sort — on TPU the
+    second bitonic sort was the locus DP's hottest op."""
+    big = jnp.where(vec < 0, INT_MAX, vec)
+    s = jnp.sort(big)
+    idx = jnp.arange(s.shape[0], dtype=jnp.int32)
+    keep = (idx == 0) | (s != jnp.roll(s, 1))
+    keep &= s != INT_MAX
+    rank = jnp.cumsum(keep) - 1                       # position among kept
+    n_uniq = (rank[-1] + 1).astype(jnp.int32)
+    dst = jnp.where(keep & (rank < width), rank, width)  # width = drop slot
+    out = jnp.full((width + 1,), NEG_ONE, jnp.int32)
+    out = out.at[dst].set(s, mode="drop")
+    out = jnp.where(out == INT_MAX, NEG_ONE, out)[:width]
+    dropped = jnp.maximum(n_uniq - width, 0)
+    return out, dropped
+
+
+# ---------------------------------------------------------------------------
+# phase 1: locus DP
+# ---------------------------------------------------------------------------
+
+
+def _match_table(t: DeviceTrie, cfg: EngineConfig, q: jax.Array):
+    """All full-lhs rule matches per query position.
+
+    Returns (rule[L, M], end[L, M]) with -1 padding; end = pos + len(lhs).
+    """
+    L = q.shape[0]
+    M = cfg.rule_matches
+    if M == 0:
+        z = jnp.full((L, 1), NEG_ONE, jnp.int32)
+        return z, z
+    iters = _iters_for(int(t.r_edge_char.shape[0]))
+    qx = jnp.concatenate([q, jnp.full((cfg.max_lhs_len,), NEG_ONE, jnp.int32)])
+
+    def at_pos(i):
+        rules = jnp.full((M,), NEG_ONE, jnp.int32)
+        ends = jnp.full((M,), NEG_ONE, jnp.int32)
+        node = jnp.int32(0)
+        cnt = jnp.int32(0)
+        for j in range(cfg.max_lhs_len):
+            c = jax.lax.dynamic_index_in_dim(qx, i + j, keepdims=False)
+            node = _csr_child_lookup(
+                t.r_first_child, t.r_edge_char, t.r_edge_child,
+                node[None], c[None], iters)[0]
+            ok = node >= 0
+            nn = jnp.where(ok, node, 0)
+            t_lo = t.r_term_ptr[nn]
+            t_hi = t.r_term_ptr[nn + 1]
+            for j2 in range(cfg.max_terms_per_node):
+                has = ok & (t_lo + j2 < t_hi) & (cnt < M)
+                rid = t.r_term_rule[jnp.clip(t_lo + j2, 0, max(int(t.r_term_rule.shape[0]), 1) - 1)]
+                slot = jnp.clip(cnt, 0, M - 1)
+                rules = jnp.where(has, rules.at[slot].set(rid), rules)
+                ends = jnp.where(has, ends.at[slot].set(i + j + 1), ends)
+                cnt = jnp.where(has, cnt + 1, cnt)
+        return rules, ends
+
+    return jax.vmap(at_pos)(jnp.arange(L, dtype=jnp.int32))
+
+
+def _teleport_expand(t: DeviceTrie, cfg: EngineConfig, row: jax.Array):
+    """row [F] -> row plus teleport targets, dedup'd back to [F]."""
+    if cfg.teleports == 0:
+        return row, jnp.int32(0)
+    F = row.shape[0]
+    valid = row >= 0
+    n = jnp.where(valid, row, 0)
+    lo = t.syn_ptr[n]
+    hi = t.syn_ptr[n + 1]
+    size = max(int(t.syn_tgt.shape[0]), 1)
+    offs = jnp.arange(cfg.teleports, dtype=jnp.int32)
+    idx = lo[:, None] + offs[None, :]
+    ok = (idx < hi[:, None]) & valid[:, None]
+    tgt = jnp.where(ok, t.syn_tgt[jnp.clip(idx, 0, size - 1)], NEG_ONE)
+    merged = jnp.concatenate([row, tgt.reshape(-1)])
+    return _dedup_pad(merged, F)
+
+
+def _link_lookup(t: DeviceTrie, anchors: jax.Array, rid: jax.Array):
+    """Link-store search: (anchor, rule) -> target or -1. anchors [F]."""
+    n_link = int(t.link_anchor.shape[0])
+    if n_link == 0:
+        return jnp.full(anchors.shape, NEG_ONE, jnp.int32)
+    iters = _iters_for(n_link)
+    valid = anchors >= 0
+    a = jnp.where(valid, anchors, 0)
+    zero = jnp.zeros_like(a)
+    full = jnp.full_like(a, n_link)
+    lo = _lower_bound(t.link_anchor, zero, full, a, iters)
+    hi = _lower_bound(t.link_anchor, zero, full, a + 1, iters)
+    pos = _lower_bound(t.link_rule, lo, hi, rid, iters)
+    found = (pos < hi) & (t.link_rule[jnp.clip(pos, 0, n_link - 1)] == rid) & valid
+    return jnp.where(found, t.link_target[jnp.clip(pos, 0, n_link - 1)], NEG_ONE)
+
+
+def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array):
+    """Locus set after consuming the whole query under all rewritings.
+
+    q: int32[L] (-1 padded), qlen: int32 scalar.
+    Returns (loci[F] dict-node ids, -1 padded; overflow count int32).
+    """
+    L = int(q.shape[0])
+    F = cfg.frontier
+    d_iters = _iters_for(int(t.edge_char.shape[0]))
+    s_iters = _iters_for(int(t.s_edge_char.shape[0]))
+    has_syn_edges = int(t.s_edge_child.shape[0]) > 0
+    M = cfg.rule_matches
+
+    mrule, mend = _match_table(t, cfg, q)
+
+    buf = jnp.full((L + 1, F), NEG_ONE, jnp.int32)
+    buf = buf.at[0, 0].set(0)
+    overflow = jnp.int32(0)
+
+    def step(i, carry):
+        buf, overflow = carry
+        row = jax.lax.dynamic_slice(buf, (i, 0), (1, F))[0]
+        row, drop = _teleport_expand(t, cfg, row)
+        overflow += drop
+        c = jax.lax.dynamic_index_in_dim(q, i, keepdims=False)
+
+        # literal char step: dict children + synonym-branch children
+        nd = _csr_child_lookup(t.first_child, t.edge_char, t.edge_child,
+                               row, c, d_iters)
+        parts = [nd]
+        if has_syn_edges:
+            ns = _csr_child_lookup(t.s_first_child, t.s_edge_char,
+                                   t.s_edge_child, row, c, s_iters)
+            parts.append(ns)
+        nxt_row = jax.lax.dynamic_slice(buf, (i + 1, 0), (1, F))[0]
+        merged, drop = _dedup_pad(jnp.concatenate([nxt_row] + parts), F)
+        overflow += drop
+        buf = jax.lax.dynamic_update_slice(buf, merged[None], (i + 1, 0))
+
+        # rule steps through the link store (anchors must be dict nodes)
+        if M > 0:
+            anchor_ok = row >= 0
+            anchor_ok &= ~t.syn_mask[jnp.where(row >= 0, row, 0)]
+            anchors = jnp.where(anchor_ok, row, NEG_ONE)
+            for m in range(M):
+                rid = mrule[i, m]
+                end = mend[i, m]
+                tgt = _link_lookup(t, anchors, rid)
+                tgt = jnp.where((rid >= 0), tgt, NEG_ONE)
+                j = jnp.clip(jnp.where(end >= 0, end, 0), 0, L)
+                dst = jax.lax.dynamic_slice(buf, (j, 0), (1, F))[0]
+                merged, drop = _dedup_pad(jnp.concatenate([dst, tgt]), F)
+                any_tgt = jnp.any(tgt >= 0)
+                merged = jnp.where(any_tgt, merged, dst)
+                overflow += jnp.where(any_tgt, drop, 0)
+                buf = jax.lax.dynamic_update_slice(buf, merged[None], (j, 0))
+        return buf, overflow
+
+    buf, overflow = jax.lax.fori_loop(0, L, step, (buf, overflow))
+
+    row = jax.lax.dynamic_slice(buf, (jnp.clip(qlen, 0, L), 0), (1, F))[0]
+    row, drop = _teleport_expand(t, cfg, row)
+    overflow += drop
+    # strict semantics: drop mid-variant (synonym) loci
+    is_syn = t.syn_mask[jnp.where(row >= 0, row, 0)]
+    row = jnp.where((row >= 0) & ~is_syn, row, NEG_ONE)
+    row, _ = _dedup_pad(row, F)
+    # antichain reduction via preorder intervals: drop descendants
+    tin = jnp.where(row >= 0, row, NEG_ONE)
+    to = t.tout[jnp.where(row >= 0, row, 0)]
+    covered = (
+        (tin[None, :] <= tin[:, None]) & (tin[:, None] < to[None, :])
+        & (jnp.arange(F)[None, :] != jnp.arange(F)[:, None])
+        & (row[None, :] >= 0) & (row[:, None] >= 0)
+    ).any(axis=1)
+    # ties: identical ids already removed by dedup; strict ancestor covers
+    row = jnp.where(covered, NEG_ONE, row)
+    return row, overflow
+
+
+# ---------------------------------------------------------------------------
+# phase 2a: beam top-k (paper-faithful priority search, vectorized)
+# ---------------------------------------------------------------------------
+
+
+def beam_topk(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
+    """Top-k leaves under the locus antichain.
+
+    Returns (scores[k], sids[k], exact bool). scores are -1 padded.
+    """
+    W, P = cfg.gens, cfg.expand
+    F = loci.shape[0]
+    if int(t.emit_node.shape[0]) == 0:  # degenerate empty dictionary
+        return (jnp.full((k,), NEG_ONE, jnp.int32),
+                jnp.full((k,), NEG_ONE, jnp.int32), jnp.bool_(True))
+    e_size = max(int(t.emit_node.shape[0]), 1)
+
+    def emit_bound(nodes, cursors):
+        valid = nodes >= 0
+        n = jnp.where(valid, nodes, 0)
+        e = t.emit_ptr[n] + cursors
+        ok = valid & (e < t.emit_ptr[n + 1])
+        score = t.emit_score[jnp.clip(e, 0, e_size - 1)]
+        return jnp.where(ok, score, NEG_ONE)
+
+    # generator pool seeded with loci
+    gn = jnp.full((W,), NEG_ONE, jnp.int32)
+    gc = jnp.zeros((W,), jnp.int32)
+    gn = jax.lax.dynamic_update_slice(gn, loci, (0,))
+    gb = emit_bound(gn, gc)
+    gn = jnp.where(gb >= 0, gn, NEG_ONE)
+
+    ls = jnp.full((k,), NEG_ONE, jnp.int32)   # leaf scores desc
+    li = jnp.full((k,), NEG_ONE, jnp.int32)   # leaf sids
+    dropped_max = NEG_ONE
+    steps = jnp.int32(0)
+
+    def cond(state):
+        gn, gc, gb, ls, li, dropped_max, steps = state
+        best = jnp.max(gb)
+        kth = ls[k - 1]
+        return (best >= 0) & (kth < best) & (steps < cfg.max_steps)
+
+    def body(state):
+        gn, gc, gb, ls, li, dropped_max, steps = state
+        topb, topi = jax.lax.top_k(gb, P)
+        sel_valid = topb >= 0
+        sel_n = jnp.where(sel_valid, gn[topi], 0)
+        e = t.emit_ptr[sel_n] + gc[topi]
+        e = jnp.clip(e, 0, e_size - 1)
+        em_node = t.emit_node[e]
+        em_score = t.emit_score[e]
+        em_leaf = t.emit_is_leaf[e]
+
+        # leaves -> result buffer
+        leaf_ok = sel_valid & em_leaf
+        new_ls = jnp.where(leaf_ok, em_score, NEG_ONE)
+        new_li = jnp.where(leaf_ok, t.leaf_sid[jnp.where(leaf_ok, em_node, 0)],
+                           NEG_ONE)
+        cat_s = jnp.concatenate([ls, new_ls])
+        cat_i = jnp.concatenate([li, new_li])
+        top_s, idx = jax.lax.top_k(cat_s, k)
+        ls2, li2 = top_s, cat_i[idx]
+
+        # internal emissions -> new generators
+        int_ok = sel_valid & ~em_leaf
+        new_n = jnp.where(int_ok, em_node, NEG_ONE)
+        new_c = jnp.zeros((P,), jnp.int32)
+        new_b = emit_bound(new_n, new_c)
+        new_n = jnp.where(new_b >= 0, new_n, NEG_ONE)
+
+        # advance selected generators
+        gc2 = gc.at[topi].add(jnp.where(sel_valid, 1, 0))
+        gb2 = emit_bound(gn, gc2)
+        gn2 = jnp.where(gb2 >= 0, gn, NEG_ONE)
+
+        # merge pools, keep top-W by bound
+        pool_n = jnp.concatenate([gn2, new_n])
+        pool_c = jnp.concatenate([gc2, new_c])
+        pool_b = jnp.concatenate([gb2, new_b])
+        keep_b, keep_i = jax.lax.top_k(pool_b, W)
+        drop_mask = jnp.ones((W + P,), bool).at[keep_i].set(False)
+        drop_best = jnp.max(jnp.where(drop_mask, pool_b, NEG_ONE))
+        dropped_max2 = jnp.maximum(dropped_max, drop_best)
+        return (pool_n[keep_i], pool_c[keep_i], keep_b, ls2, li2,
+                dropped_max2, steps + 1)
+
+    state = (gn, gc, gb, ls, li, dropped_max, steps)
+    gn, gc, gb, ls, li, dropped_max, steps = jax.lax.while_loop(cond, body, state)
+    finished = ~((jnp.max(gb) >= 0) & (ls[k - 1] < jnp.max(gb)))
+    exact = (ls[k - 1] >= dropped_max) & finished
+    return ls, li, exact
+
+
+# ---------------------------------------------------------------------------
+# phase 2b: cached top-k (beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+def cached_topk(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
+    assert cfg.use_cache and k <= cfg.cache_k, "cache disabled or k too large"
+    valid = loci >= 0
+    n = jnp.where(valid, loci, 0)
+    sc = jnp.where(valid[:, None], t.topk_score[n], NEG_ONE)
+    si = jnp.where(valid[:, None], t.topk_sid[n], NEG_ONE)
+    flat_s = sc.reshape(-1)
+    flat_i = si.reshape(-1)
+    top_s, idx = jax.lax.top_k(flat_s, k)
+    return top_s, flat_i[idx], jnp.bool_(True)
+
+
+# ---------------------------------------------------------------------------
+# public single-query / batched entry points
+# ---------------------------------------------------------------------------
+
+
+def complete_one(t: DeviceTrie, cfg: EngineConfig, q: jax.Array,
+                 qlen: jax.Array, k: int):
+    loci, overflow = locus_dp(t, cfg, q, qlen)
+    if cfg.use_cache and k <= cfg.cache_k:
+        scores, sids, exact = cached_topk(t, cfg, loci, k)
+    else:
+        scores, sids, exact = beam_topk(t, cfg, loci, k)
+    exact &= overflow == 0
+    return scores, sids, exact
+
+
+def complete_batch(t: DeviceTrie, cfg: EngineConfig, qs: jax.Array,
+                   qlens: jax.Array, k: int):
+    """qs: int32[B, L]; qlens: int32[B] -> (scores[B,k], sids[B,k], exact[B])."""
+    return jax.vmap(lambda q, ql: complete_one(t, cfg, q, ql, k))(qs, qlens)

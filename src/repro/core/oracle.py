@@ -1,0 +1,99 @@
+"""Pure-Python oracle for Problem 1 (top-k completion with synonyms).
+
+Deliberately naive and independent of the array-trie engine: a dict-of-dicts
+trie plus a (pos, node) DP over all rule rewritings of the query.  Used as
+the ground truth in unit and hypothesis property tests.
+
+Semantics implemented (exactly the paper's Problem 1):
+  a dictionary string s matches query p iff some rewriting p' of p is a
+  prefix of s, where a rewriting replaces zero or more non-overlapping
+  occurrences of rule lhs in the *original* p by the rule's rhs (generated
+  text never participates in a later application).
+"""
+
+from __future__ import annotations
+
+from repro.core.trie_build import SynonymRule
+
+
+class OracleIndex:
+    def __init__(self, strings, scores, rules: list[SynonymRule]):
+        self.strings = [s.encode() if isinstance(s, str) else bytes(s) for s in strings]
+        self.scores = [int(x) for x in scores]
+        # dedup, keep max score
+        best: dict[bytes, int] = {}
+        for s, r in zip(self.strings, self.scores):
+            best[s] = max(best.get(s, r), r)
+        self.items = sorted(best.items())
+        self.rules = rules
+        # trie: node = dict char -> node; terminals marked with key -1 -> idx
+        self.root: dict = {}
+        for idx, (s, _) in enumerate(self.items):
+            node = self.root
+            for c in s:
+                node = node.setdefault(c, {})
+            node[-1] = idx
+
+    # -- helpers -----------------------------------------------------------
+    def _walk(self, node: dict, seq: bytes):
+        for c in seq:
+            node = node.get(c)
+            if node is None:
+                return None
+        return node
+
+    def locus_nodes(self, p: bytes | str) -> list[dict]:
+        """All trie nodes reachable by consuming the full query under some
+        rewriting (the DP over (pos, id(node)))."""
+        if isinstance(p, str):
+            p = p.encode()
+        reach: list[list[dict]] = [[] for _ in range(len(p) + 1)]
+        seen: list[set[int]] = [set() for _ in range(len(p) + 1)]
+
+        def add(pos: int, node: dict):
+            if id(node) not in seen[pos]:
+                seen[pos].add(id(node))
+                reach[pos].append(node)
+
+        add(0, self.root)
+        for pos in range(len(p)):
+            for node in list(reach[pos]):
+                # literal character
+                nxt = node.get(p[pos])
+                if nxt is not None:
+                    add(pos + 1, nxt)
+                # full-lhs rule applications starting at pos
+                for rule in self.rules:
+                    L = len(rule.lhs)
+                    if p[pos : pos + L] == rule.lhs:
+                        tgt = self._walk(node, rule.rhs)
+                        if tgt is not None:
+                            add(pos + L, tgt)
+        return reach[len(p)]
+
+    def _leaves(self, node: dict, out: set[int]):
+        for c, child in node.items():
+            if c == -1:
+                out.add(child)
+            else:
+                self._leaves(child, out)
+
+    def complete(self, p: bytes | str, k: int) -> list[tuple[int, bytes]]:
+        """Top-k (score, string) pairs; score desc, string asc tiebreak."""
+        matched: set[int] = set()
+        for node in self.locus_nodes(p):
+            self._leaves(node, matched)
+        ranked = sorted(
+            ((self.items[i][1], self.items[i][0]) for i in matched),
+            key=lambda t: (-t[0], t[1]),
+        )
+        return ranked[:k]
+
+    def topk_scores(self, p: bytes | str, k: int) -> list[int]:
+        return [s for s, _ in self.complete(p, k)]
+
+    def matches(self, p: bytes | str) -> set[bytes]:
+        matched: set[int] = set()
+        for node in self.locus_nodes(p):
+            self._leaves(node, matched)
+        return {self.items[i][0] for i in matched}

@@ -1,0 +1,3 @@
+from repro.data import graph, lm, recsys, strings
+
+__all__ = ["graph", "lm", "recsys", "strings"]

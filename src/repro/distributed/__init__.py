@@ -1,0 +1,8 @@
+from repro.distributed import compression, fault_tolerance, sharding
+from repro.distributed.sharding import (constrain, current_mesh, dp_axes,
+                                        sharding_for, tree_shardings,
+                                        use_mesh)
+
+__all__ = ["compression", "fault_tolerance", "sharding", "constrain",
+           "current_mesh", "dp_axes", "sharding_for", "tree_shardings",
+           "use_mesh"]

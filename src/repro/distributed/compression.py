@@ -1,0 +1,104 @@
+"""Gradient compression: mixed reduce-scatter + int8 all-gather with error
+feedback.
+
+A ring fp32 all-reduce moves ~8 bytes/element of wire traffic. We split it:
+  1. fp32 reduce_scatter (psum_scatter): ~4 B/elem — the sum must stay
+     high-precision,
+  2. int8 all_gather of the reduced chunk (+ one fp32 scale per chunk):
+     ~1 B/elem instead of ~4.
+Net ~5 B/elem vs ~8 (a 1.6x cut on the dp gradient exchange; the broadcast
+phase alone is 4x smaller). The chunk owner keeps its quantization error
+and re-injects it next step (error feedback, Karimireddy et al. 2019), so
+convergence is preserved. At 1000+ nodes the dp all-reduce dominates
+collective bytes (§Roofline) — this is the knob that moves it.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce_mean(x, axis_name: str):
+    """Mean over `axis_name` via fp32 reduce_scatter + int8 all_gather.
+
+    x: fp32[M] with M divisible by the axis size (caller pads).
+    Returns (mean[M], local quantization error [M/n] scattered at this
+    rank's chunk — zero elsewhere is implied by the caller's layout).
+    """
+    n = jax.lax.psum(1, axis_name)
+    part = jax.lax.psum_scatter(x, axis_name, scatter_dimension=0,
+                                tiled=True) / n            # fp32, M/n
+    q, scale = quantize_int8(part)
+    err = part - dequantize_int8(q, scale)                  # EF residual
+    qg = jax.lax.all_gather(q, axis_name, tiled=True)       # int8, M
+    sg = jax.lax.all_gather(scale, axis_name)               # fp32, n
+    chunk = x.shape[0] // n
+    scales = jnp.repeat(sg, chunk)
+    out = qg.astype(jnp.float32) * scales
+    return out, err
+
+
+def compress_grads(grads, err_state, dp_axis: str = "data"):
+    """int8+EF dp-mean of a gradient pytree (shard_map island).
+
+    grads: replicated pytree; err_state: per-leaf fp32 residual of this
+    rank's chunk [ceil(size/n)]. Returns (new grads, new err_state).
+    """
+    mesh = sh.current_mesh()
+    if mesh is None or dp_axis not in mesh.axis_names:
+        return grads, err_state
+    n = dict(zip(mesh.axis_names, mesh.devices.shape))[dp_axis]
+
+    def one(g, e):
+        shape = g.shape
+        flat = g.astype(jnp.float32).reshape(-1)
+        pad = (-flat.shape[0]) % n
+        flat = jnp.pad(flat, (0, pad))
+
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P(None), P(None)),
+                 out_specs=(P(None), P(None)), check_vma=False)
+        def run(x, e_prev):
+            # error feedback: adding the (replicated) full residual on every
+            # rank shifts the *mean* by exactly e_prev
+            x = x + e_prev
+            out, err = compressed_allreduce_mean(x, dp_axis)
+            # store the residual replicated: gather every rank's chunk error
+            return out, jax.lax.all_gather(err, dp_axis, tiled=True)
+
+        out, err_full = run(flat, e)
+        return (out[: g.size].reshape(shape).astype(g.dtype), err_full)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def init_error_state(grads, dp_axis: str = "data"):
+    mesh = sh.current_mesh()
+    n = 1
+    if mesh is not None and dp_axis in mesh.axis_names:
+        n = dict(zip(mesh.axis_names, mesh.devices.shape))[dp_axis]
+
+    def zeros(g):
+        size = g.size
+        return jnp.zeros((size + (-size) % n,), jnp.float32)
+
+    return jax.tree.map(zeros, grads)

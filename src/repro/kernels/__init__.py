@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU) + jnp references.
+
+- trie_walk:       batched longest-prefix trie descent (paper hot loop)
+- topk_select:     fused small-k top-k with payload (merge points)
+- embedding_bag:   ragged gather + segment reduce (recsys substrate)
+- candidate_topk:  fused dot scoring + running top-k (retrieval / merges)
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,104 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, ragged->dense conversion, interpret-mode
+selection (interpret=True on CPU so the kernel bodies execute in Python;
+compiled lowering on TPU), and fall-through to the pure-jnp references when
+that is the right call (e.g. degenerate shapes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.candidate_topk import candidate_topk as _candidate_topk
+from repro.kernels.embedding_bag import embedding_bag_dense as _embedding_bag
+from repro.kernels.topk_select import topk_select as _topk_select
+from repro.kernels.trie_walk import trie_walk as _trie_walk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x, mult, fill):
+    b = x.shape[0]
+    pad = (-b) % mult
+    if pad == 0:
+        return x, b
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill), b
+
+
+def trie_walk(first_child, edge_char, edge_child, queries, qlens,
+              block_q: int = 128):
+    """Batched longest-prefix walk; see kernels/trie_walk.py."""
+    block_q = min(block_q, max(int(queries.shape[0]), 1))
+    q, b = _pad_rows(queries, block_q, -1)
+    ql, _ = _pad_rows(qlens, block_q, 0)
+    node, depth = _trie_walk(first_child, edge_char, edge_child, q, ql,
+                             block_q=block_q, interpret=_interpret())
+    return node[:b], depth[:b]
+
+
+def topk_select(scores, payload, k: int, block_b: int = 8):
+    """Fused top-k with payload; see kernels/topk_select.py."""
+    if k >= scores.shape[1]:
+        return ref.topk_select_ref(scores, payload, k)
+    block_b = min(block_b, max(int(scores.shape[0]), 1))
+    s, b = _pad_rows(scores, block_b, -(2**31 - 1))
+    p, _ = _pad_rows(payload, block_b, -1)
+    ts, tp = _topk_select(s, p, k, block_b=block_b, interpret=_interpret())
+    return ts[:b], tp[:b]
+
+
+def embedding_bag(table, indices, offsets, weights=None, mode: str = "sum",
+                  max_bag: int | None = None, block_b: int = 128):
+    """EmbeddingBag over a ragged (indices, offsets) batch.
+
+    indices int32[I] (-1 entries skipped), offsets int32[B+1].
+    Densifies to [B, max_bag] then runs the Pallas kernel.
+    """
+    idx = np.asarray(indices)
+    off = np.asarray(offsets)
+    bsz = len(off) - 1
+    lens = np.diff(off)
+    mb = int(max_bag if max_bag is not None else max(int(lens.max(initial=1)), 1))
+    dense = np.full((bsz, mb), -1, np.int32)
+    wdense = np.zeros((bsz, mb), np.asarray(table).dtype)
+    w = np.asarray(weights) if weights is not None else np.ones(len(idx), np.asarray(table).dtype)
+    for i in range(bsz):
+        n = min(int(lens[i]), mb)
+        dense[i, :n] = idx[off[i] : off[i] + n]
+        wdense[i, :n] = w[off[i] : off[i] + n]
+    return embedding_bag_dense(table, jnp.asarray(dense), jnp.asarray(wdense),
+                               mode=mode, block_b=block_b)
+
+
+def embedding_bag_dense(table, idx, weights, mode: str = "sum",
+                        block_b: int = 128):
+    """EmbeddingBag on an already-dense [B, MB] index matrix."""
+    block_b = min(block_b, max(int(idx.shape[0]), 1))
+    idx_p, b = _pad_rows(idx, block_b, -1)
+    w_p, _ = _pad_rows(weights, block_b, 0)
+    out = _embedding_bag(table, idx_p, w_p, mode=mode, block_b=block_b,
+                         interpret=_interpret())
+    return out[:b]
+
+
+def candidate_topk(query, candidates, k: int, block_c: int = 1024):
+    """Fused dot scoring + running top-k; see kernels/candidate_topk.py."""
+    block_c = min(block_c, max(int(candidates.shape[0]), 1))
+    c, n = _pad_rows(candidates, block_c, 0)
+    if n < c.shape[0]:
+        # padded rows score 0; shift scores by masking is handled by id cut
+        pass
+    s, i = _candidate_topk(query, c, k, block_c=block_c,
+                           interpret=_interpret())
+    # drop any padded-row winners (can only appear when k ~ C)
+    bad = i >= n
+    s = jnp.where(bad, jnp.float32(-3.0e38), s)
+    i = jnp.where(bad, -1, i)
+    return s, i

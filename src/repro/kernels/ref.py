@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function mirrors the corresponding kernel's contract exactly; kernel
+tests sweep shapes/dtypes and assert allclose / exact equality against
+these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def trie_walk_ref(first_child, edge_char, edge_child, queries, qlens):
+    """Longest-prefix walk of each query through the CSR trie.
+
+    queries: int32[B, L] (-1 padded); qlens: int32[B].
+    Returns (node[B] deepest locus, depth[B] matched chars).
+    """
+    E = edge_char.shape[0]
+
+    def one(q, ql):
+        def step(i, carry):
+            node, matched = carry
+            c = q[i]
+            lo = first_child[node]
+            hi = first_child[node + 1]
+            # linear scan is fine for a reference; binary search in kernel
+            idx = jnp.searchsorted(edge_char, c) if False else None
+            span = jnp.arange(E)
+            hit = (span >= lo) & (span < hi) & (edge_char == c)
+            found = hit.any() & (i < ql) & (c >= 0) & (matched == i)
+            child = jnp.where(hit, edge_child, 0).sum()
+            node = jnp.where(found, child, node)
+            matched = jnp.where(found, matched + 1, matched)
+            return node, matched
+
+        node, matched = jax.lax.fori_loop(0, q.shape[0], step,
+                                          (jnp.int32(0), jnp.int32(0)))
+        return node, matched
+
+    return jax.vmap(one)(queries, qlens)
+
+
+def topk_select_ref(scores, payload, k: int):
+    """Top-k by score with payload carried along.
+
+    scores: int32/float32[B, C]; payload: int32[B, C].
+    Returns (top_scores[B, k], top_payload[B, k]), score-descending,
+    ties broken toward lower candidate index.
+    """
+    top_s, idx = jax.lax.top_k(scores, k)
+    return top_s, jnp.take_along_axis(payload, idx, axis=1)
+
+
+def embedding_bag_ref(table, indices, offsets, weights=None, mode: str = "sum"):
+    """torch.nn.EmbeddingBag semantics on a ragged (indices, offsets) batch.
+
+    table: float[V, D]; indices: int32[I] (may contain -1 padding = skip);
+    offsets: int32[B+1] bag boundaries; weights: float[I] or None.
+    Returns float[B, D].
+    """
+    V, D = table.shape
+    I = indices.shape[0]
+    B = offsets.shape[0] - 1
+    valid = indices >= 0
+    rows = table[jnp.clip(indices, 0, V - 1)]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    rows = jnp.where(valid[:, None], rows, 0.0)
+    seg = jnp.searchsorted(offsets[1:], jnp.arange(I), side="right")
+    out = jax.ops.segment_sum(rows, seg, num_segments=B)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(valid.astype(table.dtype), seg, num_segments=B)
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out
+
+
+def candidate_topk_ref(query, candidates, k: int):
+    """Fused dot-product scoring + top-k over a candidate matrix.
+
+    query: float[D]; candidates: float[C, D].
+    Returns (scores[k], ids[k]) by score desc (ties -> lower id).
+    """
+    s = candidates @ query
+    top, idx = jax.lax.top_k(s, k)
+    return top, idx.astype(jnp.int32)

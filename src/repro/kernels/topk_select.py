@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused small-k top-k selection with payload.
+
+Used by the completion engine's merge points (beam leaf buffer, cached
+per-node top-K lists, cross-shard merges): candidates live in a VMEM tile
+and k rounds of (max, argmax, mask) extract the result without a full sort.
+For k << C this is cheaper than bitonic-sorting the whole tile and keeps
+everything in registers/VMEM.
+
+Tie behaviour matches jax.lax.top_k: equal scores resolve to the lower
+candidate index (argmax picks the first maximum).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -(2**31 - 1)
+
+
+def _kernel(s_ref, p_ref, os_ref, op_ref, *, k: int):
+    s = s_ref[...].astype(jnp.int32)
+    p = p_ref[...]
+    bq, c = s.shape
+    rows = jnp.arange(bq)
+    for j in range(k):
+        best = jnp.argmax(s, axis=1)
+        os_ref[:, j] = s[rows, best]
+        op_ref[:, j] = p[rows, best]
+        s = s.at[rows, best].set(_NEG)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "interpret"))
+def topk_select(scores, payload, k: int, *, block_b: int = 8,
+                interpret: bool = True):
+    """scores int32[B, C], payload int32[B, C] -> (top_s[B,k], top_p[B,k])."""
+    bsz, c = scores.shape
+    grid = (bsz // block_b,)
+    kernel = functools.partial(_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, k), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores, payload)

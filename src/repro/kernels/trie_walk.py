@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: batched longest-prefix trie walk.
+
+The hot inner loop of every completion lookup (paper Alg. 2/4 locus search).
+Queries are blocked into VMEM tiles of (BQ, L); the CSR tables
+(first_child / edge_char / edge_child) are VMEM-resident — the sharding
+story of the distributed index (§DESIGN 2.5) keeps per-shard sub-tries
+small enough for this. Each of the L steps performs a vectorized
+binary search over each query's current CSR row (fixed `iters` rounds,
+no data-dependent control flow).
+
+TPU adaptation notes: on a CPU/GPU this is pointer chasing; here it is a
+fixed-depth loop of vector gathers (dynamic VMEM loads), which the VPU
+executes without divergence. HBM-resident tables would instead stream CSR
+rows via double-buffered DMA; we keep the VMEM variant since per-shard
+tries are sized to fit (sharding handles growth).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(fc_ref, ec_ref, echild_ref, q_ref, qlen_ref, node_ref, depth_ref,
+            *, iters: int, seq_len: int):
+    fc = fc_ref[...]
+    ec = ec_ref[...]
+    echild = echild_ref[...]
+    q = q_ref[...]
+    qlen = qlen_ref[...]
+    bq = q.shape[0]
+    e = ec.shape[0]
+
+    def step(i, carry):
+        node, matched = carry
+        c = q[:, i]
+        lo = jnp.take(fc, node)
+        hi = jnp.take(fc, node + 1)
+        for _ in range(iters):  # branch-free binary search (lower bound)
+            cont = lo < hi
+            mid = (lo + hi) >> 1
+            v = jnp.take(ec, jnp.clip(mid, 0, e - 1))
+            go_right = v < c
+            lo = jnp.where(cont & go_right, mid + 1, lo)
+            hi = jnp.where(cont & ~go_right, mid, hi)
+        pos = jnp.clip(lo, 0, e - 1)
+        found = (lo < jnp.take(fc, node + 1)) & (jnp.take(ec, pos) == c)
+        active = (matched == i) & (i < qlen) & (c >= 0)
+        take = found & active
+        node = jnp.where(take, jnp.take(echild, pos), node)
+        matched = jnp.where(take, matched + 1, matched)
+        return node, matched
+
+    node0 = jnp.zeros((bq,), jnp.int32)
+    node, matched = jax.lax.fori_loop(0, seq_len, step, (node0, node0))
+    node_ref[...] = node
+    depth_ref[...] = matched
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def trie_walk(first_child, edge_char, edge_child, queries, qlens,
+              *, block_q: int = 128, interpret: bool = True):
+    """Deepest locus node + matched depth for each query.
+
+    queries: int32[B, L] (-1 padded), B divisible by block_q (wrapper in
+    ops.py pads). Returns (node[B], depth[B]).
+    """
+    bsz, seq_len = queries.shape
+    n1 = first_child.shape[0]
+    e = max(edge_char.shape[0], 1)
+    iters = max(1, (e).bit_length())
+    if edge_char.shape[0] == 0:
+        return jnp.zeros((bsz,), jnp.int32), jnp.zeros((bsz,), jnp.int32)
+    grid = (bsz // block_q,)
+    kernel = functools.partial(_kernel, iters=iters, seq_len=seq_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n1,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((block_q, seq_len), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(first_child, edge_char, edge_child, queries, qlens)

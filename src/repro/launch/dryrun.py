@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell: jit(step).lower(specs).compile()
+on the single-pod (16,16) mesh AND the 2-pod (2,16,16) mesh, record
+memory_analysis / cost_analysis / per-collective bytes to
+results/dryrun_<mesh>.json. Any failure here is a bug in the system.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+jnp_bf16 = jnp.bfloat16
+
+from repro.configs import all_archs, get_arch  # noqa: E402
+from repro.configs.cells import build_cell  # noqa: E402
+from repro.distributed import sharding as sh  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+(?:e\d+m\d+(?:fn)?)?|pred|bf16)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device HLO: sum output bytes of every collective op (tuple
+    outputs included; async start/done pairs counted once)."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group(2) == "-done":
+            continue
+        kind = m.group(1)
+        eq = line.find("=")
+        seg = line[eq + 1 : m.start()] if eq >= 0 else line[: m.start()]
+        total = 0
+        for sm in _SHAPE_RE.finditer(seg):
+            b = _DTYPE_BYTES.get(sm.group(1))
+            if b is None:
+                continue
+            n = 1
+            for d in sm.group(2).split(","):
+                if d:
+                    n *= int(d)
+            total += n * b
+        if total:
+            out[kind] = out.get(kind, 0.0) + total
+    return out
+
+
+def cpu_bf16_convert_bytes(hlo_text: str, args, mesh,
+                           min_bytes: int = 64 << 20) -> int:
+    """XLA *CPU* upcasts bf16 matmul operands to f32 (hoisted out of scans
+    when the operand is a loop-constant weight). These buffers do not exist
+    on TPU (native bf16 MXU). We detect them as f32 HLO buffers whose shape
+    equals the per-device shard shape of a bf16 input leaf, and report them
+    so the TPU-adjusted temp memory is visible (EXPERIMENTS.md §Dry-run)."""
+    import numpy as np
+
+    shapes = set()
+    for leaf in jax.tree.leaves(args):
+        if getattr(leaf, "dtype", None) != jnp_bf16:
+            continue
+        shard = leaf.sharding.shard_shape(leaf.shape) \
+            if leaf.sharding is not None else leaf.shape
+        if int(np.prod(shard)) * 4 >= min_bytes:
+            shapes.add(",".join(str(d) for d in shard))
+    total = 0
+    for s in shapes:
+        if re.search(rf"=\s*f32\[{re.escape(s)}\]", hlo_text):
+            n = 1
+            for d in s.split(","):
+                n *= int(d)
+            total += n * 4
+    return total
+
+
+def run_cell(spec, shape_name: str, mesh, smoke: bool = False) -> dict:
+    cell = spec.shapes[shape_name]
+    if cell.skip:
+        return {"arch": spec.arch_id, "shape": shape_name, "status": "SKIP",
+                "reason": cell.skip}
+    t0 = time.perf_counter()
+    with sh.use_mesh(mesh):
+        built = build_cell(spec, shape_name, mesh, smoke=smoke)
+        fn = jax.jit(built.step_fn, donate_argnums=built.donate)
+        lowered = fn.lower(*built.args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0] if ca else {}
+        hlo = compiled.as_text()
+        colls = collective_bytes(hlo)          # loop-UNAWARE (raw)
+        loop_aware = analyze_hlo(hlo)          # x while-loop trip counts
+        cvt = cpu_bf16_convert_bytes(hlo, built.args, mesh)
+    n_dev = mesh.size
+    return {
+        "arch": spec.arch_id,
+        "shape": shape_name,
+        "status": "OK",
+        "desc": built.desc,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": n_dev,
+        "seconds": round(time.perf_counter() - t0, 2),
+        "model_flops": built.model_flops,
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": colls,
+        "loop_aware": {
+            "dot_flops_per_device": loop_aware["dot_flops"],
+            "dot_bytes_per_device": loop_aware["dot_bytes"],
+            "collective_bytes_per_device": loop_aware["collective_bytes"],
+        },
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "cpu_bf16_convert_bytes": cvt,
+            "temp_bytes_tpu_adjusted": max(mem.temp_size_in_bytes - cvt, 0),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI sanity, not the deliverable)")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    archs = all_archs()
+    ids = list(archs) if (args.all or not args.arch) else [args.arch]
+    meshes = []
+    if args.both_meshes:
+        meshes = [False, True]
+    else:
+        meshes = [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        tag = "multipod" if multi_pod else "singlepod"
+        results = []
+        n_ok = n_skip = n_fail = 0
+        for aid in ids:
+            spec = archs[aid]
+            shapes = [args.shape] if args.shape else list(spec.shapes)
+            for s in shapes:
+                try:
+                    r = run_cell(spec, s, mesh, smoke=args.smoke)
+                except Exception as e:  # a failure IS a bug — surface it
+                    r = {"arch": aid, "shape": s, "status": "FAIL",
+                         "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                results.append(r)
+                st = r["status"]
+                n_ok += st == "OK"
+                n_skip += st == "SKIP"
+                n_fail += st == "FAIL"
+                msg = r.get("desc", r.get("reason", r.get("error", "")))
+                print(f"[{tag}] {aid:>24s} {s:<16s} {st:<5s} "
+                      f"{r.get('seconds', '')}s {msg}", flush=True)
+        path = os.path.join(args.out,
+                            f"dryrun_{tag}{'_smoke' if args.smoke else ''}.json")
+        with open(path, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[{tag}] OK={n_ok} SKIP={n_skip} FAIL={n_fail} -> {path}")
+        if n_fail:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

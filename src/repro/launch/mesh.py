@@ -1,0 +1,28 @@
+"""Production mesh definitions (DESIGN §6).
+
+Functions, not module-level constants: importing this module never touches
+jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for_devices(n: int, model: int | None = None):
+    """Small meshes for tests/examples on whatever devices exist."""
+    model = model or (2 if n % 2 == 0 and n > 1 else 1)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_chip_count(mesh) -> int:
+    return mesh.size

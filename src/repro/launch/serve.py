@@ -1,0 +1,107 @@
+"""Serving launcher.
+
+  python -m repro.launch.serve --arch autocomplete-usps --queries 1000
+  python -m repro.launch.serve --arch qwen2.5-14b --smoke   (LM decode)
+
+For autocomplete archs this is the paper's end-to-end system: build the
+index from the matching dataset generator, replay a workload, report
+latency/throughput (Fig. 7-style numbers).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import all_archs
+from repro.core import CompletionIndex, make_rules
+from repro.data.strings import DATASETS, make_workload
+from repro.serving import CompletionService, LMServer, Request
+
+
+def serve_autocomplete(spec, args):
+    name = spec.arch_id.split("-")[-1]
+    cfg = spec.make_config()
+    n = min(cfg.n_strings, args.n_strings)
+    ds = DATASETS[name](n=n, seed=0)
+    t0 = time.perf_counter()
+    idx = CompletionIndex.build(
+        ds.strings, ds.scores, make_rules(ds.rules), kind=args.index_kind,
+        cache_k=args.cache_k)
+    build_s = time.perf_counter() - t0
+    svc = CompletionService(idx)
+    queries = make_workload(ds, args.queries, seed=1)
+    # warmup + timed batches
+    svc.complete(queries[:32], k=10)
+    t0 = time.perf_counter()
+    bs = args.batch
+    results = []
+    for i in range(0, len(queries), bs):
+        results.extend(svc.complete(queries[i : i + bs], k=10))
+    dt = time.perf_counter() - t0
+    hit = sum(bool(r) for r in results) / max(len(results), 1)
+    out = {
+        "arch": spec.arch_id, "kind": args.index_kind,
+        "n_strings": idx.stats.n_strings,
+        "bytes_per_string": round(idx.stats.bytes_per_string, 1),
+        "build_seconds": round(build_s, 2),
+        "queries": len(results),
+        "us_per_completion": round(dt / max(len(results), 1) * 1e6, 1),
+        "hit_rate": round(hit, 3),
+    }
+    print(json.dumps(out))
+    return out
+
+
+def serve_lm(spec, args):
+    from repro.models import transformer as tf
+
+    cfg = spec.make_smoke_config()
+    params, _ = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    server = LMServer(params, cfg, n_slots=args.batch, max_len=96)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.queries):
+        server.scheduler.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, 8 + i % 8),
+            max_new_tokens=16))
+    done = server.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in done)
+    ttfts = [r.first_token_at - r.created for r in done]
+    out = {
+        "arch": spec.arch_id, "requests": len(done),
+        "tokens": toks, "tok_per_s": round(toks / dt, 1),
+        "mean_ttft_ms": round(float(np.mean(ttfts)) * 1e3, 1),
+    }
+    print(json.dumps(out))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--n-strings", type=int, default=100_000)
+    ap.add_argument("--index-kind", default="et",
+                    choices=["tt", "et", "ht", "plain"])
+    ap.add_argument("--cache-k", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    spec = all_archs()[args.arch]
+    if spec.family == "autocomplete":
+        serve_autocomplete(spec, args)
+    elif spec.family == "lm":
+        serve_lm(spec, args)
+    else:
+        raise SystemExit(f"no serve mode for family {spec.family}")
+
+
+if __name__ == "__main__":
+    main()

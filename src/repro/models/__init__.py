@@ -1,0 +1,3 @@
+from repro.models import gnn, layers, recsys, transformer
+
+__all__ = ["gnn", "layers", "recsys", "transformer"]

@@ -1,0 +1,222 @@
+"""GIN (Graph Isomorphism Network, arXiv:1810.00826) on segment-sum message
+passing — the JAX-native sparse path (no CSR SpMM in JAX; scatter-add over an
+edge index IS the kernel, per the assignment notes).
+
+Supports the four assigned shape regimes:
+  full_graph_sm / ogb_products : one big graph, node classification;
+                                 edges sharded over every mesh axis
+                                 (partial segment_sum + psum).
+  minibatch_lg                 : sampled subgraph (neighbor sampler in
+                                 repro.data.graph), loss on seed nodes.
+  molecule                     : dense batch of small graphs, sum readout.
+
+Adaptation note (DESIGN §2.4 spirit): GIN's BatchNorm is replaced by
+LayerNorm to stay functional/stateless; eps stays learnable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+
+@dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_feat: int = 64
+    d_hidden: int = 64
+    n_classes: int = 16
+    learnable_eps: bool = True
+    graph_level: bool = False     # molecule regime: per-graph readout
+    partitioned_edges: bool = False  # §Perf: edges pre-partitioned by dst
+                                     # shard -> aggregation needs NO psum
+                                     # (AG of h replaces AR of aggregates)
+
+
+def init_gin(key, cfg: GINConfig):
+    ks = jax.random.split(key, cfg.n_layers * 2 + 2)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        k1, k2 = ks[2 * i], ks[2 * i + 1]
+        layers.append({
+            "w1": jax.random.normal(k1, (d_in, cfg.d_hidden)) * (d_in ** -0.5),
+            "b1": jnp.zeros((cfg.d_hidden,)),
+            "w2": jax.random.normal(k2, (cfg.d_hidden, cfg.d_hidden))
+            * (cfg.d_hidden ** -0.5),
+            "b2": jnp.zeros((cfg.d_hidden,)),
+            "ln": jnp.ones((cfg.d_hidden,)),
+            "eps": jnp.zeros(()),
+        })
+        d_in = cfg.d_hidden
+    params = {
+        "layers": layers,
+        "head": jax.random.normal(ks[-1], (cfg.d_hidden, cfg.n_classes))
+        * (cfg.d_hidden ** -0.5),
+    }
+    axes = {
+        "layers": [
+            {"w1": (None, None), "b1": (None,), "w2": (None, None),
+             "b2": (None,), "ln": (None,), "eps": ()}
+            for _ in range(cfg.n_layers)
+        ],
+        "head": (None, None),
+    }
+    return params, axes
+
+
+def _aggregate(h, src, dst, n_nodes):
+    """sum-aggregate messages h[src] into dst; edges may be sharded over the
+    whole mesh (partial segment_sum + psum)."""
+    mesh = sh.current_mesh()
+    valid = (src >= 0) & (dst >= 0)
+    srcc = jnp.where(valid, src, 0)
+    dstc = jnp.where(valid, dst, 0)
+
+    if mesh is None or mesh.size == 1:
+        msg = h[srcc] * valid[:, None]
+        return jax.ops.segment_sum(msg, dstc, num_segments=n_nodes)
+
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(), P(axes), P(axes)),
+             out_specs=P(), check_vma=False)
+    def run(h_l, src_l, dst_l):
+        v = (src_l >= 0) & (dst_l >= 0)
+        msg = h_l[jnp.where(v, src_l, 0)] * v[:, None]
+        agg = jax.ops.segment_sum(msg, jnp.where(v, dst_l, 0),
+                                  num_segments=n_nodes)
+        for ax in axes:
+            agg = jax.lax.psum(agg, ax)
+        return agg
+
+    src = jnp.where(valid, src, -1)
+    dst = jnp.where(valid, dst, -1)
+    pad = (-src.shape[0]) % mesh.size
+    if pad:  # edge list must tile evenly over the whole mesh
+        src = jnp.pad(src, (0, pad), constant_values=-1)
+        dst = jnp.pad(dst, (0, pad), constant_values=-1)
+    return run(h, src, dst)
+
+
+def _aggregate_partitioned(h, src, dst, n_nodes):
+    """Locality-aware aggregation (§Perf hillclimb, DistDGL-style): the data
+    pipeline partitions edges so shard i's edges all have dst in node range
+    [i*n_local, (i+1)*n_local). segment_sum lands directly in the local node
+    shard — NO all-reduce; the only collective is the all_gather of h that
+    feeds the next layer's src gathers (half the bytes of the baseline AR,
+    and it shrinks further with src-locality-aware partitioners)."""
+    mesh = sh.current_mesh()
+    valid = (src >= 0) & (dst >= 0)
+    if mesh is None or mesh.size == 1:
+        msg = h[jnp.where(valid, src, 0)] * valid[:, None]
+        return jax.ops.segment_sum(msg, jnp.where(valid, dst, 0),
+                                   num_segments=n_nodes)
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    assert n_nodes % mesh.size == 0
+    n_local = n_nodes // mesh.size
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(), P(axes), P(axes)),
+             out_specs=P(axes, None), check_vma=False)
+    def run(h_l, src_l, dst_l):
+        rank = jnp.int32(0)
+        for ax in axes:
+            rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        base = rank * n_local
+        v = (src_l >= 0) & (dst_l >= 0)
+        loc = jnp.where(v, dst_l - base, 0)
+        v &= (loc >= 0) & (loc < n_local)
+        msg = h_l[jnp.where(v, src_l, 0)] * v[:, None]
+        return jax.ops.segment_sum(msg, jnp.where(v, loc, 0),
+                                   num_segments=n_local)
+
+    src = jnp.where(valid, src, -1)
+    dst = jnp.where(valid, dst, -1)
+    pad = (-src.shape[0]) % mesh.size
+    if pad:
+        src = jnp.pad(src, (0, pad), constant_values=-1)
+        dst = jnp.pad(dst, (0, pad), constant_values=-1)
+    return run(h, src, dst)
+
+
+def _layer(lp, h, agg, eps_on: bool):
+    x = (1.0 + lp["eps"]) * h + agg if eps_on else h + agg
+    x = x @ lp["w1"] + lp["b1"]
+    x = jax.nn.relu(x)
+    x = x @ lp["w2"] + lp["b2"]
+    # stateless LayerNorm in place of GIN's BatchNorm
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + 1e-5) * lp["ln"]
+    return jax.nn.relu(x)
+
+
+def _node_constrain(h):
+    """Shard the node dim across the whole mesh for the per-node MLPs so
+    saved activations scale 1/mesh; the aggregate step re-gathers."""
+    mesh = sh.current_mesh()
+    if mesh is not None and h.shape[0] % mesh.size == 0:
+        return sh.constrain(h, "nodes", None)
+    return h
+
+
+def forward_full_graph(params, feats, src, dst, cfg: GINConfig):
+    """feats [N, d_feat]; src/dst int32[E] (-1 padded). Node logits [N, C]."""
+    n = feats.shape[0]
+    h = feats
+    agg_fn = _aggregate_partitioned if cfg.partitioned_edges else _aggregate
+    for lp in params["layers"]:
+        agg = agg_fn(h, src, dst, n)
+        h = _layer(lp, _node_constrain(h), _node_constrain(agg),
+                   cfg.learnable_eps)
+        h = _node_constrain(h)
+    return h @ params["head"]
+
+
+def forward_batched_graphs(params, feats, src, dst, cfg: GINConfig):
+    """Dense small-graph batch: feats [G, Nn, d], src/dst [G, Ne] (-1 pad).
+    Returns graph logits [G, C] (sum readout)."""
+    def one(f, s, d):
+        h = f
+        nn = f.shape[0]
+        for lp in params["layers"]:
+            v = (s >= 0) & (d >= 0)
+            msg = h[jnp.where(v, s, 0)] * v[:, None]
+            agg = jax.ops.segment_sum(msg, jnp.where(v, d, 0), num_segments=nn)
+            h = _layer(lp, h, agg, cfg.learnable_eps)
+        return h.sum(axis=0)
+
+    pooled = jax.vmap(one)(feats, src, dst)
+    pooled = sh.constrain(pooled, "batch", None)
+    return pooled @ params["head"]
+
+
+def loss_full_graph(params, batch, cfg: GINConfig):
+    """batch: feats [N,d], src/dst [E], labels [N], label_mask [N]."""
+    logits = forward_full_graph(params, batch["feats"], batch["src"],
+                                batch["dst"], cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1)[:, 0]
+    m = batch["label_mask"]
+    loss = (nll * m).sum() / jnp.maximum(m.sum(), 1)
+    acc = ((logits.argmax(-1) == batch["labels"]) * m).sum() / jnp.maximum(m.sum(), 1)
+    return loss, {"acc": acc}
+
+
+def loss_batched_graphs(params, batch, cfg: GINConfig):
+    """batch: feats [G,Nn,d], src/dst [G,Ne], labels [G]."""
+    logits = forward_batched_graphs(params, batch["feats"], batch["src"],
+                                    batch["dst"], cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1)[:, 0]
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return nll.mean(), {"acc": acc}

@@ -1,0 +1,647 @@
+"""Shared NN layers (pure jnp, mesh-agnostic via logical sharding names).
+
+Includes the memory-critical pieces a real framework needs at scale:
+  - flash-style chunked attention (online softmax over KV blocks) so 32k+
+    prefill never materializes an [S, S] score matrix,
+  - sliding-window attention with *true* sub-quadratic compute (per query
+    block only window+block keys are sliced in),
+  - expert-parallel MoE as a shard_map island (tokens sharded over dp axes,
+    experts over `model`, capacity-bounded dispatch, psum combine),
+  - chunked cross-entropy (never materializes [B, S, V] logits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+# ---------------------------------------------------------------------------
+# init helpers: params and logical-axes trees share structure
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, axes, scale=0.02, dtype=jnp.float32):
+    w = jax.random.normal(key, shape, dtype) * scale
+    return w, axes
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float):
+    return theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, d_head]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + causal + optional sliding window), flash-style chunking
+# ---------------------------------------------------------------------------
+
+
+def _online_softmax_block(q, k, v, mask, m, l, acc, scale):
+    """One KV block of online-softmax attention.
+
+    q [B,N,bq,hd], k/v [B,N,bk,hd], mask [.., bq, bk] bool (True=keep)."""
+    s = jnp.einsum("bnqh,bnkh->bnqk", q, k).astype(jnp.float32) * scale
+    s = jnp.where(mask, s, -1e30)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bnqk,bnkh->bnqh", p.astype(v.dtype), v).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, *, causal=True, window: int | None = None,
+                    block_q: int = 512, block_kv: int = 512,
+                    q_offset: int = 0):
+    """Chunked attention. q [B,N,Sq,hd], k/v [B,N,Skv,hd] (N = query heads;
+    callers fold GQA groups into N by repeating KV).
+
+    q_offset: absolute position of q[0] relative to k[0] (prefill: 0 with
+    Sq == Skv; continuation chunks use > 0).
+    """
+    B, N, Sq, hd = q.shape
+    Skv = k.shape[2]
+    scale = 1.0 / np.sqrt(hd)
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    nq = (Sq + block_q - 1) // block_q
+    pad_q = nq * block_q - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+
+    if window is not None:
+        # sub-quadratic: per q block slice [lo, lo + window + block_q) keys
+        span = window + block_q
+        kp = jnp.pad(k, ((0, 0), (0, 0), (span, span), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (span, span), (0, 0)))
+
+        @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+        def q_block(i):
+            qb = jax.lax.dynamic_slice_in_dim(q, i * block_q, block_q, axis=2)
+            q_pos = q_offset + i * block_q + jnp.arange(block_q)
+            lo = q_offset + i * block_q + block_q - span  # in original coords
+            kb = jax.lax.dynamic_slice_in_dim(kp, lo + span, span, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vp, lo + span, span, axis=2)
+            k_pos = lo + jnp.arange(span)
+            mask = (k_pos[None, :] <= q_pos[:, None])
+            mask &= (k_pos[None, :] > q_pos[:, None] - window)
+            mask &= (k_pos[None, :] >= 0) & (k_pos[None, :] < Skv)
+            m = jnp.full((B, N, block_q), -1e30, jnp.float32)
+            l = jnp.zeros((B, N, block_q), jnp.float32)
+            acc = jnp.zeros((B, N, block_q, hd), jnp.float32)
+            m, l, acc = _online_softmax_block(qb, kb, vb, mask, m, l, acc, scale)
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+
+        out = jax.lax.map(q_block, jnp.arange(nq))
+        out = jnp.moveaxis(out, 0, 2).reshape(B, N, nq * block_q, hd)
+        return out[:, :, :Sq].astype(q.dtype)
+
+    nkv = (Skv + block_kv - 1) // block_kv
+    pad_kv = nkv * block_kv - Skv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+
+    def q_block(i):
+        qb = jax.lax.dynamic_slice_in_dim(q, i * block_q, block_q, axis=2)
+        q_pos = q_offset + i * block_q + jnp.arange(block_q)
+
+        @partial(jax.checkpoint,
+                 policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_block(carry, j):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, j * block_kv, block_kv, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * block_kv, block_kv, axis=2)
+            k_pos = j * block_kv + jnp.arange(block_kv)
+            mask = k_pos[None, :] < Skv
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            m, l, acc = _online_softmax_block(qb, kb, vb, mask, m, l, acc, scale)
+            return (m, l, acc), None
+
+        m = jnp.full((B, N, block_q), -1e30, jnp.float32)
+        l = jnp.zeros((B, N, block_q), jnp.float32)
+        acc = jnp.zeros((B, N, block_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m, l, acc),
+                                      jnp.arange(nkv))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(q_block, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 2).reshape(B, N, nq * block_q, hd)
+    return out[:, :, :Sq].astype(q.dtype)
+
+
+def head_layout(n_heads: int, n_kv: int, tp: int):
+    """Pad the query-head dim so it tiles evenly over a tp-way model axis.
+
+    KV heads are *logically replicated* (weights stay [KV]; activations are
+    repeated), and query heads are padded with inert slots whose output is
+    masked to zero — mathematically exact GQA(H, KV) at any tp (DESIGN §6).
+    Returns (Hp padded q-heads, head_mask bool[Hp]).
+    """
+    g = n_heads // n_kv
+    assert n_heads % n_kv == 0, "q heads must divide evenly into kv groups"
+    if tp <= 1:
+        return n_heads, np.ones(n_heads, bool)
+    if n_kv >= tp:
+        assert n_kv % tp == 0, (n_kv, tp)
+        r = 1
+    else:
+        assert tp % n_kv == 0, (n_kv, tp)
+        r = tp // n_kv
+    gp = -(-g // r)                    # q heads per replicated kv slot
+    hp = n_kv * r * gp
+    mask = np.zeros(hp, bool)
+    for j in range(n_kv * r):          # kv' slot j = copy (j % r) of kv j//r
+        c = j % r
+        gi = g // r + (1 if c < g % r else 0)
+        mask[j * gp : j * gp + gi] = True
+    assert int(mask.sum()) == n_heads
+    return hp, mask
+
+
+def init_attention(key, d_model, n_heads, n_kv, d_head, qkv_bias=False,
+                   tp: int = 1):
+    hp, _ = head_layout(n_heads, n_kv, tp)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": jax.random.normal(ks[0], (d_model, hp, d_head)) * 0.02,
+        "wk": jax.random.normal(ks[1], (d_model, n_kv, d_head)) * 0.02,
+        "wv": jax.random.normal(ks[2], (d_model, n_kv, d_head)) * 0.02,
+        "wo": jax.random.normal(ks[3], (hp, d_head, d_model)) * 0.02,
+    }
+    a = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", None, None),   # KV dim may not divide tp: replicate
+        "wv": ("fsdp", None, None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if qkv_bias:
+        p |= {"bq": jnp.zeros((hp, d_head)),
+              "bk": jnp.zeros((n_kv, d_head)),
+              "bv": jnp.zeros((n_kv, d_head))}
+        a |= {"bq": ("heads", None), "bk": (None, None), "bv": (None, None)}
+    return p, a
+
+
+def attention(p, x, *, n_heads, n_kv, rope_theta, window=None,
+              positions=None, cache=None, cache_pos=None, tp: int = 1):
+    """GQA attention. Train/prefill: x [B,S,D], cache None -> (out, (k, v)).
+    Decode: x [B,1,D] with cache (k,v) [B,KV,Sc,hd] -> (out, (k, v)).
+
+    Query heads use the tp-padded layout (head_layout); the inert padded
+    slots are masked out of wo, so this is exact GQA(H, KV) at any tp."""
+    B, S, D = x.shape
+    hp, hmask = head_layout(n_heads, n_kv, tp)
+    g = hp // n_kv
+    q = jnp.einsum("bsd,dnh->bnsh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bnsh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bnsh", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    q = sh.constrain(q, "batch", "heads", None, None)
+    k = sh.constrain(k, "batch", None, None, None)
+    v = sh.constrain(v, "batch", None, None, None)
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions[:, None, :], rope_theta)
+    k = apply_rope(k, positions[:, None, :], rope_theta)
+
+    if cache is None:
+        kk = sh.constrain(jnp.repeat(k, g, axis=1),
+                          "batch", "heads", None, None)
+        vv = sh.constrain(jnp.repeat(v, g, axis=1),
+                          "batch", "heads", None, None)
+        out = flash_attention(q, kk, vv, causal=True, window=window)
+        new_cache = (k, v)
+    else:
+        quantized = len(cache) == 4
+        if quantized:
+            ck, cv, ksc, vsc = cache   # int8 caches + fp32 scales [B,KV,Sc]
+            kq, ks_new = quantize_kv(k)
+            vq, vs_new = quantize_kv(v)
+        else:
+            ck, cv = cache             # [B, KV, Sc, hd]
+            ksc = vsc = None
+        B_, KV_, Sc, _ = ck.shape
+        pos = jnp.asarray(cache_pos)
+        mesh = sh.current_mesh()
+        if (mesh is not None and "model" in mesh.axis_names
+                and sh.model_size(mesh) > 1
+                and Sc % sh.model_size(mesh) == 0
+                and Sc >= sh.model_size(mesh)):
+            out, new_cache = _flash_decode_sharded(
+                q, (kq, ks_new) if quantized else k,
+                (vq, vs_new) if quantized else v,
+                ck, cv, pos, window, mesh, scales=(ksc, vsc))
+            out = sh.constrain(out, "batch", None, None, None)
+            if not hmask.all():
+                out = out * jnp.asarray(hmask, out.dtype)[None, :, None, None]
+            y = jnp.einsum("bnsh,nhd->bsd", out, p["wo"])
+            return sh.constrain(y, "batch", None, None), new_cache
+        slot = pos % Sc if window is not None else pos
+        if quantized:
+            k_store, v_store = kq, vq
+        else:
+            k_store, v_store = k, v
+        if pos.ndim == 0:
+            ck = _cache_set(ck, k_store, slot)
+            cv = _cache_set(cv, v_store, slot)
+            if quantized:
+                ksc = jax.lax.dynamic_update_slice(ksc, ks_new, (0, 0, slot))
+                vsc = jax.lax.dynamic_update_slice(vsc, vs_new, (0, 0, slot))
+        else:  # per-slot positions (continuous batching)
+            bi = jnp.arange(B_)
+            sl = jnp.clip(slot, 0, Sc - 1)
+            ck = ck.at[bi, :, sl, :].set(k_store[:, :, 0, :].astype(ck.dtype))
+            cv = cv.at[bi, :, sl, :].set(v_store[:, :, 0, :].astype(cv.dtype))
+            if quantized:
+                ksc = ksc.at[bi, :, sl].set(ks_new[:, :, 0])
+                vsc = vsc.at[bi, :, sl].set(vs_new[:, :, 0])
+        if quantized:
+            kk = jnp.repeat(dequantize_kv(ck, ksc, q.dtype), g, axis=1)
+            vv = jnp.repeat(dequantize_kv(cv, vsc, q.dtype), g, axis=1)
+        else:
+            kk = jnp.repeat(ck, g, axis=1)
+            vv = jnp.repeat(cv, g, axis=1)
+        kpos = jnp.arange(Sc)
+        posb = pos if pos.ndim else pos[None]           # [B] or [1]
+        slotb = slot if pos.ndim else slot[None]
+        if window is not None:
+            # ring buffer: valid entries are the last min(pos+1, Sc)
+            age = (slotb[:, None] - kpos[None, :]) % Sc
+            valid = age <= jnp.minimum(posb, Sc - 1)[:, None]
+        else:
+            valid = kpos[None, :] <= posb[:, None]      # [B or 1, Sc]
+        s = jnp.einsum("bnqh,bnkh->bnqk", q, kk).astype(jnp.float32)
+        s = s / np.sqrt(q.shape[-1])
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bnqk,bnkh->bnqh", w, vv)
+        new_cache = (ck, cv, ksc, vsc) if quantized else (ck, cv)
+
+    out = sh.constrain(out, "batch", "heads", None, None)
+    if not hmask.all():  # zero the inert padded head slots
+        out = out * jnp.asarray(hmask, out.dtype)[None, :, None, None]
+    y = jnp.einsum("bnsh,nhd->bsd", out, p["wo"])
+    return sh.constrain(y, "batch", None, None), new_cache
+
+
+def _cache_set(cache, kv, slot):
+    """cache [B,KV,Sc,hd]; kv [B,KV,1,hd]; write at dynamic slot."""
+    return jax.lax.dynamic_update_slice(
+        cache, kv.astype(cache.dtype), (0, 0, slot, 0))
+
+
+def quantize_kv(x):
+    """Per-(batch, head, position) int8 KV quantization (KIVI-flavoured;
+    §Perf decode hillclimb: halves resident cache bytes vs bf16; on TPU the
+    dequant fuses into the attention read). x [B,KV,S,hd] ->
+    (int8 [B,KV,S,hd], fp32 scale [B,KV,S])."""
+    scale = jnp.maximum(jnp.abs(x).max(axis=-1), 1e-8).astype(jnp.float32) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None].astype(x.dtype)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _flash_decode_sharded(q, k_new, v_new, ck, cv, pos, window, mesh,
+                          scales=(None, None)):
+    """Flash-decoding: KV cache sequence-sharded over `model`; each rank
+    attends its chunk, a pmax/psum online-softmax merge combines. The kv=8
+    head dim never needs to divide tp, and cache memory scales 1/tp.
+
+    Quantized mode: k_new/v_new are (int8 [B,KV,1,hd], fp32 scale [B,KV,1])
+    pairs and `scales` holds the fp32 cache scales [B,KV,Sc] (int8 KV cache,
+    §Perf). Returns (out, new_cache) where new_cache is (ck, cv) or
+    (ck, cv, ksc, vsc)."""
+    from jax.sharding import PartitionSpec as P
+
+    ksc, vsc = scales
+    quantized = ksc is not None
+    if quantized:
+        kq, ks_new = k_new
+        vq, vs_new = v_new
+    else:
+        kq, vq = k_new, v_new
+        ks_new = vs_new = jnp.zeros((q.shape[0], ck.shape[1], 1), jnp.float32)
+        ksc = vsc = jnp.zeros(ck.shape[:3], jnp.float32)
+
+    B, HP, _, hd = q.shape
+    KV, Sc = ck.shape[1], ck.shape[2]
+    g = HP // KV
+    n_model = sh.model_size(mesh)
+    chunk = Sc // n_model
+    dpa = sh.dp_axes(mesh)
+    b_spec = dpa if (dpa and B % sh.dp_size(mesh) == 0) else None
+    vec_pos = jnp.ndim(pos) > 0
+    pos_spec = P(b_spec) if vec_pos else P()
+    kv_spec = P(b_spec, None, "model", None)
+    sc_spec = P(b_spec, None, "model")
+    x_spec = P(b_spec, None, None, None)
+    sn_spec = P(b_spec, None, None)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(x_spec, x_spec, x_spec, kv_spec, kv_spec, pos_spec,
+                       sc_spec, sc_spec, sn_spec, sn_spec),
+             out_specs=(x_spec, kv_spec, kv_spec, sc_spec, sc_spec),
+             check_vma=False)
+    def run(q, kn, vn, ck, cv, pos, ksc, vsc, ksn, vsn):
+        b = q.shape[0]
+        base = jax.lax.axis_index("model") * chunk
+        posb = pos if vec_pos else pos[None]
+        slot = (posb % Sc) if window is not None else posb
+        loc = slot - base
+        ok = (loc >= 0) & (loc < chunk)
+        locc = jnp.clip(loc, 0, chunk - 1)
+        bi = jnp.arange(b)
+        up_k = jnp.where(ok[:, None, None], kn[:, :, 0, :].astype(ck.dtype),
+                         ck[bi, :, locc, :])
+        up_v = jnp.where(ok[:, None, None], vn[:, :, 0, :].astype(cv.dtype),
+                         cv[bi, :, locc, :])
+        ck = ck.at[bi, :, locc, :].set(up_k)
+        cv = cv.at[bi, :, locc, :].set(up_v)
+        if quantized:
+            ksc = ksc.at[bi, :, locc].set(
+                jnp.where(ok[:, None], ksn[:, :, 0], ksc[bi, :, locc]))
+            vsc = vsc.at[bi, :, locc].set(
+                jnp.where(ok[:, None], vsn[:, :, 0], vsc[bi, :, locc]))
+            kk = jnp.repeat(dequantize_kv(ck, ksc, q.dtype), g, axis=1)
+            vv = jnp.repeat(dequantize_kv(cv, vsc, q.dtype), g, axis=1)
+        else:
+            kk = jnp.repeat(ck, g, axis=1)
+            vv = jnp.repeat(cv, g, axis=1)
+        s = jnp.einsum("bnqh,bnkh->bnqk", q, kk).astype(jnp.float32)
+        s = s / np.sqrt(hd)
+        kpos = base + jnp.arange(chunk)
+        if window is not None:
+            age = (slot[:, None] - kpos[None, :]) % Sc
+            valid = age <= jnp.minimum(posb, Sc - 1)[:, None]
+        else:
+            valid = kpos[None, :] <= posb[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        m_l = s.max(axis=-1)                                  # [b, HP, 1]
+        p = jnp.exp(s - m_l[..., None])
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
+        l_l = p.sum(axis=-1)
+        acc_l = jnp.einsum("bnqk,bnkh->bnqh", p.astype(q.dtype),
+                           vv).astype(jnp.float32)
+        m = jax.lax.pmax(m_l, "model")
+        corr = jnp.exp(m_l - m)
+        l = jax.lax.psum(l_l * corr, "model")
+        acc = jax.lax.psum(acc_l * corr[..., None], "model")
+        out = (acc / jnp.maximum(l, 1e-30)[..., None])
+        return out.astype(q.dtype), ck, cv, ksc, vsc
+
+    out, ck, cv, ksc, vsc = run(q, kq, vq, ck, cv, pos, ksc, vsc,
+                                ks_new, vs_new)
+    if quantized:
+        return out, (ck, cv, ksc, vsc)
+    return out, (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) and MoE
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_gate": jax.random.normal(ks[0], (d_model, d_ff)) * 0.02,
+        "w_up": jax.random.normal(ks[1], (d_model, d_ff)) * 0.02,
+        "w_down": jax.random.normal(ks[2], (d_ff, d_model)) * 0.02,
+    }
+    a = {"w_gate": ("fsdp", "mlp"), "w_up": ("fsdp", "mlp"),
+         "w_down": ("mlp", "fsdp")}
+    return p, a
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = sh.constrain(h, "batch", None, "mlp")
+    return sh.constrain(h @ p["w_down"], "batch", None, None)
+
+
+def init_moe(key, d_model, d_ff, n_experts):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d_model, n_experts)) * 0.02,
+        "w_gate": jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * 0.02,
+        "w_up": jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * 0.02,
+        "w_down": jax.random.normal(ks[3], (n_experts, d_ff, d_model)) * 0.02,
+    }
+    a = {
+        "router": (None, None),
+        "w_gate": ("expert", "fsdp", None),
+        "w_up": ("expert", "fsdp", None),
+        "w_down": ("expert", "fsdp", None),
+    }
+    return p, a
+
+
+def _moe_local(p_local, x, *, top_k, n_experts, expert_offset, n_local,
+               capacity_factor=1.25, norm_topk=True, axis=None):
+    """Per-device MoE: x [T, D] local tokens, p_local holds n_local experts.
+
+    Token-choice top-k with per-expert capacity; combine is a psum over the
+    expert-parallel axis when `axis` is set.
+    """
+    T, D = x.shape
+    logits = (x @ p_local["router"]).astype(jnp.float32)      # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection (k rounds of argmax)
+    pr = probs
+    sel_idx, sel_p = [], []
+    for _ in range(top_k):
+        i = jnp.argmax(pr, axis=-1)
+        sel_idx.append(i)
+        sel_p.append(jnp.take_along_axis(pr, i[:, None], axis=1)[:, 0])
+        pr = pr.at[jnp.arange(T), i].set(-1.0)
+    sel_idx = jnp.stack(sel_idx, axis=1)                      # [T, k]
+    sel_p = jnp.stack(sel_p, axis=1)                          # [T, k]
+    if norm_topk:
+        sel_p = sel_p / jnp.maximum(sel_p.sum(axis=1, keepdims=True), 1e-9)
+
+    # per-LOCAL-expert chosen mask + gate
+    le = sel_idx - expert_offset                              # [T, k]
+    in_local = (le >= 0) & (le < n_local)
+    chosen = jnp.zeros((T, n_local), bool)
+    gate = jnp.zeros((T, n_local), jnp.float32)
+    for kk in range(top_k):
+        lek = jnp.clip(le[:, kk], 0, n_local - 1)
+        upd = in_local[:, kk]
+        chosen = chosen.at[jnp.arange(T), lek].max(upd)
+        gate = gate.at[jnp.arange(T), lek].add(
+            jnp.where(upd, sel_p[:, kk], 0.0))
+
+    capacity = max(int(T * top_k * capacity_factor / n_experts), 4)
+    pos = jnp.cumsum(chosen.astype(jnp.int32), axis=0) - 1    # [T, E_l]
+    slot_ok = chosen & (pos < capacity)
+    # token table [E_l, capacity]: invalid writes go out of bounds + drop
+    flat = jnp.where(slot_ok,
+                     jnp.arange(n_local)[None, :] * capacity + pos,
+                     n_local * capacity)
+    table = jnp.full((n_local * capacity,), -1, jnp.int32)
+    tok_ids = jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.int32)[:, None], (T, n_local))
+    table = table.at[flat.reshape(-1)].set(tok_ids.reshape(-1), mode="drop")
+    table = table.reshape(n_local, capacity)
+
+    tvalid = table >= 0
+    tsafe = jnp.clip(table, 0, T - 1)
+    xin = x[tsafe] * tvalid[..., None]                         # [E_l, C, D]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p_local["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xin, p_local["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p_local["w_down"])       # [E_l, C, D]
+
+    g = gate[tsafe, jnp.arange(n_local)[:, None]]              # [E_l, C]
+    y = y * (g * tvalid)[..., None]
+    out = jnp.zeros((T, D), y.dtype).at[tsafe.reshape(-1)].add(
+        y.reshape(-1, D) * tvalid.reshape(-1)[:, None])
+
+    # load-balance aux loss (global over the expert axis)
+    frac_tokens = jnp.zeros((n_experts,), jnp.float32).at[
+        jnp.clip(sel_idx.reshape(-1), 0, n_experts - 1)].add(1.0) / (T * top_k)
+    mean_prob = probs.mean(axis=0)
+    aux = n_experts * jnp.sum(frac_tokens * mean_prob)
+    if axis is not None:
+        out = jax.lax.psum(out, axis)
+        aux = jax.lax.pmean(aux, axis)
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn(p, x, *, n_experts, top_k, capacity_factor=1.25, norm_topk=True):
+    """x [B, S, D] -> (y [B, S, D], aux loss). Expert-parallel over `model`
+    when a mesh is active; single-device fallback otherwise."""
+    B, S, D = x.shape
+    mesh = sh.current_mesh()
+
+    if (mesh is None or "model" not in mesh.axis_names or mesh.size == 1
+            or n_experts % sh.model_size(mesh) != 0):
+        # no EP (single device, or expert count does not tile the model
+        # axis — e.g. reduced smoke configs): replicated expert compute
+        y, aux = _moe_local(p, x.reshape(B * S, D), top_k=top_k,
+                            n_experts=n_experts, expert_offset=0,
+                            n_local=n_experts,
+                            capacity_factor=capacity_factor,
+                            norm_topk=norm_topk)
+        return y.reshape(B, S, D), aux
+
+    n_model = sh.model_size(mesh)
+    n_local = max(n_experts // n_model, 1)
+    dp = sh.dp_axes(mesh)
+
+    pspec = {
+        "router": P(None, None),
+        "w_gate": P("model", None, None),
+        "w_up": P("model", None, None),
+        "w_down": P("model", None, None),
+    }
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(pspec, P(dp, None, None)),
+             out_specs=(P(dp, None, None), P()),
+             check_vma=False)
+    def run(p_l, x_l):
+        b, s, d = x_l.shape
+        off = jax.lax.axis_index("model") * n_local
+        y, aux = _moe_local(p_l, x_l.reshape(b * s, d), top_k=top_k,
+                            n_experts=n_experts, expert_offset=off,
+                            n_local=n_local, capacity_factor=capacity_factor,
+                            norm_topk=norm_topk, axis="model")
+        for ax in dp:
+            aux = jax.lax.pmean(aux, ax)
+        return y.reshape(b, s, d), aux
+
+    return run(p, x)
+
+
+# ---------------------------------------------------------------------------
+# embedding + chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(table, tokens):
+    out = jnp.take(table, tokens, axis=0)
+    return sh.constrain(out, "batch", None, None)
+
+
+def xent_loss_chunked(x, w_unembed, targets, mask=None, chunk: int = 512,
+                      vocab_real: int | None = None, reduce: str = "mean"):
+    """Mean next-token cross entropy without materializing [B,S,V].
+
+    x [B,S,D], w_unembed [D,V], targets [B,S] (already shifted), mask [B,S].
+    vocab_real: when the vocab dim is padded for sharding, logits beyond it
+    are masked out of the softmax.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((B, S), bool), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), bool)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, i):
+        tot, cnt = carry
+        xc = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        tc = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+        logits = (xc @ w_unembed).astype(jnp.float32)
+        logits = sh.constrain(logits, "batch", None, "vocab")
+        if vocab_real is not None and vocab_real < w_unembed.shape[-1]:
+            cols = jnp.arange(w_unembed.shape[-1])
+            logits = jnp.where(cols < vocab_real, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mc
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 jnp.arange(n))
+    if reduce == "sum":
+        return tot, cnt
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,413 @@
+"""RecSys models: DLRM (dot interaction), DIN (target attention), SASRec
+(self-attentive sequential), MIND (multi-interest capsule routing).
+
+The hot path is the huge sparse embedding lookup. JAX has no EmbeddingBag /
+CSR — lookups are built from take + segment_sum (kernels/embedding_bag.py is
+the Pallas version). Tables are ROW-sharded over the `model` axis: each
+shard gathers the ids it owns and one psum combines (shard_map island);
+`retrieval_topk` shards candidates over `model` with a local top-k +
+all_gather merge (same machinery as the paper's distributed trie merge).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+# ---------------------------------------------------------------------------
+# sharded embedding lookup
+# ---------------------------------------------------------------------------
+
+
+def embedding_lookup(table, ids):
+    """table [V, D] row-sharded over `model`; ids int32[...] -> [..., D]."""
+    mesh = sh.current_mesh()
+    if (mesh is None or "model" not in mesh.axis_names or mesh.size == 1
+            or table.shape[0] % max(sh.model_size(mesh), 1) != 0):
+        return jnp.take(table, ids, axis=0)
+    dp = sh.dp_axes(mesh) if ids.shape[0] % max(sh.dp_size(mesh), 1) == 0 \
+        else ()
+    id_spec = P(dp if dp else None, *([None] * (ids.ndim - 1)))
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P("model", None), id_spec),
+             out_specs=P(dp if dp else None, *([None] * ids.ndim)),
+             check_vma=False)
+    def run(tab_l, ids_l):
+        v_l = tab_l.shape[0]
+        off = jax.lax.axis_index("model") * v_l
+        loc = ids_l - off
+        ok = (loc >= 0) & (loc < v_l)
+        e = jnp.take(tab_l, jnp.clip(loc, 0, v_l - 1), axis=0)
+        e = e * ok[..., None]
+        return jax.lax.psum(e, "model")
+
+    return run(table, ids)
+
+
+def stacked_embedding_lookup(tables, ids):
+    """tables [F, V, D] row-sharded; ids int32[B, F] -> [B, F, D]."""
+    mesh = sh.current_mesh()
+    if (mesh is None or "model" not in mesh.axis_names or mesh.size == 1
+            or tables.shape[1] % max(sh.model_size(mesh), 1) != 0):
+        return jax.vmap(lambda t, i: t[i], in_axes=(0, 1), out_axes=1)(tables, ids)
+    dp = sh.dp_axes(mesh) if ids.shape[0] % max(sh.dp_size(mesh), 1) == 0 \
+        else None
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(None, "model", None), P(dp, None)),
+             out_specs=P(dp, None, None), check_vma=False)
+    def run(tab_l, ids_l):
+        v_l = tab_l.shape[1]
+        off = jax.lax.axis_index("model") * v_l
+        loc = ids_l - off                                    # [B, F]
+        ok = (loc >= 0) & (loc < v_l)
+        gather = jax.vmap(lambda t, i: t[i], in_axes=(0, 1), out_axes=1)
+        e = gather(tab_l, jnp.clip(loc, 0, v_l - 1))          # [B, F, D]
+        e = e * ok[..., None]
+        return jax.lax.psum(e, "model")
+
+    return run(tables, ids)
+
+
+def retrieval_topk(user, cand, k: int):
+    """user [B, D] (or [B, K, D] multi-interest); cand [C, D] sharded over
+    `model`. Returns (scores [B, k], ids [B, k])."""
+    multi = user.ndim == 3
+    mesh = sh.current_mesh()
+
+    def score(u, c):
+        s = jnp.einsum("bd,cd->bc", u, c) if not multi else \
+            jnp.einsum("bkd,cd->bkc", u, c).max(axis=1)
+        return s
+
+    if (mesh is None or "model" not in mesh.axis_names or mesh.size == 1
+            or cand.shape[0] % max(sh.model_size(mesh), 1) != 0):
+        s = score(user, cand)
+        top, idx = jax.lax.top_k(s, k)
+        return top, idx.astype(jnp.int32)
+
+    dp = sh.dp_axes(mesh) if user.shape[0] % max(sh.dp_size(mesh), 1) == 0 \
+        else None
+    u_spec = P(dp, *([None] * (user.ndim - 1)))
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(u_spec, P("model", None)),
+             out_specs=(P(dp, None), P(dp, None)), check_vma=False)
+    def run(u_l, c_l):
+        s = score(u_l, c_l)
+        top, idx = jax.lax.top_k(s, k)
+        off = jax.lax.axis_index("model") * c_l.shape[0]
+        gids = idx.astype(jnp.int32) + off
+        all_s = jax.lax.all_gather(top, "model")   # [S, b, k]
+        all_i = jax.lax.all_gather(gids, "model")
+        S = all_s.shape[0]
+        fs = jnp.moveaxis(all_s, 0, 1).reshape(top.shape[0], S * k)
+        fi = jnp.moveaxis(all_i, 0, 1).reshape(top.shape[0], S * k)
+        ts, ti = jax.lax.top_k(fs, k)
+        return ts, jnp.take_along_axis(fi, ti, axis=1)
+
+    return run(user, cand)
+
+
+def _mlp_init(key, dims, scale=None):
+    ks = jax.random.split(key, len(dims) - 1)
+    ws, bs = [], []
+    for i, kk in enumerate(ks):
+        s = scale or (dims[i] ** -0.5)
+        ws.append(jax.random.normal(kk, (dims[i], dims[i + 1])) * s)
+        bs.append(jnp.zeros((dims[i + 1],)))
+    return {"w": ws, "b": bs}
+
+
+def _mlp_axes(dims):
+    return {"w": [(None, None)] * (len(dims) - 1),
+            "b": [(None,)] * (len(dims) - 1)}
+
+
+def _mlp_apply(p, x, final_act=False):
+    n = len(p["w"])
+    for i in range(n):
+        x = x @ p["w"][i] + p["b"][i]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _bce(logit, label):
+    return jnp.mean(
+        jnp.maximum(logit, 0) - logit * label
+        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ---------------------------------------------------------------------------
+# DLRM  [arXiv:1906.00091]
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    d_embed: int = 64
+    vocab: int = 1_000_000
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256, 1)
+
+
+def init_dlrm(key, cfg: DLRMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_inter = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+    top_in = n_inter + cfg.bot_mlp[-1]
+    params = {
+        "tables": jax.random.normal(
+            k1, (cfg.n_sparse, cfg.vocab, cfg.d_embed)) * (cfg.d_embed ** -0.5),
+        "bot": _mlp_init(k2, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": _mlp_init(k3, (top_in,) + cfg.top_mlp),
+    }
+    axes = {
+        "tables": (None, "rows", None),
+        "bot": _mlp_axes((cfg.n_dense,) + cfg.bot_mlp),
+        "top": _mlp_axes((top_in,) + cfg.top_mlp),
+    }
+    return params, axes
+
+
+def dlrm_forward(params, batch, cfg: DLRMConfig):
+    dense = sh.constrain(batch["dense"], "batch", None)
+    d = _mlp_apply(params["bot"], dense, final_act=True)       # [B, 64]
+    e = stacked_embedding_lookup(params["tables"], batch["sparse"])
+    z = jnp.concatenate([d[:, None, :], e], axis=1)            # [B, 27, D]
+    inter = jnp.einsum("bif,bjf->bij", z, z)
+    iu, ju = np.triu_indices(z.shape[1], k=1)
+    tri = inter[:, iu, ju]                                     # [B, 351]
+    x = jnp.concatenate([d, tri], axis=1)
+    logit = _mlp_apply(params["top"], x)[:, 0]
+    return sh.constrain(logit, "batch")
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig):
+    logit = dlrm_forward(params, batch, cfg)
+    loss = _bce(logit, batch["label"].astype(jnp.float32))
+    return loss, {"logit_mean": logit.mean()}
+
+
+def dlrm_user_embedding(params, batch, cfg: DLRMConfig):
+    return _mlp_apply(params["bot"], batch["dense"], final_act=True)
+
+
+# ---------------------------------------------------------------------------
+# DIN  [arXiv:1706.06978]
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    d_embed: int = 18
+    seq_len: int = 100
+    vocab: int = 1_000_000
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+
+
+def init_din(key, cfg: DINConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_embed
+    params = {
+        "items": jax.random.normal(k1, (cfg.vocab, d)) * (d ** -0.5),
+        "attn": _mlp_init(k2, (4 * d,) + cfg.attn_mlp + (1,)),
+        "out": _mlp_init(k3, (3 * d,) + cfg.mlp + (1,)),
+    }
+    axes = {
+        "items": ("rows", None),
+        "attn": _mlp_axes((4 * d,) + cfg.attn_mlp + (1,)),
+        "out": _mlp_axes((3 * d,) + cfg.mlp + (1,)),
+    }
+    return params, axes
+
+
+def din_user_embedding(params, batch, cfg: DINConfig):
+    e_h = embedding_lookup(params["items"], batch["hist"])      # [B, T, D]
+    e_t = embedding_lookup(params["items"], batch["target"])    # [B, D]
+    et = jnp.broadcast_to(e_t[:, None, :], e_h.shape)
+    a_in = jnp.concatenate([e_h, et, e_h - et, e_h * et], axis=-1)
+    a = _mlp_apply(params["attn"], a_in)[..., 0]                # [B, T]
+    a = jnp.where(batch["hist"] >= 0, a, -1e30)
+    a = jax.nn.sigmoid(a) * (batch["hist"] >= 0)                # DIN: no softmax
+    return (a[..., None] * e_h).sum(axis=1), e_t                # [B, D]
+
+
+def din_forward(params, batch, cfg: DINConfig):
+    user, e_t = din_user_embedding(params, batch, cfg)
+    x = jnp.concatenate([user, e_t, user * e_t], axis=-1)
+    return _mlp_apply(params["out"], x)[:, 0]
+
+
+def din_loss(params, batch, cfg: DINConfig):
+    logit = din_forward(params, batch, cfg)
+    return _bce(logit, batch["label"].astype(jnp.float32)), {}
+
+
+# ---------------------------------------------------------------------------
+# SASRec  [arXiv:1808.09781]
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    d_embed: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    vocab: int = 1_000_000
+
+
+def init_sasrec(key, cfg: SASRecConfig):
+    ks = jax.random.split(key, 2 + 4 * cfg.n_blocks)
+    d = cfg.d_embed
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kq, kv, k1, k2 = ks[2 + 4 * i : 6 + 4 * i]
+        blocks.append({
+            "wqkv": jax.random.normal(kq, (d, 3 * d)) * (d ** -0.5),
+            "wo": jax.random.normal(kv, (d, d)) * (d ** -0.5),
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+            "w1": jax.random.normal(k1, (d, d)) * (d ** -0.5),
+            "b1": jnp.zeros((d,)),
+            "w2": jax.random.normal(k2, (d, d)) * (d ** -0.5),
+            "b2": jnp.zeros((d,)),
+        })
+    params = {
+        "items": jax.random.normal(ks[0], (cfg.vocab, d)) * (d ** -0.5),
+        "pos": jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02,
+        "blocks": blocks,
+    }
+    axes = {
+        "items": ("rows", None),
+        "pos": (None, None),
+        "blocks": [{k: tuple([None] * np.ndim(v)) for k, v in b.items()}
+                   for b in blocks],
+    }
+    return params, axes
+
+
+def _ln(x, w):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * w
+
+
+def sasrec_hidden(params, hist, cfg: SASRecConfig):
+    """hist int32[B, T] (-1 pad) -> hidden states [B, T, D]."""
+    B, T = hist.shape
+    d = cfg.d_embed
+    mask = hist >= 0
+    h = embedding_lookup(params["items"], jnp.maximum(hist, 0)) * np.sqrt(d)
+    h = h + params["pos"][None, :T]
+    h = h * mask[..., None]
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    for blk in params["blocks"]:
+        q, k, v = jnp.split(_ln(h, blk["ln1"]) @ blk["wqkv"], 3, axis=-1)
+        s = jnp.einsum("bqd,bkd->bqk", q, k) / np.sqrt(d)
+        s = jnp.where(causal[None] & mask[:, None, :], s, -1e30)
+        att = jax.nn.softmax(s, axis=-1)
+        h = h + (jnp.einsum("bqk,bkd->bqd", att, v) @ blk["wo"])
+        hn = _ln(h, blk["ln2"])
+        h = h + jax.nn.relu(hn @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+        h = h * mask[..., None]
+    return h
+
+
+def sasrec_loss(params, batch, cfg: SASRecConfig):
+    """batch: hist [B,T], pos [B,T], neg [B,T] (next-item targets + negatives)."""
+    h = sasrec_hidden(params, batch["hist"], cfg)
+    e_p = embedding_lookup(params["items"], jnp.maximum(batch["pos"], 0))
+    e_n = embedding_lookup(params["items"], jnp.maximum(batch["neg"], 0))
+    m = (batch["pos"] >= 0).astype(jnp.float32)
+    lp = jnp.einsum("btd,btd->bt", h, e_p)
+    ln_ = jnp.einsum("btd,btd->bt", h, e_n)
+    loss = -(jax.nn.log_sigmoid(lp) + jax.nn.log_sigmoid(-ln_)) * m
+    return loss.sum() / jnp.maximum(m.sum(), 1), {}
+
+
+def sasrec_user_embedding(params, batch, cfg: SASRecConfig):
+    h = sasrec_hidden(params, batch["hist"], cfg)
+    return h[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# MIND  [arXiv:1904.08030]
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    d_embed: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    vocab: int = 1_000_000
+    pow_p: float = 2.0
+
+
+def init_mind(key, cfg: MINDConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_embed
+    params = {
+        "items": jax.random.normal(k1, (cfg.vocab, d)) * (d ** -0.5),
+        "S": jax.random.normal(k2, (d, d)) * (d ** -0.5),   # shared bilinear
+        "b_init": jax.random.normal(k3, (cfg.seq_len, cfg.n_interests)) * 1.0,
+    }
+    axes = {"items": ("rows", None), "S": (None, None), "b_init": (None, None)}
+    return params, axes
+
+
+def _squash(x):
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    return (n2 / (1 + n2)) * x * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def mind_interests(params, hist, cfg: MINDConfig):
+    """Dynamic routing (behavior -> interest capsules). hist [B,T] -> [B,K,D]."""
+    mask = (hist >= 0)
+    e = embedding_lookup(params["items"], jnp.maximum(hist, 0))   # [B,T,D]
+    eh = e @ params["S"]                                          # [B,T,D]
+    b = jnp.broadcast_to(params["b_init"][None, : hist.shape[1]],
+                         (hist.shape[0],) + params["b_init"][: hist.shape[1]].shape)
+    for it in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b, axis=-1) * mask[..., None]          # [B,T,K]
+        c = _squash(jnp.einsum("btk,btd->bkd", w, eh))            # [B,K,D]
+        if it < cfg.capsule_iters - 1:
+            b = b + jnp.einsum("btd,bkd->btk", eh, c)
+    return c
+
+
+def mind_loss(params, batch, cfg: MINDConfig):
+    """batch: hist [B,T], target [B], neg [B, N]."""
+    caps = mind_interests(params, batch["hist"], cfg)             # [B,K,D]
+    e_t = embedding_lookup(params["items"], batch["target"])      # [B,D]
+    # label-aware attention over interests
+    att = jax.nn.softmax(
+        cfg.pow_p * jnp.einsum("bkd,bd->bk", caps, e_t), axis=-1)
+    u = jnp.einsum("bk,bkd->bd", att, caps)
+    e_n = embedding_lookup(params["items"], batch["neg"])         # [B,N,D]
+    lp = jnp.einsum("bd,bd->b", u, e_t)
+    ln_ = jnp.einsum("bd,bnd->bn", u, e_n)
+    loss = -(jax.nn.log_sigmoid(lp).mean()
+             + jax.nn.log_sigmoid(-ln_).mean())
+    return loss, {}
+
+
+def mind_user_embedding(params, batch, cfg: MINDConfig):
+    return mind_interests(params, batch["hist"], cfg)             # [B,K,D]

@@ -1,0 +1,330 @@
+"""Decoder-only transformer: dense / GQA / SWA / MoE variants.
+
+Covers all five assigned LM architectures from one config dataclass:
+granite-moe-1b-a400m (MoE 32e top-8), arctic-480b (MoE 128e top-2 + dense
+residual), mistral-nemo-12b, h2o-danube-1.8b (SWA), qwen2.5-14b (QKV bias).
+
+Layers are stacked with a leading L dim and executed with lax.scan (small
+HLO, fast compile at 48 layers); each layer body can be rematerialized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv: int = 2
+    d_head: int = 32
+    d_ff: int = 256
+    vocab: int = 256
+    qkv_bias: bool = False
+    window: int | None = None          # sliding-window attention
+    moe_experts: int = 0               # 0 = dense
+    moe_top_k: int = 0
+    moe_dense_residual: bool = False   # arctic-style parallel dense FFN
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    remat: bool = True
+    aux_loss_weight: float = 0.01
+    loss_chunk: int = 512
+    param_dtype: str = "float32"
+    vocab_pad_to: int = 128    # table rows padded for even vocab sharding
+    tp_heads: int = 1          # model-axis size for the padded head layout
+    activation_dtype: str = "float32"   # full configs use bfloat16
+    cache_dtype: str = "bfloat16"        # serving KV cache; "int8" = KIVI-
+                                         # style quantized cache (§Perf)
+    seq_parallel: bool = True  # Megatron-SP: residual stream sharded over
+                               # `model` between layers (memory: carry/tp)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = max(self.vocab_pad_to, 1)
+        return (self.vocab + m - 1) // m * m
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def param_count(self) -> int:
+        d, f = self.d_model, self.d_ff
+        attn = 2 * d * self.d_head * (self.n_heads + self.n_kv)
+        if self.is_moe:
+            ffn = 3 * d * f * self.moe_experts + d * self.moe_experts
+            if self.moe_dense_residual:
+                ffn += 3 * d * f
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        attn = 2 * d * self.d_head * (self.n_heads + self.n_kv)
+        ffn = 3 * d * f * self.moe_top_k + d * self.moe_experts
+        if self.moe_dense_residual:
+            ffn += 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+
+def init_layer(key, cfg: TransformerConfig):
+    ks = jax.random.split(key, 4)
+    attn_p, attn_a = L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv, cfg.d_head, cfg.qkv_bias,
+                                      tp=cfg.tp_heads)
+    p = {"attn": attn_p,
+         "ln1": jnp.ones((cfg.d_model,)), "ln2": jnp.ones((cfg.d_model,))}
+    a = {"attn": attn_a, "ln1": (None,), "ln2": (None,)}
+    if cfg.is_moe:
+        p["moe"], a["moe"] = L.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.moe_experts)
+        if cfg.moe_dense_residual:
+            p["mlp"], a["mlp"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff)
+    else:
+        p["mlp"], a["mlp"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff)
+    return p, a
+
+
+def init_lm(key, cfg: TransformerConfig):
+    """Returns (params, logical-axes tree). Layer params are stacked [L, ...]."""
+    k_embed, k_layers, k_out = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    p_layers = jax.vmap(lambda k: init_layer(k, cfg)[0])(layer_keys)
+    _, a_layer = init_layer(k_layers, cfg)
+    a_layers = jax.tree.map(lambda ax: (None,) + ax, a_layer,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    vp = cfg.padded_vocab
+    params = {
+        "embed": jax.random.normal(k_embed, (vp, cfg.d_model)) * 0.02,
+        "layers": p_layers,
+        "final_ln": jnp.ones((cfg.d_model,)),
+        "unembed": jax.random.normal(k_out, (cfg.d_model, vp)) * 0.02,
+    }
+    params = jax.tree.map(lambda x: x.astype(dtype), params)
+    axes = {
+        "embed": ("vocab", "fsdp"),
+        "layers": a_layers,
+        "final_ln": (None,),
+        "unembed": ("fsdp", "vocab"),
+    }
+    return params, axes
+
+
+def _seq_constrain(x, cfg: TransformerConfig):
+    """Sequence-parallel residual stream: the per-layer carry (the only
+    tensor the remat'd scan saves) is sharded over `model`, cutting saved-
+    activation memory by tp at the cost of one gather per layer."""
+    mesh = sh.current_mesh()
+    if (cfg.seq_parallel and mesh is not None and x.ndim == 3
+            and sh.model_size(mesh) > 1
+            and x.shape[1] % sh.model_size(mesh) == 0 and x.shape[1] > 1):
+        return sh.constrain(x, "batch", "seq", None)
+    return sh.constrain(x, "batch", None, None)
+
+
+def _layer_fwd(cfg: TransformerConfig, x, lp, positions):
+    h, _ = L.attention(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                       n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                       rope_theta=cfg.rope_theta, window=cfg.window,
+                       positions=positions, tp=cfg.tp_heads)
+    x = x + h
+    hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0)
+    if cfg.is_moe:
+        mo, aux = L.moe_ffn(lp["moe"], hn, n_experts=cfg.moe_experts,
+                            top_k=cfg.moe_top_k)
+        if cfg.moe_dense_residual:
+            mo = mo + L.mlp(lp["mlp"], hn)
+        x = x + mo
+    else:
+        x = x + L.mlp(lp["mlp"], hn)
+    x = x.astype(jnp.dtype(cfg.activation_dtype))
+    return _seq_constrain(x, cfg), aux
+
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """tokens [B, S] -> final hidden [B, S, D] (+ mean aux loss)."""
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens)
+    x = _seq_constrain(x.astype(jnp.dtype(cfg.activation_dtype)), cfg)
+    positions = jnp.arange(S)[None, :]
+
+    body = partial(_layer_fwd, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_fn(x, lp):
+        x, aux = body(x, lp, positions)
+        return x, aux
+
+    x, auxes = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, auxes.mean()
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    """batch: dict(tokens [B,S], targets [B,S], mask [B,S])."""
+    x, aux = forward(params, batch["tokens"], cfg)
+    nll = L.xent_loss_chunked(x, params["unembed"], batch["targets"],
+                              batch.get("mask"), chunk=cfg.loss_chunk,
+                              vocab_real=cfg.vocab)
+    loss = nll + cfg.aux_loss_weight * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None):
+    span = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (cfg.n_layers, batch, cfg.n_kv, span, cfg.d_head)
+    quantized = cfg.cache_dtype == "int8"
+    dtype = dtype if dtype is not None else (
+        jnp.int8 if quantized else jnp.dtype(cfg.cache_dtype))
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+             "pos": jnp.zeros((), jnp.int32)}
+    if quantized and dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+        cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+    return cache
+
+
+def cache_axes(quantized: bool = False):
+    # sequence-sharded cache (flash-decoding, layers._flash_decode_sharded)
+    out = {"k": (None, "batch", None, "seq", None),
+           "v": (None, "batch", None, "seq", None), "pos": ()}
+    if quantized:
+        out["k_scale"] = (None, "batch", None, "seq")
+        out["v_scale"] = (None, "batch", None, "seq")
+    return out
+
+
+def _mask_pad_vocab(logits, cfg: TransformerConfig):
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    cols = jnp.arange(logits.shape[-1])
+    return jnp.where(cols[None, :] < cfg.vocab, logits, -1e30)
+
+
+def _layer_decode(cfg: TransformerConfig, x, lp, cache_layer, pos):
+    positions = pos[:, None] if jnp.ndim(pos) else pos[None, None]
+    h, new_cache = L.attention(
+        lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, rope_theta=cfg.rope_theta,
+        window=cfg.window, positions=positions,
+        cache=cache_layer, cache_pos=pos, tp=cfg.tp_heads)
+    x = x + h
+    hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        mo, _ = L.moe_ffn(lp["moe"], hn, n_experts=cfg.moe_experts,
+                          top_k=cfg.moe_top_k)
+        if cfg.moe_dense_residual:
+            mo = mo + L.mlp(lp["mlp"], hn)
+        x = x + mo
+    else:
+        x = x + L.mlp(lp["mlp"], hn)
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig):
+    """tokens [B] -> (logits [B, V], new cache). One decode position.
+
+    cache["pos"] may be a scalar (lockstep decode) or an int32[B] vector of
+    per-slot positions (continuous batching)."""
+    x = L.embed_lookup(params["embed"], tokens[:, None])
+    pos = cache["pos"]
+    quantized = "k_scale" in cache
+
+    def scan_fn(x, lp_kv):
+        if quantized:
+            lp, ck, cv, ksc, vsc = lp_kv
+            x, nc = _layer_decode(cfg, x, lp, (ck, cv, ksc, vsc), pos)
+        else:
+            lp, ck, cv = lp_kv
+            x, nc = _layer_decode(cfg, x, lp, (ck, cv), pos)
+        return x, nc
+
+    xs = (params["layers"], cache["k"], cache["v"])
+    if quantized:
+        xs = xs + (cache["k_scale"], cache["v_scale"])
+    x, ncs = jax.lax.scan(scan_fn, x, xs)
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)
+    logits = _mask_pad_vocab(logits, cfg)
+    logits = sh.constrain(logits, "batch", "vocab")
+    new_cache = {"k": ncs[0], "v": ncs[1], "pos": pos + 1}
+    if quantized:
+        new_cache["k_scale"] = ncs[2]
+        new_cache["v_scale"] = ncs[3]
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: TransformerConfig, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Run the prompt, build the KV cache, return last-position logits."""
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens)
+    x = _seq_constrain(x.astype(jnp.dtype(cfg.activation_dtype)), cfg)
+    positions = jnp.arange(S)[None, :]
+    cache = init_cache(cfg, B, max_len, cache_dtype)
+    span = cache["k"].shape[3]
+
+    def scan_fn(x, lp):
+        h, (k, v) = L.attention(
+            lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, rope_theta=cfg.rope_theta,
+            window=cfg.window, positions=positions, tp=cfg.tp_heads)
+        x = x + h
+        hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            mo, _ = L.moe_ffn(lp["moe"], hn, n_experts=cfg.moe_experts,
+                              top_k=cfg.moe_top_k)
+            if cfg.moe_dense_residual:
+                mo = mo + L.mlp(lp["mlp"], hn)
+            x = x + mo
+        else:
+            x = x + L.mlp(lp["mlp"], hn)
+        x = _seq_constrain(x.astype(jnp.dtype(cfg.activation_dtype)), cfg)
+        # keep the last `span` positions, placed at slot = position % span
+        # (ring layout for SWA; identity when S <= span)
+        if S < span:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, span - S), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, span - S), (0, 0)))
+            ck, cv = k, v
+        else:
+            ck = jnp.roll(k[:, :, -span:, :], shift=S % span, axis=2)
+            cv = jnp.roll(v[:, :, -span:, :], shift=S % span, axis=2)
+        return x, (ck.astype(cache_dtype), cv.astype(cache_dtype))
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["unembed"]).astype(jnp.float32)
+    logits = _mask_pad_vocab(logits, cfg)
+    cache = {"k": ks, "v": vs, "pos": jnp.full((), S, jnp.int32)}
+    if cfg.cache_dtype == "int8" and ks.dtype != jnp.int8:
+        kq, ksc = jax.vmap(L.quantize_kv)(ks)
+        vq, vsc = jax.vmap(L.quantize_kv)(vs)
+        cache = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc,
+                 "pos": cache["pos"]}
+    return sh.constrain(logits, "batch", "vocab"), cache

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (OptimizerConfig, init_optimizer,
+                                    apply_updates, lr_at)
+
+__all__ = ["OptimizerConfig", "init_optimizer", "apply_updates", "lr_at"]

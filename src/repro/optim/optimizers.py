@@ -1,0 +1,166 @@
+"""Optimizers: AdamW, Adafactor (factored second moment — what lets
+arctic-480b's optimizer state fit a pod), SGD; warmup+cosine schedule,
+global-norm clipping, gradient accumulation helper.
+
+States are pytrees mirroring params, so the same logical-axes sharding tree
+shards optimizer state (ZeRO-1-style when the rules spread rows over dp).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    accum_steps: int = 1
+    # adafactor
+    factored_dims_min: int = 2
+    decay_rate: float = 0.8
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def _is_factored(shape, cfg):
+    return len(shape) >= cfg.factored_dims_min and min(shape[-2:]) >= 2
+
+
+def init_optimizer(cfg: OptimizerConfig, params):
+    if cfg.name == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.name == "adafactor":
+        def vr(p):
+            if _is_factored(p.shape, cfg):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, jnp.float32)
+
+        def vc(p):
+            if _is_factored(p.shape, cfg):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return {
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.name == "sgd":
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale, grads), g
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """One optimizer step. Returns (new_params, new_state, metrics).
+
+    Gradients are cast to fp32 *per leaf inside the update* (never as a
+    whole tree) so the peak live set is one leaf's temporaries, not an
+    entire second gradient tree — this is what lets arctic-480b's step fit
+    HBM (EXPERIMENTS.md §Perf)."""
+    gnorm = global_norm(grads)
+    scale = jnp.float32(1.0)
+    if cfg.clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+
+    if cfg.name == "adamw":
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m_, v_):
+            g = g.astype(jnp.float32) * scale
+            m2 = cfg.b1 * m_ + (1 - cfg.b1) * g
+            v2 = cfg.b2 * v_ + (1 - cfg.b2) * g * g
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        leaves, tdef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = tdef.unflatten([l[0] for l in leaves])
+        m = tdef.unflatten([l[1] for l in leaves])
+        v = tdef.unflatten([l[2] for l in leaves])
+        return new_params, {"m": m, "v": v, "step": step}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "adafactor":
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay_rate)
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32) * scale
+            g2 = g * g + 1e-30
+            if _is_factored(p.shape, cfg):
+                vr2 = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+                vc2 = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+                r_factor = vr2 / jnp.maximum(
+                    vr2.mean(axis=-1, keepdims=True), 1e-30)
+                u = g * jax.lax.rsqrt(r_factor)[..., None] \
+                    * jax.lax.rsqrt(vc2 / 1.0)[..., None, :]
+            else:
+                vr2 = beta2 * vr + (1 - beta2) * g2
+                vc2 = vc
+                u = g * jax.lax.rsqrt(vr2)
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr2, vc2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_vr = tdef.flatten_up_to(state["vr"])
+        flat_vc = tdef.flatten_up_to(state["vc"])
+        out = [upd(p, g, vr, vc) for p, g, vr, vc
+               in zip(flat_p, flat_g, flat_vr, flat_vc)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_vr = tdef.unflatten([o[1] for o in out])
+        new_vc = tdef.unflatten([o[2] for o in out])
+        return new_params, {"vr": new_vr, "vc": new_vc, "step": step}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "sgd":
+        m = jax.tree.map(
+            lambda m_, g: cfg.b1 * m_ + g.astype(jnp.float32) * scale,
+            state["m"], grads)
+        new_params = jax.tree.map(
+            lambda p, m_: (p.astype(jnp.float32) - lr * m_).astype(p.dtype),
+            params, m)
+        return new_params, {"m": m, "step": step}, \
+            {"lr": lr, "grad_norm": gnorm}
+    raise ValueError(cfg.name)

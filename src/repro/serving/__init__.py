@@ -1,0 +1,5 @@
+from repro.serving.completion_service import CompletionService, ServiceStats
+from repro.serving.engine import LMServer, Request, SlotScheduler
+
+__all__ = ["CompletionService", "ServiceStats", "LMServer", "Request",
+           "SlotScheduler"]

@@ -1,0 +1,56 @@
+"""CompletionService: the paper's technique as the serving front-end.
+
+Wraps a (sharded or local) completion index; optionally re-ranks the trie's
+top-k candidates with any model from the zoo (LM log-prob or recsys user
+affinity) — trie proposes cheaply, the model spends FLOPs only on k
+candidates (DESIGN §3.1).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ServiceStats:
+    n_queries: int = 0
+    total_seconds: float = 0.0
+    batches: int = 0
+    latencies_ms: list = field(default_factory=list)
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return (self.total_seconds / max(self.n_queries, 1)) * 1e3
+
+    def p99_ms(self) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        xs = sorted(self.latencies_ms)
+        return xs[min(int(len(xs) * 0.99), len(xs) - 1)]
+
+
+class CompletionService:
+    def __init__(self, index, reranker=None, overfetch: int = 4):
+        """index: CompletionIndex or ShardedCompletionIndex.
+        reranker: callable(query, [(score, string)]) -> [(score, string)].
+        overfetch: fetch overfetch*k trie candidates before reranking."""
+        self.index = index
+        self.reranker = reranker
+        self.overfetch = overfetch
+        self.stats = ServiceStats()
+
+    def complete(self, queries: list[str], k: int = 10):
+        t0 = time.perf_counter()
+        fetch_k = k * (self.overfetch if self.reranker else 1)
+        results = self.index.complete(queries, k=fetch_k)
+        if self.reranker is not None:
+            results = [self.reranker(q, r)[:k] for q, r in zip(queries, results)]
+        else:
+            results = [r[:k] for r in results]
+        dt = time.perf_counter() - t0
+        self.stats.n_queries += len(queries)
+        self.stats.total_seconds += dt
+        self.stats.batches += 1
+        self.stats.latencies_ms.append(dt / max(len(queries), 1) * 1e3)
+        return results

@@ -1,0 +1,133 @@
+"""Serving engine: request batcher + continuous-batching LM decode loop.
+
+SlotScheduler keeps a fixed decode batch (the jit shape) and swaps finished
+requests for queued ones between steps — vLLM-style continuous batching
+mapped onto fixed-shape JAX: per-slot KV caches live in one stacked cache
+pytree, positions are a per-slot vector, and a slot is recycled by
+prefilling the new prompt into its cache lane.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # int32[prompt_len]
+    max_new_tokens: int = 16
+    created: float = field(default_factory=time.perf_counter)
+    tokens: list = field(default_factory=list)
+    done: bool = False
+    first_token_at: float | None = None
+    finished_at: float | None = None
+
+
+class SlotScheduler:
+    """Continuous batching over `n_slots` decode lanes."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Request | None] = [None] * n_slots
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        new = []
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                r = self.queue.popleft()
+                self.slots[i] = r
+                new.append((i, r))
+        return new
+
+    def record(self, slot_tokens: np.ndarray, eos_id: int | None = None):
+        now = time.perf_counter()
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            tok = int(slot_tokens[i])
+            if r.first_token_at is None:
+                r.first_token_at = now
+            r.tokens.append(tok)
+            if len(r.tokens) >= r.max_new_tokens or \
+                    (eos_id is not None and tok == eos_id):
+                r.done = True
+                r.finished_at = now
+                self.completed.append(r)
+                self.slots[i] = None
+
+    @property
+    def active(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+
+class LMServer:
+    """Batched prefill + continuous-batching greedy decode."""
+
+    def __init__(self, params, cfg: tf.TransformerConfig, *, n_slots: int,
+                 max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.scheduler = SlotScheduler(n_slots)
+        self.max_len = max_len
+        self.cache = tf.init_cache(cfg, n_slots, max_len, jnp.float32)
+        self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.cur = np.zeros((n_slots,), np.int32)
+        self.live = np.zeros((n_slots,), bool)
+
+        @jax.jit
+        def prefill_into_slot(params, cache, tokens, slot):
+            logits, new = tf.prefill(params, tokens[None], cfg, max_len,
+                                     cache_dtype=jnp.float32)
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], new["k"].astype(cache["k"].dtype),
+                (0, slot, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], new["v"].astype(cache["v"].dtype),
+                (0, slot, 0, 0, 0))
+            pos = cache["pos"].at[slot].set(tokens.shape[0])
+            return logits[0], {"k": k, "v": v, "pos": pos}
+
+        @jax.jit
+        def decode(params, cache, tokens):
+            return tf.decode_step(params, cache, tokens, cfg)
+
+        self._prefill = prefill_into_slot
+        self._decode = decode
+
+    def run(self, eos_id: int | None = None, max_steps: int = 100_000):
+        sched = self.scheduler
+        steps = 0
+        while sched.active and steps < max_steps:
+            for slot, req in sched.admit():
+                logits, self.cache = self._prefill(
+                    self.params, self.cache, jnp.asarray(req.prompt),
+                    slot)
+                self.cur[slot] = int(np.argmax(np.asarray(logits)))
+                self.live[slot] = True
+            if not self.live.any():
+                break
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.cur))
+            emitted = self.cur.copy()
+            nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+            sched.record(emitted, eos_id)
+            self.cur = nxt
+            for i, r in enumerate(sched.slots):
+                if r is None:
+                    self.live[i] = False
+            steps += 1
+        return sched.completed

@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device; only launch/dryrun.py
+(and explicit subprocess tests) force 512 host devices."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,179 @@
+"""Core correctness: TT / ET / HT / cached engines vs the Problem-1 oracle.
+
+Includes hypothesis property tests over random dictionaries, rule sets and
+queries — the central invariant of the whole system: every index kind
+returns exactly the oracle's top-k score multiset.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompletionIndex, OracleIndex, make_rules
+
+KINDS = ["tt", "et", "ht"]
+
+
+def build_all(strings, scores, rules, **kw):
+    return {k: CompletionIndex.build(strings, scores, rules, kind=k, **kw)
+            for k in KINDS}
+
+
+@pytest.fixture(scope="module")
+def paper_example():
+    strings = ["andrew pavlo", "andrew parker", "andrew packard",
+               "william smith", "bill of rights"]
+    scores = [50, 40, 30, 20, 10]
+    rules = make_rules([("andy", "andrew"), ("bill", "william")])
+    return strings, scores, rules
+
+
+def test_paper_example_fig1(paper_example):
+    """The paper's Fig. 1 scenario: 'Andy Pa' completes to Andrew *."""
+    strings, scores, rules = paper_example
+    for kind, idx in build_all(strings, scores, rules).items():
+        out = idx.complete(["andy pa"], k=3)[0]
+        assert [s for s, _ in out] == [50, 40, 30], kind
+        assert {x for _, x in out} == {
+            "andrew pavlo", "andrew parker", "andrew packard"}, kind
+
+
+def test_prefix_only_still_works(paper_example):
+    strings, scores, rules = paper_example
+    for kind, idx in build_all(strings, scores, rules).items():
+        out = idx.complete(["andrew pa"], k=10)[0]
+        assert len(out) == 3, kind
+
+
+def test_no_match(paper_example):
+    strings, scores, rules = paper_example
+    for kind, idx in build_all(strings, scores, rules).items():
+        assert idx.complete(["xyz"], k=5)[0] == [], kind
+
+
+def test_multi_rule_application():
+    strings = ["database management systems conference"]
+    rules = make_rules([("db", "database"), ("mgmt", "management"),
+                        ("sys", "systems")])
+    oracle = OracleIndex(strings, [7], rules)
+    assert oracle.topk_scores("db mgmt sys", 3) == [7]
+    for kind, idx in build_all(strings, [7], rules).items():
+        out = idx.complete(["db mgmt sys", "db management sys"], k=3)
+        assert [s for s, _ in out[0]] == [7], kind
+        assert [s for s, _ in out[1]] == [7], kind
+
+
+def test_rule_output_cannot_feed_rule():
+    """Generated text never participates in a later application."""
+    strings = ["xyz"]
+    # 'a' -> 'x', then 'xb' -> 'xyz' would need the generated x
+    rules = make_rules([("a", "x"), ("xb", "xyz")])
+    oracle = OracleIndex(strings, [5], rules)
+    assert oracle.matches("ab") == set()
+    for kind, idx in build_all(strings, [5], rules).items():
+        assert idx.complete(["ab"], k=3)[0] == [], kind
+    # but the un-chained forms work
+    assert oracle.matches("a") == {b"xyz"}
+    for kind, idx in build_all(strings, [5], rules).items():
+        assert [s for s, _ in idx.complete(["a"], k=3)[0]] == [5], kind
+
+
+def test_ht_alpha_extremes_match_tt_et():
+    strings = [f"record {i:03d} common" for i in range(50)]
+    scores = list(range(1, 51))
+    rules = make_rules([("rec", "record"), ("cmn", "common")])
+    ht0 = CompletionIndex.build(strings, scores, rules, kind="ht", alpha=0.0)
+    ht1 = CompletionIndex.build(strings, scores, rules, kind="ht", alpha=1.0)
+    assert ht0.stats.n_syn_nodes == 0            # alpha=0 == TT
+    assert ht1.stats.n_links == 0                # alpha=1 == ET
+    tt = CompletionIndex.build(strings, scores, rules, kind="tt")
+    et = CompletionIndex.build(strings, scores, rules, kind="et")
+    qs = ["rec 00", "record 04", "cmn", "rec"]
+    for a, b in [(ht0, tt), (ht1, et)]:
+        ra, rb = a.complete(qs, k=5), b.complete(qs, k=5)
+        assert [[s for s, _ in r] for r in ra] == \
+            [[s for s, _ in r] for r in rb]
+
+
+def test_cached_topk_equals_beam(paper_example):
+    strings, scores, rules = paper_example
+    plain = CompletionIndex.build(strings, scores, rules, kind="et")
+    cached = CompletionIndex.build(strings, scores, rules, kind="et",
+                                   cache_k=8)
+    qs = ["andy pa", "bil", "a", "w", ""]
+    qs = [q for q in qs if q]
+    assert plain.complete(qs, 5) == cached.complete(qs, 5)
+
+
+def test_space_ordering_tt_le_ht_le_et():
+    """Paper Table 2: TT smallest, ET largest, HT between."""
+    strings = [f"the {w} of entry {i:04d}" for i, w in enumerate(
+        ["database", "management", "system", "record"] * 100)]
+    scores = list(range(1, len(strings) + 1))
+    rules = make_rules([("db", "database"), ("mgmt", "management"),
+                        ("sys", "system"), ("rec", "record"),
+                        ("entr.", "entry")])
+    idx = build_all(strings, scores, rules, alpha=0.5)
+    tt = idx["tt"].stats.bytes_total
+    ht = idx["ht"].stats.bytes_total
+    et = idx["et"].stats.bytes_total
+    assert tt <= ht <= et
+    assert idx["et"].stats.n_links == 0
+    assert idx["tt"].stats.n_syn_nodes == 0
+
+
+# -- hypothesis property tests ----------------------------------------------
+
+_word = st.text(alphabet="abcd", min_size=1, max_size=8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    strings=st.lists(_word, min_size=1, max_size=25, unique=True),
+    scores_seed=st.integers(0, 2**31 - 1),
+    rules=st.lists(
+        st.tuples(st.text(alphabet="abcdxy", min_size=1, max_size=3),
+                  st.text(alphabet="abcd", min_size=1, max_size=3)),
+        max_size=5),
+    queries=st.lists(st.text(alphabet="abcdxy", min_size=1, max_size=6),
+                     min_size=1, max_size=5),
+    k=st.sampled_from([1, 3, 10]),
+    kind=st.sampled_from(KINDS),
+    cache=st.booleans(),
+)
+def test_property_matches_oracle(strings, scores_seed, rules, queries, k,
+                                 kind, cache):
+    rules = [(l, r) for l, r in rules if l != r]
+    rng = np.random.default_rng(scores_seed)
+    scores = rng.integers(1, 1000, len(strings)).tolist()
+    oracle = OracleIndex(strings, scores, make_rules(rules))
+    idx = CompletionIndex.build(strings, scores, make_rules(rules),
+                                kind=kind, alpha=0.5,
+                                cache_k=16 if cache else 0)
+    got = idx.complete(queries, k=k)
+    for q, row in zip(queries, got):
+        expect = oracle.topk_scores(q, k)
+        assert [s for s, _ in row] == expect, (q, kind)
+        # returned strings must actually match the query per the oracle
+        valid = oracle.matches(q)
+        for _, s in row:
+            assert s.encode() in valid, (q, s, kind)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    strings=st.lists(_word, min_size=2, max_size=15, unique=True),
+    rules=st.lists(
+        st.tuples(st.text(alphabet="abcd", min_size=1, max_size=2),
+                  st.text(alphabet="abcd", min_size=1, max_size=2)),
+        min_size=1, max_size=4),
+    alpha=st.floats(0, 1),
+)
+def test_property_ht_equals_et_results(strings, rules, alpha):
+    """HT must return identical results to ET for any alpha."""
+    rules = make_rules([(l, r) for l, r in rules if l != r])
+    scores = list(range(1, len(strings) + 1))
+    et = CompletionIndex.build(strings, scores, rules, kind="et")
+    ht = CompletionIndex.build(strings, scores, rules, kind="ht", alpha=alpha)
+    queries = [s[:2] for s in strings[:5]]
+    assert et.complete(queries, 5) == ht.complete(queries, 5)

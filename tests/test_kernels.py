@@ -1,0 +1,96 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in kernels/ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompletionIndex, make_rules
+from repro.core.alphabet import pad_queries
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n_strings,qlen,block_q", [
+    (20, 8, 4), (200, 16, 64), (500, 32, 128),
+])
+def test_trie_walk_sweep(n_strings, qlen, block_q, rng):
+    strings = [f"{rng.integers(0, 10)}entry {i:05d} suffix"
+               for i in range(n_strings)]
+    idx = CompletionIndex.build(strings, list(range(n_strings)),
+                                make_rules([]), kind="plain")
+    t = idx.device
+    queries = [s[: int(rng.integers(1, qlen))] for s in strings[:33]] + \
+        ["zzz", "entry"]
+    qs, qlens = pad_queries(queries, qlen)
+    a = ops.trie_walk(t.first_child, t.edge_char, t.edge_child,
+                      jnp.asarray(qs), jnp.asarray(qlens), block_q=block_q)
+    b = ref.trie_walk_ref(t.first_child, t.edge_char, t.edge_child,
+                          jnp.asarray(qs), jnp.asarray(qlens))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@pytest.mark.parametrize("b,c,k,block_b", [
+    (8, 16, 4, 4), (16, 100, 10, 8), (5, 64, 8, 8), (32, 256, 16, 16),
+])
+def test_topk_select_sweep(b, c, k, block_b, rng):
+    scores = rng.integers(-1000, 1000, (b, c)).astype(np.int32)
+    payload = rng.integers(0, 10**6, (b, c)).astype(np.int32)
+    a = ops.topk_select(jnp.asarray(scores), jnp.asarray(payload), k,
+                        block_b=block_b)
+    bref = ref.topk_select_ref(jnp.asarray(scores), jnp.asarray(payload), k)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(bref[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(bref[1]))
+
+
+def test_topk_select_ties_deterministic(rng):
+    scores = np.zeros((4, 32), np.int32)
+    payload = np.arange(4 * 32, dtype=np.int32).reshape(4, 32)
+    a = ops.topk_select(jnp.asarray(scores), jnp.asarray(payload), 5)
+    b = ref.topk_select_ref(jnp.asarray(scores), jnp.asarray(payload), 5)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("v,d,n_bags", [(50, 16, 7), (500, 64, 32)])
+def test_embedding_bag_sweep(dtype, mode, v, d, n_bags, rng):
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    lens = rng.integers(0, 9, n_bags)
+    offsets = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+    indices = rng.integers(0, v, int(lens.sum())).astype(np.int32)
+    weights = rng.normal(size=len(indices)).astype(np.float32)
+    tab = jnp.asarray(table, dtype)
+    a = ops.embedding_bag(tab, indices, offsets, weights, mode=mode)
+    b = ref.embedding_bag_ref(tab, jnp.asarray(indices),
+                              jnp.asarray(offsets), jnp.asarray(weights),
+                              mode=mode)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("c,d,k,block_c", [
+    (256, 32, 5, 64), (1024, 64, 10, 256), (4096, 128, 100, 1024),
+])
+def test_candidate_topk_sweep(c, d, k, block_c, rng):
+    q = rng.normal(size=d).astype(np.float32)
+    cand = rng.normal(size=(c, d)).astype(np.float32)
+    a = ops.candidate_topk(jnp.asarray(q), jnp.asarray(cand), k,
+                           block_c=block_c)
+    b = ref.candidate_topk_ref(jnp.asarray(q), jnp.asarray(cand), k)
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_engine_uses_same_semantics_as_trie_walk(rng):
+    """trie_walk locus == engine's pure-prefix locus on rule-free tries."""
+    strings = ["abc", "abd", "ab", "b"]
+    idx = CompletionIndex.build(strings, [4, 3, 2, 1], make_rules([]),
+                                kind="plain")
+    t = idx.device
+    qs, qlens = pad_queries(["ab", "abc", "abx", "c"], 8)
+    nodes, depth = ops.trie_walk(t.first_child, t.edge_char, t.edge_child,
+                                 jnp.asarray(qs), jnp.asarray(qlens))
+    assert list(np.asarray(depth)) == [2, 3, 2, 0]

@@ -1,0 +1,89 @@
+"""End-to-end behaviour tests for the paper's system: build -> serve ->
+rerank, through the public API (CompletionIndex + CompletionService), on a
+paper-shaped workload."""
+
+import numpy as np
+
+from repro.core import CompletionIndex, OracleIndex, make_rules
+from repro.data.strings import make_dblp, make_usps, make_workload
+from repro.serving import CompletionService
+
+
+def test_end_to_end_usps_serving():
+    """Build a USPS-like index, replay a synonym workload, verify every
+    returned suggestion against the oracle and check service accounting."""
+    ds = make_usps(n=2000, seed=0)
+    rules = make_rules(ds.rules)
+    oracle = OracleIndex(ds.strings, ds.scores, rules)
+    idx = CompletionIndex.build(ds.strings, ds.scores, rules, kind="ht",
+                                alpha=0.5, cache_k=16)
+    svc = CompletionService(idx)
+    queries = make_workload(ds, 64, seed=3, max_len=12)
+    results = svc.complete(queries, k=10)
+    hits = 0
+    for q, rows in zip(queries, results):
+        expect = oracle.topk_scores(q, 10)
+        assert [s for s, _ in rows] == expect, q
+        valid = oracle.matches(q)
+        for _, s in rows:
+            assert s.encode() in valid, (q, s)
+        hits += bool(rows)
+    assert hits / len(queries) > 0.5          # the workload hits the index
+    assert svc.stats.n_queries == len(queries)
+    assert svc.stats.mean_latency_ms > 0
+
+
+def test_end_to_end_synonym_value():
+    """The point of the paper: synonym-aware completion answers queries a
+    plain prefix trie cannot."""
+    ds = make_dblp(n=800, seed=1)
+    rules = make_rules(ds.rules)
+    syn = CompletionIndex.build(ds.strings, ds.scores, rules, kind="et")
+    plain = CompletionIndex.build(ds.strings, ds.scores, [], kind="plain")
+    # take dictionary strings and rewrite their first word to its variant
+    inv = {}
+    for lhs, rhs in ds.rules:
+        inv.setdefault(rhs, lhs)
+    queries = []
+    for s in ds.strings:
+        head = s.split(" ")[0]
+        if head in inv:
+            queries.append(inv[head] + " " + s.split(" ")[1][:2])
+        if len(queries) == 20:
+            break
+    assert len(queries) >= 5
+    got_syn = syn.complete(queries, k=5)
+    got_plain = plain.complete(queries, k=5)
+    syn_hits = sum(bool(r) for r in got_syn)
+    plain_hits = sum(bool(r) for r in got_plain)
+    assert syn_hits > plain_hits  # synonyms recover matches prefix-only loses
+
+
+def test_end_to_end_rerank_changes_order():
+    strings = ["alpha item", "beta item", "gamma item"]
+    idx = CompletionIndex.build(strings, [30, 20, 10], make_rules([]),
+                                kind="et")
+
+    def rerank(_q, cands):
+        return sorted(cands, key=lambda t: t[1])   # alphabetical, not score
+
+    svc = CompletionService(idx, reranker=rerank, overfetch=2)
+    out = svc.complete(["a"], k=3)
+    assert [s for _, s in out[0]] == ["alpha item"]
+    out = svc.complete(["b"], k=3)
+    assert [s for _, s in out[0]] == ["beta item"]
+
+
+def test_index_survives_rebuild_roundtrip():
+    """Deterministic construction: same inputs -> same structure sizes and
+    same answers (the property restart/rebuild correctness rests on)."""
+    ds = make_dblp(n=300, seed=2)
+    rules = make_rules(ds.rules)
+    a = CompletionIndex.build(ds.strings, ds.scores, rules, kind="ht",
+                              alpha=0.3)
+    b = CompletionIndex.build(ds.strings, ds.scores, rules, kind="ht",
+                              alpha=0.3)
+    assert a.stats.n_nodes == b.stats.n_nodes
+    assert a.stats.n_links == b.stats.n_links
+    qs = make_workload(ds, 16, seed=4)
+    assert a.complete(qs, 5) == b.complete(qs, 5)
