@@ -1,17 +1,22 @@
-"""Quickstart: the paper's Fig. 1 example in ten lines.
+"""Quickstart: the paper's Fig. 1 example through the v2 API.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import CompletionIndex, make_rules
+import os
+import tempfile
+
+from repro.api import CompletionIndex, IndexSpec, build_index
+from repro.core import make_rules
 
 strings = ["Andrew Pavlo", "Andrew Parker", "Andrew Packard",
            "Andy Warhol Museum", "William Smith"]
 scores = [50, 40, 30, 25, 20]
 rules = make_rules([("Andy", "Andrew"), ("Bill", "William")])
 
+# -- declarative builds: one IndexSpec per structure --------------------------
 for kind in ("tt", "et", "ht"):
-    index = CompletionIndex.build(strings, scores, rules, kind=kind)
+    index = build_index(strings, scores, rules, IndexSpec(kind=kind))
     print(f"\n== {kind.upper()} "
           f"({index.stats.bytes_per_string:.0f} bytes/string) ==")
     for query in ("Andy Pa", "Bill", "Andrew P"):
@@ -19,3 +24,23 @@ for kind in ("tt", "et", "ht"):
         print(f"  {query!r:12} -> "
               + (", ".join(f"{s}:{score}" for score, s in suggestions)
                  or "(no match)"))
+
+# -- persistence: build once, restore without reconstruction ------------------
+index = build_index(strings, scores, rules, IndexSpec(kind="ht", alpha=0.5))
+path = os.path.join(tempfile.mkdtemp(), "fig1.npz")
+index.save(path)
+restored = CompletionIndex.load(path)
+assert restored.complete(["Andy Pa"], k=3) == index.complete(["Andy Pa"], k=3)
+print(f"\nsaved + restored from {path} "
+      f"({os.path.getsize(path)} bytes on disk)")
+
+# -- incremental typing: a session advances the frontier per keystroke --------
+session = restored.session(k=3)
+print("\ntyping 'Andy Pa' one keystroke at a time:")
+for ch in "Andy Pa":
+    suggestions = session.type(ch)
+    print(f"  {session.prefix!r:12} -> "
+          + (", ".join(s for _, s in suggestions) or "(no match)"))
+session.backspace(2)
+print(f"  after 2x backspace {session.prefix!r}: "
+      + ", ".join(s for _, s in session.topk()))

@@ -8,7 +8,8 @@ CompletionService, report latency + throughput per structure.
 import argparse
 import time
 
-from repro.core import CompletionIndex, make_rules
+from repro.api import IndexSpec, build_index
+from repro.core import make_rules
 from repro.data.strings import make_usps, make_workload
 from repro.serving import CompletionService
 
@@ -30,10 +31,9 @@ def main():
 
     for kind, kw in [("tt", {}), ("et", {}), ("ht", {"alpha": 0.5}),
                      ("et+cache", {"cache_k": 16})]:
-        base = kind.split("+")[0]
+        spec = IndexSpec(kind=kind.split("+")[0], **kw)
         t0 = time.perf_counter()
-        idx = CompletionIndex.build(ds.strings, ds.scores,
-                                    make_rules(ds.rules), kind=base, **kw)
+        idx = build_index(ds.strings, ds.scores, make_rules(ds.rules), spec)
         build_s = time.perf_counter() - t0
         svc = CompletionService(idx)
         svc.complete(batches[0], k=args.k)            # compile/warmup
@@ -48,9 +48,22 @@ def main():
               f"{dt / n * 1e6:8.1f} us/completion  "
               f"{n / dt:8.0f} q/s")
 
+    # incremental typing through a stateful serving session: each keystroke
+    # advances the saved locus frontier instead of rescanning the prefix
+    idx = build_index(ds.strings, ds.scores, make_rules(ds.rules),
+                      IndexSpec(kind="et", cache_k=16))
+    svc = CompletionService(idx)
+    sess = svc.open_session(k=3)
+    sess.type(queries[0])                               # compile/warmup
+    svc.stats.reset_keystrokes()
+    for q in queries[:64]:
+        sess.reset()
+        sess.type(q)
+    print(f"keystroke sessions: {svc.stats.n_keystrokes} keystrokes  "
+          f"{svc.stats.mean_keystroke_ms * 1e3:8.1f} us/keystroke  "
+          f"p99 {svc.stats.p99_keystroke_ms():6.2f} ms")
+
     # show a few suggestions
-    idx = CompletionIndex.build(ds.strings, ds.scores, make_rules(ds.rules),
-                                kind="et", cache_k=16)
     for q in queries[:5]:
         out = idx.complete([q], k=3)[0]
         print(f"  {q!r} -> {[s for _, s in out]}")

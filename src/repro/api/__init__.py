@@ -1,0 +1,35 @@
+"""repro.api — the public completion-index surface (v2).
+
+Layers:
+
+- :class:`IndexSpec` — declarative build specification + pluggable builder
+  registry (``tt`` / ``et`` / ``ht`` / ``plain`` register themselves;
+  new kinds are additive via :func:`register_builder`).
+- :func:`build_index` / :class:`CompletionIndex` — construction, batched
+  top-k lookup with a bounded bucketed compile cache, and versioned
+  ``save``/``load`` persistence.
+- :class:`Session` — stateful per-keystroke completion reusing the locus
+  frontier across calls.
+
+The old ``repro.core.api`` module re-exports this surface for back-compat.
+"""
+
+from repro.api.build import BuildStats, build_index
+from repro.api.compile_cache import CompileCache, bucket_size
+from repro.api.index import CompletionIndex
+from repro.api.session import Session
+from repro.api.spec import (IndexSpec, get_builder, register_builder,
+                            registered_kinds)
+
+__all__ = [
+    "BuildStats",
+    "CompileCache",
+    "CompletionIndex",
+    "IndexSpec",
+    "Session",
+    "bucket_size",
+    "build_index",
+    "get_builder",
+    "register_builder",
+    "registered_kinds",
+]

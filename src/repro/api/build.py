@@ -1,0 +1,179 @@
+"""Index construction: shared host-side pipeline + per-kind rule policies.
+
+``build_index(strings, scores, rules, spec)`` runs Alg. 1 / 3 / 5 of the
+paper (array-encoded): build the dictionary trie, find all rule links,
+ask the spec's registered builder which rules to expand (ET side) vs keep
+in the link store (TT side), then materialize edges, rule trie, optional
+top-K cache, and byte accounting.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.api.spec import (BuildContext, IndexSpec, get_builder,
+                            register_builder)
+from repro.core import engine as eng
+from repro.core import knapsack as ks
+from repro.core import trie_build as tb
+
+
+@dataclass
+class BuildStats:
+    kind: str
+    n_strings: int
+    n_nodes: int
+    n_syn_nodes: int
+    n_links: int
+    n_rules_expanded: int
+    build_seconds: float
+    bytes_total: int
+    bytes_dict_nodes: int
+    bytes_syn_nodes: int
+    bytes_rule_side: int
+    bytes_cache: int
+
+    @property
+    def bytes_per_string(self) -> float:
+        return self.bytes_total / max(self.n_strings, 1)
+
+
+# ---------------------------------------------------------------------------
+# kind-specific rule partitioning (the pluggable part)
+# ---------------------------------------------------------------------------
+
+
+@register_builder("plain")
+def _build_plain(ctx: BuildContext):
+    n = len(ctx.rules)
+    return np.zeros(n, bool), np.zeros(n, bool)
+
+
+@register_builder("tt")
+def _build_tt(ctx: BuildContext):
+    n = len(ctx.rules)
+    return np.zeros(n, bool), np.ones(n, bool)
+
+
+@register_builder("et")
+def _build_et(ctx: BuildContext):
+    n = len(ctx.rules)
+    return np.ones(n, bool), np.zeros(n, bool)
+
+
+@register_builder("ht")
+def _build_ht(ctx: BuildContext):
+    items = ks.analyze_rules(ctx.rules, ctx.anchors, ctx.rids)
+    s_et = int(items.w_orig.sum())  # node-count proxy for S_ET - S_TT
+    budget = int(round(ctx.spec.alpha * s_et))
+    expand_mask = ks.solve_knapsack(items, budget)
+    return expand_mask, ~expand_mask
+
+
+# ---------------------------------------------------------------------------
+# shared pipeline
+# ---------------------------------------------------------------------------
+
+
+def build_index(strings, scores, rules, spec: IndexSpec | None = None,
+                **spec_kwargs):
+    """Build a :class:`repro.api.CompletionIndex` from a spec.
+
+    Either pass a ready ``spec`` or IndexSpec keyword fields (``kind=...``,
+    ``alpha=...``, ...) — not both.
+    """
+    from repro.api.index import CompletionIndex
+
+    if spec is None:
+        spec = IndexSpec(**spec_kwargs)
+    elif spec_kwargs:
+        raise TypeError("pass either spec= or IndexSpec kwargs, not both")
+    spec.validate()
+    builder = get_builder(spec.kind)
+
+    t0 = time.perf_counter()
+    rules = list(rules)
+    trie, ss, sc = tb.build_dict_trie(strings, scores)
+    anchors, rids, targets = tb.find_links(trie, rules)
+    n_rules = len(rules)
+    n_links = len(anchors)
+
+    if n_rules == 0:
+        expand_mask = np.zeros(0, dtype=bool)
+        keep_links = np.zeros(0, dtype=bool)
+    else:
+        ctx = BuildContext(spec=spec, trie=trie, rules=rules,
+                           anchors=anchors, rids=rids, targets=targets)
+        expand_mask, keep_links = builder(ctx)
+        expand_mask = np.asarray(expand_mask, dtype=bool)
+        keep_links = np.asarray(keep_links, dtype=bool)
+
+    n_syn = 0
+    if expand_mask.any():
+        n_syn = tb.expand_synonyms(trie, rules, anchors, rids, targets,
+                                   expand_mask)
+    else:
+        tb.rebuild_edges(trie)
+
+    link_sel = keep_links[rids] if n_links else np.zeros(0, bool)
+    tb.set_link_store(trie, anchors[link_sel], rids[link_sel],
+                      targets[link_sel])
+    # rule trie holds only rules that still live on the rule side
+    active = np.zeros(n_rules, dtype=bool)
+    if n_links:
+        active[np.unique(rids[link_sel])] = True
+    rule_trie = tb.build_rule_trie(rules, active)
+
+    if spec.cache_k > 0:
+        tb.build_topk_cache(trie, spec.cache_k)
+
+    has_rule_side = bool(active.any())
+    cfg = eng.EngineConfig(
+        frontier=spec.frontier, gens=spec.gens, expand=spec.expand,
+        max_steps=spec.max_steps,
+        rule_matches=rule_trie.max_matches_per_pos if has_rule_side else 0,
+        max_lhs_len=rule_trie.max_lhs_len if has_rule_side else 0,
+        max_terms_per_node=rule_trie.max_terms_per_node,
+        teleports=trie.max_syn_targets,
+        use_cache=spec.cache_k > 0, cache_k=spec.cache_k,
+    )
+    stats = _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
+                        len(ss), time.perf_counter() - t0)
+    return CompletionIndex(spec, trie, rule_trie, rules, ss, sc, cfg, stats)
+
+
+def _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
+                n_strings, seconds) -> BuildStats:
+    """Byte accounting (paper Table 2 / Fig. 5 breakdown)."""
+    n_nodes = trie.n_nodes
+    node_bytes = sum(getattr(trie, n).nbytes for n in (
+        "parent", "depth", "chr_", "max_score", "leaf_score", "leaf_sid",
+        "syn_mask", "tout"))
+    edge_bytes = sum(getattr(trie, n).nbytes for n in (
+        "first_child", "edge_char", "edge_child", "emit_ptr", "emit_node",
+        "emit_score", "emit_is_leaf"))
+    syn_edge_bytes = sum(getattr(trie, n).nbytes for n in (
+        "s_first_child", "s_edge_char", "s_edge_child", "syn_ptr",
+        "syn_tgt"))
+    link_bytes = sum(getattr(trie, n).nbytes for n in (
+        "link_anchor", "link_rule", "link_target"))
+    cache_bytes = (trie.topk_score.nbytes + trie.topk_sid.nbytes
+                   if trie.topk_score is not None else 0)
+    syn_frac = n_syn / max(n_nodes, 1)
+    return BuildStats(
+        kind=spec.kind, n_strings=n_strings, n_nodes=n_nodes,
+        n_syn_nodes=n_syn,
+        n_links=int(link_sel.sum()) if len(link_sel) else 0,
+        n_rules_expanded=int(expand_mask.sum()),
+        build_seconds=seconds,
+        bytes_total=node_bytes + edge_bytes + syn_edge_bytes + link_bytes
+        + rule_trie.nbytes() + cache_bytes,
+        bytes_dict_nodes=int((node_bytes + edge_bytes) * (1 - syn_frac)),
+        bytes_syn_nodes=int((node_bytes + edge_bytes) * syn_frac)
+        + syn_edge_bytes,
+        bytes_rule_side=link_bytes + rule_trie.nbytes(),
+        bytes_cache=cache_bytes,
+    )

@@ -1,0 +1,198 @@
+"""CompletionIndex: the queryable, persistable completion index.
+
+Construction lives in :mod:`repro.api.build` (driven by an
+:class:`~repro.api.spec.IndexSpec`); this module owns the device arrays,
+the bounded compile cache, batched lookup with the exactness-retry guard,
+persistence, and the session entry points.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.build import BuildStats, build_index
+from repro.api.compile_cache import CompileCache, bucket_size
+from repro.api.spec import IndexSpec
+from repro.core import engine as eng
+from repro.core import trie_build as tb
+from repro.core.alphabet import pad_queries
+
+
+def _to_device(trie: tb.DictTrie, rule_trie: tb.RuleTrie) -> eng.DeviceTrie:
+    j = jnp.asarray
+    has_cache = trie.topk_score is not None
+    dummy = np.full((1, 1), -1, np.int32)
+    return eng.DeviceTrie(
+        depth=j(trie.depth), max_score=j(trie.max_score),
+        leaf_score=j(trie.leaf_score), leaf_sid=j(trie.leaf_sid),
+        syn_mask=j(trie.syn_mask), tout=j(trie.tout),
+        first_child=j(trie.first_child), edge_char=j(trie.edge_char),
+        edge_child=j(trie.edge_child),
+        s_first_child=j(trie.s_first_child), s_edge_char=j(trie.s_edge_char),
+        s_edge_child=j(trie.s_edge_child),
+        emit_ptr=j(trie.emit_ptr), emit_node=j(trie.emit_node),
+        emit_score=j(trie.emit_score), emit_is_leaf=j(trie.emit_is_leaf),
+        syn_ptr=j(trie.syn_ptr), syn_tgt=j(trie.syn_tgt),
+        link_anchor=j(trie.link_anchor), link_rule=j(trie.link_rule),
+        link_target=j(trie.link_target),
+        r_first_child=j(rule_trie.first_child), r_edge_char=j(rule_trie.edge_char),
+        r_edge_child=j(rule_trie.edge_child), r_term_ptr=j(rule_trie.term_ptr),
+        r_term_rule=j(rule_trie.term_rule), r_rule_len=j(rule_trie.rule_len),
+        topk_score=j(trie.topk_score if has_cache else dummy),
+        topk_sid=j(trie.topk_sid if has_cache else dummy),
+    )
+
+
+class CompletionIndex:
+    """A synonym-aware top-k completion index (TT, ET, HT or plain)."""
+
+    def __init__(self, spec: IndexSpec, trie, rule_trie, rules, strings,
+                 scores, cfg: eng.EngineConfig, stats: BuildStats,
+                 compile_cache_size: int = 32):
+        self.spec = spec
+        self.trie = trie
+        self.rule_trie = rule_trie
+        self.rules = rules
+        self.strings = strings          # sorted; leaf_sid indexes this
+        self.scores = scores
+        self.cfg = cfg
+        self.stats = stats
+        self.device = _to_device(trie, rule_trie)
+        self._compile_cache = CompileCache(maxsize=compile_cache_size)
+
+    @property
+    def kind(self) -> str:
+        return self.spec.kind
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def build(strings, scores, rules, kind: str = "et", *,
+              alpha: float = 0.5, cache_k: int = 0,
+              frontier: int = 32, gens: int = 48, expand: int = 8,
+              max_steps: int = 512) -> "CompletionIndex":
+        """Back-compat keyword constructor; equivalent to
+        ``build_index(strings, scores, rules, IndexSpec(...))``."""
+        spec = IndexSpec(kind=kind, alpha=alpha, cache_k=cache_k,
+                         frontier=frontier, gens=gens, expand=expand,
+                         max_steps=max_steps)
+        return build_index(strings, scores, rules, spec)
+
+    @staticmethod
+    def from_spec(strings, scores, rules,
+                  spec: IndexSpec) -> "CompletionIndex":
+        return build_index(strings, scores, rules, spec)
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Write a versioned npz container; ``CompletionIndex.load(path)``
+        restores it without re-running trie construction."""
+        from repro.api.persist import save_index
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "CompletionIndex":
+        from repro.api.persist import load_index_parts
+        p = load_index_parts(path)
+        return cls(p["spec"], p["trie"], p["rule_trie"], p["rules"],
+                   p["strings"], p["scores"], p["cfg"], p["stats"])
+
+    # -- lookup ------------------------------------------------------------
+
+    def _fn(self, batch: int, length: int, k: int, cfg: eng.EngineConfig):
+        key = ("batch", batch, length, k, cfg)
+
+        def factory():
+            dev = self.device
+
+            @jax.jit
+            def run(qs, qlens):
+                return eng.complete_batch(dev, cfg, qs, qlens, k)
+
+            return run
+
+        return self._compile_cache.get(key, factory)
+
+    def _session_fns(self, k: int):
+        """(init, advance-one-char, topk) jitted for this index's cfg."""
+        key = ("session", k, self.cfg)
+
+        def factory():
+            dev, cfg = self.device, self.cfg
+            init = jax.jit(lambda: eng.init_locus_state(dev, cfg))
+            adv = jax.jit(
+                lambda state, c: eng.advance_locus_state(dev, cfg, state, c))
+            topk = jax.jit(
+                lambda state: eng.topk_from_loci(dev, cfg, state, k))
+            return init, adv, topk
+
+        return self._compile_cache.get(key, factory)
+
+    def session(self, k: int = 10):
+        """Open a stateful incremental-typing session (see
+        :class:`repro.api.session.Session`)."""
+        from repro.api.session import Session
+        return Session(self, k=k)
+
+    def complete_batch_padded(self, qs: np.ndarray, qlens: np.ndarray,
+                              k: int):
+        """Device entry point: qs int32[B, L] (-1 padded). Shapes are
+        bucketed to powers of two before jit so drifting batch sizes share
+        executables. Retries inexact queries with widened search (exactness
+        guard of §2.2)."""
+        B, L = qs.shape
+        Bb, Lb = bucket_size(B, minimum=1), bucket_size(L)
+        if (Bb, Lb) != (B, L):
+            qs = np.pad(qs, ((0, Bb - B), (0, Lb - L)), constant_values=-1)
+            qlens = np.pad(qlens, (0, Bb - B))
+        cfg = self.cfg
+        fn = self._fn(Bb, Lb, k, cfg)
+        scores, sids, exact = jax.tree.map(np.asarray, fn(qs, qlens))
+        bad = ~exact
+        bad[B:] = False
+        if bad.any():   # np.asarray views of jit output are read-only
+            scores, sids = scores.copy(), sids.copy()
+        tries = 0
+        while bad.any() and tries < 3:
+            cfg = replace(cfg, frontier=cfg.frontier * 2, gens=cfg.gens * 4,
+                          max_steps=cfg.max_steps * 4, use_cache=False)
+            sub = np.nonzero(bad)[0]
+            Sb = bucket_size(len(sub), minimum=1)
+            pad_sub = np.pad(sub, (0, Sb - len(sub)))  # repeat row 0: harmless
+            fn2 = self._fn(Sb, Lb, k, cfg)
+            s2, i2, e2 = jax.tree.map(
+                np.asarray, fn2(qs[pad_sub], qlens[pad_sub]))
+            scores[sub], sids[sub] = s2[:len(sub)], i2[:len(sub)]
+            bad2 = np.zeros_like(bad)
+            bad2[sub] = ~e2[:len(sub)]
+            bad = bad2
+            tries += 1
+        return scores[:B], sids[:B]
+
+    def complete(self, queries: list[str | bytes], k: int = 10):
+        """Top-k completions for a batch of query strings.
+
+        Returns a list (per query) of (score, suggestion string) pairs.
+        """
+        max_len = max((len(q.encode() if isinstance(q, str) else q)
+                       for q in queries), default=1)
+        qs, qlens = pad_queries(queries, max(max_len, 1))
+        scores, sids = self.complete_batch_padded(qs, qlens, k)
+        out = []
+        for b in range(len(queries)):
+            out.append(self._decode_row(scores[b], sids[b]))
+        return out
+
+    def _decode_row(self, scores, sids) -> list[tuple[int, str]]:
+        row = []
+        for score, sid in zip(scores, sids):
+            if score < 0 or sid < 0:
+                continue
+            row.append((int(score), self.strings[int(sid)].decode(
+                "utf-8", errors="replace")))
+        return row

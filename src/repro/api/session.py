@@ -1,0 +1,72 @@
+"""Stateful incremental typing sessions.
+
+A real autocomplete workload is per-keystroke: each query extends the
+previous prefix by one char.  ``Session`` carries the engine's resumable
+:class:`~repro.core.engine.LocusState` across keystrokes, so typing
+``"Andy P"`` then ``"a"`` advances the existing locus frontier by one
+char-step instead of re-running the full locus DP over the prefix.
+
+A state snapshot is kept per typed char, so ``backspace()`` restores the
+previous frontier without replay.  When the fixed-width frontier ever
+overflowed (state inexact), top-k falls back to the one-shot
+``index.complete`` path, which widens the search until exact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+class Session:
+    """Per-user incremental completion session over a CompletionIndex."""
+
+    def __init__(self, index, k: int = 10):
+        self.index = index
+        self.k = k
+        self._init, self._advance, self._topk = index._session_fns(k)
+        self._prefix = bytearray()
+        self._states = [jax.block_until_ready(self._init())]
+
+    # -- typing ------------------------------------------------------------
+
+    @property
+    def prefix(self) -> str:
+        return bytes(self._prefix).decode("utf-8", errors="replace")
+
+    def type(self, text: str | bytes) -> list[tuple[int, str]]:
+        """Append keystrokes and return the top-k for the new prefix."""
+        data = text.encode() if isinstance(text, str) else bytes(text)
+        for byte in data:
+            self._states.append(
+                self._advance(self._states[-1], np.int32(byte)))
+            self._prefix.append(byte)
+        return self.topk()
+
+    def backspace(self, n: int = 1) -> list[tuple[int, str]]:
+        """Remove the last ``n`` keystrokes (restores the saved frontier)."""
+        n = min(n, len(self._prefix))
+        if n:
+            del self._states[len(self._states) - n:]
+            del self._prefix[len(self._prefix) - n:]
+        return self.topk()
+
+    def reset(self) -> None:
+        del self._states[1:]
+        self._prefix.clear()
+
+    # -- lookup ------------------------------------------------------------
+
+    def topk(self, k: int | None = None) -> list[tuple[int, str]]:
+        """Top-k (score, suggestion) pairs for the current prefix."""
+        if k is not None and k != self.k:
+            # different k: no compiled session fn for it; one-shot path
+            return self.index.complete([bytes(self._prefix)], k=k)[0]
+        scores, sids, exact = jax.tree.map(
+            np.asarray, self._topk(self._states[-1]))
+        if not bool(exact):
+            # frontier overflow or beam inexactness: the widened one-shot
+            # retry path recovers exactness from the raw prefix
+            return self.index.complete([bytes(self._prefix)], k=self.k)[0]
+        return self.index._decode_row(scores, sids)

@@ -1,0 +1,115 @@
+"""Declarative index specification + pluggable builder registry.
+
+An :class:`IndexSpec` captures *what* index to build (kind, HT space budget,
+cache depth) and the static engine widths that become the jit shape key —
+replacing the keyword soup of the old ``CompletionIndex.build(...)``.  The
+per-kind rule-partitioning policies (``tt`` / ``et`` / ``ht`` / ``plain``)
+register themselves in a builder registry, so a new index kind is an
+additive ``@register_builder("<kind>")`` away.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core import trie_build as tb
+
+
+@dataclass(frozen=True)
+class IndexSpec:
+    """Everything needed to (re)build a completion index, minus the data.
+
+    kind: "tt" (twin tries), "et" (expansion trie), "ht" (hybrid), or
+        "plain" (prefix-only, no synonym support) — or any kind added to
+        the registry via :func:`register_builder`.
+    alpha: HT space ratio in [0, 1] (paper Fig. 8); ignored by other kinds.
+    cache_k: materialize per-node top-K lists (0 = off; beyond-paper).
+    frontier/gens/expand/max_steps: static engine widths (jit shape key).
+    """
+
+    kind: str = "et"
+    alpha: float = 0.5
+    cache_k: int = 0
+    frontier: int = 32
+    gens: int = 48
+    expand: int = 8
+    max_steps: int = 512
+
+    def validate(self) -> "IndexSpec":
+        if self.kind not in _BUILDERS:
+            raise ValueError(
+                f"unknown index kind {self.kind!r}; registered kinds: "
+                f"{registered_kinds()}")
+        if not 0.0 <= self.alpha <= 1.0:
+            raise ValueError(f"alpha must be in [0, 1], got {self.alpha}")
+        for name in ("cache_k",):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+        for name in ("frontier", "gens", "expand", "max_steps"):
+            if getattr(self, name) <= 0:
+                raise ValueError(f"{name} must be positive")
+        return self
+
+    def replace(self, **kw) -> "IndexSpec":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IndexSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known}).validate()
+
+
+@dataclass
+class BuildContext:
+    """What a kind-specific builder sees: the pure dictionary trie plus the
+    full link candidate set (anchor, rule, target) found on it."""
+
+    spec: IndexSpec
+    trie: tb.DictTrie
+    rules: list[tb.SynonymRule]
+    anchors: np.ndarray  # int32[L]
+    rids: np.ndarray     # int32[L]
+    targets: np.ndarray  # int32[L]
+
+
+# A builder decides, per rule, whether it is expanded into synonym branches
+# (ET side) and/or kept in the link store (TT side).
+Builder = Callable[[BuildContext], tuple[np.ndarray, np.ndarray]]
+
+_BUILDERS: dict[str, Builder] = {}
+
+
+def register_builder(kind: str):
+    """Register a rule-partitioning policy for an index kind.
+
+    The decorated function maps a :class:`BuildContext` to boolean masks
+    ``(expand_mask[R], keep_links[R])`` over rule ids.
+    """
+
+    def deco(fn: Builder) -> Builder:
+        if kind in _BUILDERS:
+            raise ValueError(f"index kind {kind!r} already registered")
+        _BUILDERS[kind] = fn
+        return fn
+
+    return deco
+
+
+def get_builder(kind: str) -> Builder:
+    try:
+        return _BUILDERS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown index kind {kind!r}; registered kinds: "
+            f"{registered_kinds()}") from None
+
+
+def registered_kinds() -> list[str]:
+    return sorted(_BUILDERS)

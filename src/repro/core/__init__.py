@@ -1,16 +1,31 @@
 """Core: the paper's contribution — synonym-aware top-k string completion."""
 
-from repro.core.api import BuildStats, CompletionIndex
 from repro.core.engine import DeviceTrie, EngineConfig
 from repro.core.oracle import OracleIndex
 from repro.core.trie_build import SynonymRule, make_rules
+
+# The index/API layer lives in repro.api, which itself builds on the
+# submodules above — resolve those names lazily (PEP 562) so importing
+# repro.core.trie_build from repro.api doesn't recurse through this package.
+_API_NAMES = ("BuildStats", "CompletionIndex", "IndexSpec", "Session",
+              "build_index")
 
 __all__ = [
     "BuildStats",
     "CompletionIndex",
     "DeviceTrie",
     "EngineConfig",
+    "IndexSpec",
     "OracleIndex",
+    "Session",
     "SynonymRule",
+    "build_index",
     "make_rules",
 ]
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from repro.core import api as _api
+        return getattr(_api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,242 +1,20 @@
-"""Public API: build TT / ET / HT completion indexes and serve top-k queries.
+"""Back-compat shim: the public API moved to :mod:`repro.api`.
 
-`CompletionIndex.build(...)` is the host-side constructor (Alg. 1 / 3 / 5 of
-the paper, array-encoded); `.complete(...)` is the device-side batched top-k
-(Alg. 2 / 4, vectorized) with automatic exactness retry.
+``CompletionIndex.build(...)`` / ``.complete(...)`` keep working from this
+import path; new code should use ``repro.api`` (IndexSpec, build_index,
+Session, save/load).
 """
 
-from __future__ import annotations
+from repro.api.build import BuildStats, build_index
+from repro.api.index import CompletionIndex, _to_device
+from repro.api.session import Session
+from repro.api.spec import IndexSpec
 
-import time
-from dataclasses import dataclass, replace
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import engine as eng
-from repro.core import knapsack as ks
-from repro.core import trie_build as tb
-from repro.core.alphabet import pad_queries
-
-
-def _to_device(trie: tb.DictTrie, rule_trie: tb.RuleTrie) -> eng.DeviceTrie:
-    j = jnp.asarray
-    has_cache = trie.topk_score is not None
-    dummy = np.full((1, 1), -1, np.int32)
-    return eng.DeviceTrie(
-        depth=j(trie.depth), max_score=j(trie.max_score),
-        leaf_score=j(trie.leaf_score), leaf_sid=j(trie.leaf_sid),
-        syn_mask=j(trie.syn_mask), tout=j(trie.tout),
-        first_child=j(trie.first_child), edge_char=j(trie.edge_char),
-        edge_child=j(trie.edge_child),
-        s_first_child=j(trie.s_first_child), s_edge_char=j(trie.s_edge_char),
-        s_edge_child=j(trie.s_edge_child),
-        emit_ptr=j(trie.emit_ptr), emit_node=j(trie.emit_node),
-        emit_score=j(trie.emit_score), emit_is_leaf=j(trie.emit_is_leaf),
-        syn_ptr=j(trie.syn_ptr), syn_tgt=j(trie.syn_tgt),
-        link_anchor=j(trie.link_anchor), link_rule=j(trie.link_rule),
-        link_target=j(trie.link_target),
-        r_first_child=j(rule_trie.first_child), r_edge_char=j(rule_trie.edge_char),
-        r_edge_child=j(rule_trie.edge_child), r_term_ptr=j(rule_trie.term_ptr),
-        r_term_rule=j(rule_trie.term_rule), r_rule_len=j(rule_trie.rule_len),
-        topk_score=j(trie.topk_score if has_cache else dummy),
-        topk_sid=j(trie.topk_sid if has_cache else dummy),
-    )
-
-
-@dataclass
-class BuildStats:
-    kind: str
-    n_strings: int
-    n_nodes: int
-    n_syn_nodes: int
-    n_links: int
-    n_rules_expanded: int
-    build_seconds: float
-    bytes_total: int
-    bytes_dict_nodes: int
-    bytes_syn_nodes: int
-    bytes_rule_side: int
-    bytes_cache: int
-
-    @property
-    def bytes_per_string(self) -> float:
-        return self.bytes_total / max(self.n_strings, 1)
-
-
-class CompletionIndex:
-    """A synonym-aware top-k completion index (TT, ET or HT)."""
-
-    def __init__(self, kind, trie, rule_trie, rules, strings, scores,
-                 cfg: eng.EngineConfig, stats: BuildStats):
-        self.kind = kind
-        self.trie = trie
-        self.rule_trie = rule_trie
-        self.rules = rules
-        self.strings = strings          # sorted; leaf_sid indexes this
-        self.scores = scores
-        self.cfg = cfg
-        self.stats = stats
-        self.device = _to_device(trie, rule_trie)
-        self._compiled: dict = {}
-
-    # -- construction ------------------------------------------------------
-
-    @staticmethod
-    def build(strings, scores, rules, kind: str = "et", *,
-              alpha: float = 0.5, cache_k: int = 0,
-              frontier: int = 32, gens: int = 48, expand: int = 8,
-              max_steps: int = 512) -> "CompletionIndex":
-        """Build an index.
-
-        kind: "tt" (twin tries), "et" (expansion trie), "ht" (hybrid; alpha
-        in [0,1] sets the space budget between S_TT and S_ET), or "plain"
-        (no synonym support — classic prefix-only trie).
-        alpha: HT space ratio (paper Fig. 8).
-        cache_k: materialize per-node top-K lists (0 = off; beyond-paper).
-        """
-        t0 = time.perf_counter()
-        rules = list(rules)
-        trie, ss, sc = tb.build_dict_trie(strings, scores)
-        anchors, rids, targets = tb.find_links(trie, rules)
-        n_rules = len(rules)
-        n_links = len(anchors)
-
-        if kind == "plain" or n_rules == 0:
-            expand_mask = np.zeros(n_rules, dtype=bool)
-            keep_links = np.zeros(n_rules, dtype=bool)
-        elif kind == "tt":
-            expand_mask = np.zeros(n_rules, dtype=bool)
-            keep_links = np.ones(n_rules, dtype=bool)
-        elif kind == "et":
-            expand_mask = np.ones(n_rules, dtype=bool)
-            keep_links = np.zeros(n_rules, dtype=bool)
-        elif kind == "ht":
-            items = ks.analyze_rules(rules, anchors, rids)
-            s_et = int(items.w_orig.sum())  # node-count proxy for S_ET - S_TT
-            budget = int(round(alpha * s_et))
-            expand_mask = ks.solve_knapsack(items, budget)
-            keep_links = ~expand_mask
-        else:
-            raise ValueError(f"unknown index kind {kind!r}")
-
-        n_syn = 0
-        if expand_mask.any():
-            n_syn = tb.expand_synonyms(trie, rules, anchors, rids, targets,
-                                       expand_mask)
-        else:
-            tb.rebuild_edges(trie)
-
-        link_sel = keep_links[rids] if n_links else np.zeros(0, bool)
-        tb.set_link_store(trie, anchors[link_sel], rids[link_sel],
-                          targets[link_sel])
-        # rule trie holds only rules that still live on the rule side
-        active = np.zeros(n_rules, dtype=bool)
-        if n_links:
-            active[np.unique(rids[link_sel])] = True
-        rule_trie = tb.build_rule_trie(rules, active)
-
-        if cache_k > 0:
-            tb.build_topk_cache(trie, cache_k)
-
-        has_rule_side = bool(active.any())
-        cfg = eng.EngineConfig(
-            frontier=frontier, gens=gens, expand=expand, max_steps=max_steps,
-            rule_matches=rule_trie.max_matches_per_pos if has_rule_side else 0,
-            max_lhs_len=rule_trie.max_lhs_len if has_rule_side else 0,
-            max_terms_per_node=rule_trie.max_terms_per_node,
-            teleports=trie.max_syn_targets,
-            use_cache=cache_k > 0, cache_k=cache_k,
-        )
-
-        # byte accounting (paper Table 2 / Fig. 5 breakdown)
-        per_node = 0
-        for name in ("parent", "depth", "chr_", "max_score", "leaf_score",
-                     "leaf_sid", "syn_mask", "tout"):
-            per_node += getattr(trie, name).itemsize if getattr(trie, name).ndim else 0
-        n_nodes = trie.n_nodes
-        node_bytes = sum(getattr(trie, n).nbytes for n in (
-            "parent", "depth", "chr_", "max_score", "leaf_score", "leaf_sid",
-            "syn_mask", "tout"))
-        edge_bytes = sum(getattr(trie, n).nbytes for n in (
-            "first_child", "edge_char", "edge_child", "emit_ptr", "emit_node",
-            "emit_score", "emit_is_leaf"))
-        syn_edge_bytes = sum(getattr(trie, n).nbytes for n in (
-            "s_first_child", "s_edge_char", "s_edge_child", "syn_ptr",
-            "syn_tgt"))
-        link_bytes = sum(getattr(trie, n).nbytes for n in (
-            "link_anchor", "link_rule", "link_target"))
-        cache_bytes = (trie.topk_score.nbytes + trie.topk_sid.nbytes
-                       if trie.topk_score is not None else 0)
-        syn_frac = n_syn / max(n_nodes, 1)
-        stats = BuildStats(
-            kind=kind, n_strings=len(ss), n_nodes=n_nodes, n_syn_nodes=n_syn,
-            n_links=int(link_sel.sum()) if n_links else 0,
-            n_rules_expanded=int(expand_mask.sum()),
-            build_seconds=time.perf_counter() - t0,
-            bytes_total=node_bytes + edge_bytes + syn_edge_bytes + link_bytes
-            + rule_trie.nbytes() + cache_bytes,
-            bytes_dict_nodes=int((node_bytes + edge_bytes) * (1 - syn_frac)),
-            bytes_syn_nodes=int((node_bytes + edge_bytes) * syn_frac)
-            + syn_edge_bytes,
-            bytes_rule_side=link_bytes + rule_trie.nbytes(),
-            bytes_cache=cache_bytes,
-        )
-        return CompletionIndex(kind, trie, rule_trie, rules, ss, sc, cfg, stats)
-
-    # -- lookup ------------------------------------------------------------
-
-    def _fn(self, batch: int, length: int, k: int, cfg: eng.EngineConfig):
-        key = (batch, length, k, cfg)
-        if key not in self._compiled:
-            dev = self.device
-
-            @jax.jit
-            def run(qs, qlens):
-                return eng.complete_batch(dev, cfg, qs, qlens, k)
-
-            self._compiled[key] = run
-        return self._compiled[key]
-
-    def complete_batch_padded(self, qs: np.ndarray, qlens: np.ndarray, k: int):
-        """Device entry point: qs int32[B, L] (-1 padded). Retries inexact
-        queries with widened search (exactness guard of §2.2)."""
-        cfg = self.cfg
-        fn = self._fn(qs.shape[0], qs.shape[1], k, cfg)
-        scores, sids, exact = jax.tree.map(np.asarray, fn(qs, qlens))
-        bad = ~exact
-        tries = 0
-        while bad.any() and tries < 3:
-            cfg = replace(cfg, frontier=cfg.frontier * 2, gens=cfg.gens * 4,
-                          max_steps=cfg.max_steps * 4, use_cache=False)
-            sub = np.nonzero(bad)[0]
-            fn2 = self._fn(len(sub), qs.shape[1], k, cfg)
-            s2, i2, e2 = jax.tree.map(np.asarray, fn2(qs[sub], qlens[sub]))
-            scores[sub], sids[sub] = s2, i2
-            bad2 = np.zeros_like(bad)
-            bad2[sub] = ~e2
-            bad = bad2
-            tries += 1
-        return scores, sids
-
-    def complete(self, queries: list[str | bytes], k: int = 10):
-        """Top-k completions for a batch of query strings.
-
-        Returns a list (per query) of (score, suggestion string) pairs.
-        """
-        max_len = max((len(q.encode() if isinstance(q, str) else q)
-                       for q in queries), default=1)
-        L = max(8, 1 << (max_len - 1).bit_length())
-        qs, qlens = pad_queries(queries, L)
-        scores, sids = self.complete_batch_padded(qs, qlens, k)
-        out = []
-        for b in range(len(queries)):
-            row = []
-            for score, sid in zip(scores[b], sids[b]):
-                if score < 0 or sid < 0:
-                    continue
-                row.append((int(score), self.strings[int(sid)].decode(
-                    "utf-8", errors="replace")))
-            out.append(row)
-        return out
+__all__ = [
+    "BuildStats",
+    "CompletionIndex",
+    "IndexSpec",
+    "Session",
+    "build_index",
+    "_to_device",
+]

@@ -10,7 +10,8 @@ dictionaries scale to billions of strings across pods.
 
 from __future__ import annotations
 
-import dataclasses
+import json
+import os
 from functools import partial
 
 import jax
@@ -19,8 +20,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.api import CompletionIndex, IndexSpec, build_index
 from repro.core import engine as eng
-from repro.core.api import CompletionIndex, _to_device
 
 
 def shard_strings(strings, scores, n_shards: int):
@@ -115,25 +116,81 @@ def sharded_complete(stacked: eng.DeviceTrie, cfg: eng.EngineConfig,
 
 
 class ShardedCompletionIndex:
-    """Host-facing wrapper: build shards, stack, serve over a mesh."""
+    """Host-facing wrapper: build shards, stack, serve over a mesh.
 
-    def __init__(self, strings, scores, rules, *, mesh, kind="et",
-                 model_axis="model", data_axes=("data",), **build_kwargs):
+    Shards share one :class:`IndexSpec`; ``save``/``load`` persist every
+    shard's npz container so a serving process restarts without rebuilding
+    any sub-trie.
+    """
+
+    def __init__(self, strings, scores, rules, *, mesh, kind=None,
+                 model_axis="model", data_axes=("data",), spec=None,
+                 **build_kwargs):
+        if spec is None:
+            spec = IndexSpec(kind=kind or "et", **build_kwargs)
+        elif kind is not None or build_kwargs:
+            raise TypeError("pass either spec= or IndexSpec kwargs, not both")
+        n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+        buckets = shard_strings(strings, scores, n_shards)
+        shards = [
+            build_index(b[0] if b[0] else [""], b[1] if b[1] else [1],
+                        rules, spec=spec)
+            for b in buckets
+        ]
+        self._init_from_shards(shards, mesh=mesh, model_axis=model_axis,
+                               data_axes=data_axes, spec=spec)
+
+    def _init_from_shards(self, shards, *, mesh, model_axis, data_axes,
+                          spec):
         self.mesh = mesh
         self.model_axis = model_axis
         self.data_axes = data_axes
-        n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
-        buckets = shard_strings(strings, scores, n_shards)
-        self.shards = [
-            CompletionIndex.build(b[0] if b[0] else [""], b[1] if b[1] else [1],
-                                  rules, kind=kind, **build_kwargs)
-            for b in buckets
-        ]
+        self.spec = spec
+        self.shards = shards
         stacked, self.cfg, self.stride = stack_shards(self.shards)
         sharding = NamedSharding(mesh, P(model_axis))
         self.device_tries = jax.tree.map(
             lambda x: jax.device_put(x, sharding), stacked,
             is_leaf=lambda x: isinstance(x, np.ndarray))
+
+    @classmethod
+    def from_shards(cls, shards, *, mesh, model_axis="model",
+                    data_axes=("data",), spec=None):
+        """Wrap already-built per-shard indexes (skips construction)."""
+        self = cls.__new__(cls)
+        self._init_from_shards(shards, mesh=mesh, model_axis=model_axis,
+                               data_axes=data_axes,
+                               spec=spec or shards[0].spec)
+        return self
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Write a directory: meta.json + one npz container per shard."""
+        os.makedirs(path, exist_ok=True)
+        for i, shard in enumerate(self.shards):
+            shard.save(os.path.join(path, f"shard_{i:04d}.npz"))
+        meta = {"format_version": 1, "n_shards": len(self.shards),
+                "spec": self.spec.to_dict()}
+        with open(os.path.join(path, "meta.json"), "w") as f:
+            json.dump(meta, f)
+
+    @classmethod
+    def load(cls, path: str, *, mesh, model_axis="model",
+             data_axes=("data",)) -> "ShardedCompletionIndex":
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        n_shards = meta["n_shards"]
+        mesh_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+        if n_shards != mesh_shards:
+            raise ValueError(
+                f"saved index has {n_shards} shards but mesh axis "
+                f"{model_axis!r} has {mesh_shards} devices")
+        shards = [CompletionIndex.load(os.path.join(path, f"shard_{i:04d}.npz"))
+                  for i in range(n_shards)]
+        return cls.from_shards(shards, mesh=mesh, model_axis=model_axis,
+                               data_axes=data_axes,
+                               spec=IndexSpec.from_dict(meta["spec"]))
 
     def lookup_string(self, gsid: int) -> str:
         shard, sid = divmod(int(gsid), self.stride)

@@ -235,6 +235,26 @@ def _link_lookup(t: DeviceTrie, anchors: jax.Array, rid: jax.Array):
     return jnp.where(found, t.link_target[jnp.clip(pos, 0, n_link - 1)], NEG_ONE)
 
 
+def finalize_loci(t: DeviceTrie, row: jax.Array) -> jax.Array:
+    """Turn a (teleport-expanded) frontier row into the final locus antichain:
+    drop mid-variant synonym nodes, dedup, and remove covered descendants."""
+    F = row.shape[0]
+    # strict semantics: drop mid-variant (synonym) loci
+    is_syn = t.syn_mask[jnp.where(row >= 0, row, 0)]
+    row = jnp.where((row >= 0) & ~is_syn, row, NEG_ONE)
+    row, _ = _dedup_pad(row, F)
+    # antichain reduction via preorder intervals: drop descendants
+    tin = jnp.where(row >= 0, row, NEG_ONE)
+    to = t.tout[jnp.where(row >= 0, row, 0)]
+    covered = (
+        (tin[None, :] <= tin[:, None]) & (tin[:, None] < to[None, :])
+        & (jnp.arange(F)[None, :] != jnp.arange(F)[:, None])
+        & (row[None, :] >= 0) & (row[:, None] >= 0)
+    ).any(axis=1)
+    # ties: identical ids already removed by dedup; strict ancestor covers
+    return jnp.where(covered, NEG_ONE, row)
+
+
 def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array):
     """Locus set after consuming the whole query under all rewritings.
 
@@ -298,21 +318,120 @@ def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array):
     row = jax.lax.dynamic_slice(buf, (jnp.clip(qlen, 0, L), 0), (1, F))[0]
     row, drop = _teleport_expand(t, cfg, row)
     overflow += drop
-    # strict semantics: drop mid-variant (synonym) loci
-    is_syn = t.syn_mask[jnp.where(row >= 0, row, 0)]
-    row = jnp.where((row >= 0) & ~is_syn, row, NEG_ONE)
-    row, _ = _dedup_pad(row, F)
-    # antichain reduction via preorder intervals: drop descendants
-    tin = jnp.where(row >= 0, row, NEG_ONE)
-    to = t.tout[jnp.where(row >= 0, row, 0)]
-    covered = (
-        (tin[None, :] <= tin[:, None]) & (tin[:, None] < to[None, :])
-        & (jnp.arange(F)[None, :] != jnp.arange(F)[:, None])
-        & (row[None, :] >= 0) & (row[:, None] >= 0)
-    ).any(axis=1)
-    # ties: identical ids already removed by dedup; strict ancestor covers
-    row = jnp.where(covered, NEG_ONE, row)
-    return row, overflow
+    return finalize_loci(t, row), overflow
+
+
+# ---------------------------------------------------------------------------
+# phase 1': incremental locus DP (stateful per-keystroke sessions)
+# ---------------------------------------------------------------------------
+
+
+class LocusState(NamedTuple):
+    """Resumable locus-DP state after consuming some prefix.
+
+    rows[0] is the teleport-expanded frontier for the full prefix; rows[j]
+    (j < max_lhs_len) is the frontier j keystrokes ago.  The history window
+    is required because a synonym rule whose lhs ends at the newest char
+    anchors at the frontier of the position where the lhs *started*.
+    rnodes[j] is the rule-trie node for the walk over the last j+1 chars
+    (-1 once the walk dies), so full-lhs matches ending at the newest char
+    are recognised without rescanning the prefix.
+    """
+
+    rows: jax.Array      # int32[H, F] expanded frontier rows, newest first
+    rnodes: jax.Array    # int32[H]   rule-trie suffix walks, shortest first
+    overflow: jax.Array  # int32      accumulated frontier drops (0 => exact)
+    length: jax.Array    # int32      chars consumed
+
+
+def init_locus_state(t: DeviceTrie, cfg: EngineConfig) -> LocusState:
+    """State for the empty prefix (locus = expanded root)."""
+    F = cfg.frontier
+    H = max(cfg.max_lhs_len, 1)
+    row = jnp.full((F,), NEG_ONE, jnp.int32).at[0].set(0)
+    row, drop = _teleport_expand(t, cfg, row)
+    rows = jnp.full((H, F), NEG_ONE, jnp.int32).at[0].set(row)
+    return LocusState(rows=rows,
+                      rnodes=jnp.full((H,), NEG_ONE, jnp.int32),
+                      overflow=jnp.int32(0) + drop,
+                      length=jnp.int32(0))
+
+
+def advance_locus_state(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
+                        c) -> LocusState:
+    """One keystroke: extend the frontier by char ``c`` (no-op when c < 0).
+
+    Equivalent to one step of ``locus_dp`` — literal dict/synonym-branch
+    children of the current frontier, plus link-store steps for every rule
+    whose lhs ends exactly at the new char — but reuses the carried frontier
+    instead of rescanning the prefix.
+    """
+    F = cfg.frontier
+    H = state.rows.shape[0]
+    c = jnp.asarray(c, jnp.int32)
+    row = state.rows[0]
+
+    d_iters = _iters_for(int(t.edge_char.shape[0]))
+    parts = [_csr_child_lookup(t.first_child, t.edge_char, t.edge_child,
+                               row, c, d_iters)]
+    if int(t.s_edge_child.shape[0]) > 0:
+        s_iters = _iters_for(int(t.s_edge_char.shape[0]))
+        parts.append(_csr_child_lookup(t.s_first_child, t.s_edge_char,
+                                       t.s_edge_child, row, c, s_iters))
+
+    rnodes = state.rnodes
+    if cfg.rule_matches > 0 and cfg.max_lhs_len > 0:
+        r_iters = _iters_for(int(t.r_edge_char.shape[0]))
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  state.rnodes[:-1]])
+        rnodes = _csr_child_lookup(t.r_first_child, t.r_edge_char,
+                                   t.r_edge_child, starts, c, r_iters)
+        r_size = max(int(t.r_term_rule.shape[0]), 1)
+        for j in range(H):
+            node = rnodes[j]
+            ok = node >= 0
+            nn = jnp.where(ok, node, 0)
+            t_lo = t.r_term_ptr[nn]
+            t_hi = t.r_term_ptr[nn + 1]
+            # lhs of length j+1 anchors at the frontier j keystrokes back
+            anchor_row = state.rows[j]
+            anchor_ok = anchor_row >= 0
+            anchor_ok &= ~t.syn_mask[jnp.where(anchor_row >= 0, anchor_row, 0)]
+            anchors = jnp.where(anchor_ok, anchor_row, NEG_ONE)
+            for j2 in range(cfg.max_terms_per_node):
+                has = ok & (t_lo + j2 < t_hi)
+                rid = t.r_term_rule[jnp.clip(t_lo + j2, 0, r_size - 1)]
+                tgt = _link_lookup(t, anchors, rid)
+                parts.append(jnp.where(has, tgt, NEG_ONE))
+
+    merged, d1 = _dedup_pad(jnp.concatenate(parts), F)
+    merged, d2 = _teleport_expand(t, cfg, merged)
+    new_rows = jnp.concatenate([merged[None], state.rows[:-1]], axis=0)
+    ok = c >= 0
+    return LocusState(
+        rows=jnp.where(ok, new_rows, state.rows),
+        rnodes=jnp.where(ok, rnodes, state.rnodes),
+        overflow=state.overflow + jnp.where(ok, d1 + d2, 0),
+        length=state.length + jnp.where(ok, 1, 0),
+    )
+
+
+def advance_loci(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
+                 chars: jax.Array) -> LocusState:
+    """Extend the state by a fixed-shape char vector (-1 entries ignored)."""
+    def step(s, c):
+        return advance_locus_state(t, cfg, s, c), None
+
+    state, _ = jax.lax.scan(step, state, jnp.asarray(chars, jnp.int32))
+    return state
+
+
+def topk_from_loci(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
+                   k: int):
+    """Top-k for the prefix carried by ``state`` (scores, sids, exact)."""
+    loci = finalize_loci(t, state.rows[0])
+    scores, sids, exact = topk_phase2(t, cfg, loci, k)
+    return scores, sids, exact & (state.overflow == 0)
 
 
 # ---------------------------------------------------------------------------
@@ -431,13 +550,17 @@ def cached_topk(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
 # ---------------------------------------------------------------------------
 
 
+def topk_phase2(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
+    """Phase-2 dispatch: cached merge when materialized and k fits, else beam."""
+    if cfg.use_cache and k <= cfg.cache_k:
+        return cached_topk(t, cfg, loci, k)
+    return beam_topk(t, cfg, loci, k)
+
+
 def complete_one(t: DeviceTrie, cfg: EngineConfig, q: jax.Array,
                  qlen: jax.Array, k: int):
     loci, overflow = locus_dp(t, cfg, q, qlen)
-    if cfg.use_cache and k <= cfg.cache_k:
-        scores, sids, exact = cached_topk(t, cfg, loci, k)
-    else:
-        scores, sids, exact = beam_topk(t, cfg, loci, k)
+    scores, sids, exact = topk_phase2(t, cfg, loci, k)
     exact &= overflow == 0
     return scores, sids, exact
 

@@ -1,10 +1,12 @@
 """Serving launcher.
 
   python -m repro.launch.serve --arch autocomplete-usps --queries 1000
+  python -m repro.launch.serve --arch autocomplete-usps --workload keystroke
   python -m repro.launch.serve --arch qwen2.5-14b --smoke   (LM decode)
 
-For autocomplete archs this is the paper's end-to-end system: build the
-index from the matching dataset generator, replay a workload, report
+For autocomplete archs this is the paper's end-to-end system: build (or
+``--load-index``) the index, replay a workload — one-shot batches or an
+incremental per-keystroke stream through stateful sessions — and report
 latency/throughput (Fig. 7-style numbers).
 """
 
@@ -17,22 +19,34 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import all_archs
+from repro.api import IndexSpec, build_index
 from repro.core import CompletionIndex, make_rules
+from repro.configs import all_archs
 from repro.data.strings import DATASETS, make_workload
 from repro.serving import CompletionService, LMServer, Request
 
 
-def serve_autocomplete(spec, args):
+def _make_index(spec, args):
+    """Build the index from the arch's dataset, or restore a saved one."""
     name = spec.arch_id.split("-")[-1]
     cfg = spec.make_config()
     n = min(cfg.n_strings, args.n_strings)
     ds = DATASETS[name](n=n, seed=0)
     t0 = time.perf_counter()
-    idx = CompletionIndex.build(
-        ds.strings, ds.scores, make_rules(ds.rules), kind=args.index_kind,
-        cache_k=args.cache_k)
+    if args.load_index:
+        idx = CompletionIndex.load(args.load_index)
+    else:
+        idx = build_index(
+            ds.strings, ds.scores, make_rules(ds.rules),
+            IndexSpec(kind=args.index_kind, cache_k=args.cache_k))
     build_s = time.perf_counter() - t0
+    if args.save_index:
+        idx.save(args.save_index)
+    return ds, idx, build_s
+
+
+def serve_autocomplete(spec, args):
+    ds, idx, build_s = _make_index(spec, args)
     svc = CompletionService(idx)
     queries = make_workload(ds, args.queries, seed=1)
     # warmup + timed batches
@@ -45,13 +59,44 @@ def serve_autocomplete(spec, args):
     dt = time.perf_counter() - t0
     hit = sum(bool(r) for r in results) / max(len(results), 1)
     out = {
-        "arch": spec.arch_id, "kind": args.index_kind,
+        "arch": spec.arch_id, "kind": idx.kind,
+        "workload": "batch",
         "n_strings": idx.stats.n_strings,
         "bytes_per_string": round(idx.stats.bytes_per_string, 1),
         "build_seconds": round(build_s, 2),
         "queries": len(results),
         "us_per_completion": round(dt / max(len(results), 1) * 1e6, 1),
         "hit_rate": round(hit, 3),
+    }
+    print(json.dumps(out))
+    return out
+
+
+def serve_keystroke(spec, args):
+    """Incremental replay: every query is typed char-by-char through a
+    stateful session, i.e. the per-keystroke serving contract."""
+    ds, idx, build_s = _make_index(spec, args)
+    svc = CompletionService(idx)
+    queries = make_workload(ds, args.queries, seed=1)
+    sess = svc.open_session(k=10)
+    sess.type(queries[0])                         # compile/warmup
+    svc.stats.reset_keystrokes()
+    hits = 0
+    for q in queries:
+        sess.reset()
+        rows = sess.type(q)
+        hits += bool(rows)
+    st = svc.stats
+    out = {
+        "arch": spec.arch_id, "kind": idx.kind,
+        "workload": "keystroke",
+        "n_strings": idx.stats.n_strings,
+        "build_seconds": round(build_s, 2),
+        "queries": len(queries),
+        "keystrokes": st.n_keystrokes,
+        "us_per_keystroke": round(st.mean_keystroke_ms * 1e3, 1),
+        "p99_keystroke_ms": round(st.p99_keystroke_ms(), 3),
+        "hit_rate": round(hits / max(len(queries), 1), 3),
     }
     print(json.dumps(out))
     return out
@@ -91,12 +136,21 @@ def main():
     ap.add_argument("--index-kind", default="et",
                     choices=["tt", "et", "ht", "plain"])
     ap.add_argument("--cache-k", type=int, default=0)
+    ap.add_argument("--workload", default="batch",
+                    choices=["batch", "keystroke"])
+    ap.add_argument("--save-index", default=None,
+                    help="persist the built index to this .npz path")
+    ap.add_argument("--load-index", default=None,
+                    help="restore an index instead of rebuilding")
     ap.add_argument("--smoke", action="store_true", default=True)
     args = ap.parse_args()
 
     spec = all_archs()[args.arch]
     if spec.family == "autocomplete":
-        serve_autocomplete(spec, args)
+        if args.workload == "keystroke":
+            serve_keystroke(spec, args)
+        else:
+            serve_autocomplete(spec, args)
     elif spec.family == "lm":
         serve_lm(spec, args)
     else:

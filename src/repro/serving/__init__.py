@@ -1,5 +1,6 @@
-from repro.serving.completion_service import CompletionService, ServiceStats
+from repro.serving.completion_service import (CompletionService,
+                                              ServiceSession, ServiceStats)
 from repro.serving.engine import LMServer, Request, SlotScheduler
 
-__all__ = ["CompletionService", "ServiceStats", "LMServer", "Request",
-           "SlotScheduler"]
+__all__ = ["CompletionService", "ServiceSession", "ServiceStats", "LMServer",
+           "Request", "SlotScheduler"]

@@ -4,6 +4,10 @@ Wraps a (sharded or local) completion index; optionally re-ranks the trie's
 top-k candidates with any model from the zoo (LM log-prob or recsys user
 affinity) — trie proposes cheaply, the model spends FLOPs only on k
 candidates (DESIGN §3.1).
+
+``open_session`` exposes the incremental per-keystroke path: a
+:class:`ServiceSession` advances the index's resumable locus frontier one
+char at a time and folds per-keystroke latency into the service stats.
 """
 
 from __future__ import annotations
@@ -12,22 +16,94 @@ import time
 from dataclasses import dataclass, field
 
 
+LATENCY_WINDOW = 4096  # bound per-request/per-keystroke latency history
+
+
+def _percentile(xs: list, q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(int(len(s) * q), len(s) - 1)]
+
+
+def _record(xs: list, value_ms: float) -> None:
+    """Append keeping only the trailing LATENCY_WINDOW samples, so stats on
+    a long-lived service stay O(window) in memory and percentile cost."""
+    xs.append(value_ms)
+    if len(xs) > LATENCY_WINDOW:
+        del xs[:len(xs) - LATENCY_WINDOW]
+
+
 @dataclass
 class ServiceStats:
     n_queries: int = 0
     total_seconds: float = 0.0
     batches: int = 0
     latencies_ms: list = field(default_factory=list)
+    # incremental (per-keystroke) accounting
+    n_keystrokes: int = 0
+    keystroke_seconds: float = 0.0
+    keystroke_latencies_ms: list = field(default_factory=list)
 
     @property
     def mean_latency_ms(self) -> float:
         return (self.total_seconds / max(self.n_queries, 1)) * 1e3
 
+    @property
+    def mean_keystroke_ms(self) -> float:
+        return (self.keystroke_seconds / max(self.n_keystrokes, 1)) * 1e3
+
     def p99_ms(self) -> float:
-        if not self.latencies_ms:
-            return 0.0
-        xs = sorted(self.latencies_ms)
-        return xs[min(int(len(xs) * 0.99), len(xs) - 1)]
+        return _percentile(self.latencies_ms, 0.99)
+
+    def p99_keystroke_ms(self) -> float:
+        return _percentile(self.keystroke_latencies_ms, 0.99)
+
+    def reset_keystrokes(self) -> None:
+        """Discard keystroke accounting (e.g. after jit warmup)."""
+        self.n_keystrokes = 0
+        self.keystroke_seconds = 0.0
+        self.keystroke_latencies_ms.clear()
+
+
+class ServiceSession:
+    """One user's typing stream through the service (stats + reranking)."""
+
+    def __init__(self, service: "CompletionService", k: int):
+        self.service = service
+        self.k = k
+        fetch_k = k * (service.overfetch if service.reranker else 1)
+        self._session = service.index.session(k=fetch_k)
+
+    @property
+    def prefix(self) -> str:
+        return self._session.prefix
+
+    def type(self, text: str | bytes) -> list[tuple[float, str]]:
+        """Feed keystrokes; returns (re-ranked) top-k for the new prefix."""
+        data = text.encode() if isinstance(text, str) else bytes(text)
+        if not data:
+            results = self._session.topk()
+        for i in range(len(data)):
+            t0 = time.perf_counter()
+            results = self._session.type(data[i:i + 1])
+            dt = time.perf_counter() - t0
+            stats = self.service.stats
+            stats.n_keystrokes += 1
+            stats.keystroke_seconds += dt
+            _record(stats.keystroke_latencies_ms, dt * 1e3)
+        if self.service.reranker is not None:
+            results = self.service.reranker(self.prefix, results)
+        return results[:self.k]
+
+    def backspace(self, n: int = 1) -> list[tuple[float, str]]:
+        results = self._session.backspace(n)
+        if self.service.reranker is not None:
+            results = self.service.reranker(self.prefix, results)
+        return results[:self.k]
+
+    def reset(self) -> None:
+        self._session.reset()
 
 
 class CompletionService:
@@ -52,5 +128,10 @@ class CompletionService:
         self.stats.n_queries += len(queries)
         self.stats.total_seconds += dt
         self.stats.batches += 1
-        self.stats.latencies_ms.append(dt / max(len(queries), 1) * 1e3)
+        _record(self.stats.latencies_ms, dt / max(len(queries), 1) * 1e3)
         return results
+
+    def open_session(self, k: int = 10) -> ServiceSession:
+        """Start a stateful per-keystroke session (requires an index with
+        ``.session()``, i.e. a local CompletionIndex)."""
+        return ServiceSession(self, k)

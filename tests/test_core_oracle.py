@@ -7,9 +7,13 @@ returns exactly the oracle's top-k score multiset.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import CompletionIndex, OracleIndex, make_rules
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic tests still run without hypothesis
+    given = settings = st = None
 
 KINDS = ["tt", "et", "ht"]
 
@@ -124,56 +128,64 @@ def test_space_ordering_tt_le_ht_le_et():
 
 # -- hypothesis property tests ----------------------------------------------
 
-_word = st.text(alphabet="abcd", min_size=1, max_size=8)
+if st is not None:
+    _word = st.text(alphabet="abcd", min_size=1, max_size=8)
 
+    @settings(max_examples=40, deadline=None)
+    @given(
+        strings=st.lists(_word, min_size=1, max_size=25, unique=True),
+        scores_seed=st.integers(0, 2**31 - 1),
+        rules=st.lists(
+            st.tuples(st.text(alphabet="abcdxy", min_size=1, max_size=3),
+                      st.text(alphabet="abcd", min_size=1, max_size=3)),
+            max_size=5),
+        queries=st.lists(st.text(alphabet="abcdxy", min_size=1, max_size=6),
+                         min_size=1, max_size=5),
+        k=st.sampled_from([1, 3, 10]),
+        kind=st.sampled_from(KINDS),
+        cache=st.booleans(),
+    )
+    def test_property_matches_oracle(strings, scores_seed, rules, queries, k,
+                                     kind, cache):
+        rules = [(l, r) for l, r in rules if l != r]
+        rng = np.random.default_rng(scores_seed)
+        scores = rng.integers(1, 1000, len(strings)).tolist()
+        oracle = OracleIndex(strings, scores, make_rules(rules))
+        idx = CompletionIndex.build(strings, scores, make_rules(rules),
+                                    kind=kind, alpha=0.5,
+                                    cache_k=16 if cache else 0)
+        got = idx.complete(queries, k=k)
+        for q, row in zip(queries, got):
+            expect = oracle.topk_scores(q, k)
+            assert [s for s, _ in row] == expect, (q, kind)
+            # returned strings must actually match the query per the oracle
+            valid = oracle.matches(q)
+            for _, s in row:
+                assert s.encode() in valid, (q, s, kind)
 
-@settings(max_examples=40, deadline=None)
-@given(
-    strings=st.lists(_word, min_size=1, max_size=25, unique=True),
-    scores_seed=st.integers(0, 2**31 - 1),
-    rules=st.lists(
-        st.tuples(st.text(alphabet="abcdxy", min_size=1, max_size=3),
-                  st.text(alphabet="abcd", min_size=1, max_size=3)),
-        max_size=5),
-    queries=st.lists(st.text(alphabet="abcdxy", min_size=1, max_size=6),
-                     min_size=1, max_size=5),
-    k=st.sampled_from([1, 3, 10]),
-    kind=st.sampled_from(KINDS),
-    cache=st.booleans(),
-)
-def test_property_matches_oracle(strings, scores_seed, rules, queries, k,
-                                 kind, cache):
-    rules = [(l, r) for l, r in rules if l != r]
-    rng = np.random.default_rng(scores_seed)
-    scores = rng.integers(1, 1000, len(strings)).tolist()
-    oracle = OracleIndex(strings, scores, make_rules(rules))
-    idx = CompletionIndex.build(strings, scores, make_rules(rules),
-                                kind=kind, alpha=0.5,
-                                cache_k=16 if cache else 0)
-    got = idx.complete(queries, k=k)
-    for q, row in zip(queries, got):
-        expect = oracle.topk_scores(q, k)
-        assert [s for s, _ in row] == expect, (q, kind)
-        # returned strings must actually match the query per the oracle
-        valid = oracle.matches(q)
-        for _, s in row:
-            assert s.encode() in valid, (q, s, kind)
+    @settings(max_examples=15, deadline=None)
+    @given(
+        strings=st.lists(_word, min_size=2, max_size=15, unique=True),
+        rules=st.lists(
+            st.tuples(st.text(alphabet="abcd", min_size=1, max_size=2),
+                      st.text(alphabet="abcd", min_size=1, max_size=2)),
+            min_size=1, max_size=4),
+        alpha=st.floats(0, 1),
+    )
+    def test_property_ht_equals_et_results(strings, rules, alpha):
+        """HT must return identical results to ET for any alpha."""
+        rules = make_rules([(l, r) for l, r in rules if l != r])
+        scores = list(range(1, len(strings) + 1))
+        et = CompletionIndex.build(strings, scores, rules, kind="et")
+        ht = CompletionIndex.build(strings, scores, rules, kind="ht",
+                                   alpha=alpha)
+        queries = [s[:2] for s in strings[:5]]
+        assert et.complete(queries, 5) == ht.complete(queries, 5)
+else:  # hypothesis absent: surface the gap as explicit skips, not an error
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    def test_property_matches_oracle():
+        pass
 
-
-@settings(max_examples=15, deadline=None)
-@given(
-    strings=st.lists(_word, min_size=2, max_size=15, unique=True),
-    rules=st.lists(
-        st.tuples(st.text(alphabet="abcd", min_size=1, max_size=2),
-                  st.text(alphabet="abcd", min_size=1, max_size=2)),
-        min_size=1, max_size=4),
-    alpha=st.floats(0, 1),
-)
-def test_property_ht_equals_et_results(strings, rules, alpha):
-    """HT must return identical results to ET for any alpha."""
-    rules = make_rules([(l, r) for l, r in rules if l != r])
-    scores = list(range(1, len(strings) + 1))
-    et = CompletionIndex.build(strings, scores, rules, kind="et")
-    ht = CompletionIndex.build(strings, scores, rules, kind="ht", alpha=alpha)
-    queries = [s[:2] for s in strings[:5]]
-    assert et.complete(queries, 5) == ht.complete(queries, 5)
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    def test_property_ht_equals_et_results():
+        pass
