@@ -17,11 +17,12 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import beyond_paper, paper_tables, roofline
+    from benchmarks import beyond_paper, paper_tables, roofline, substrates
     from benchmarks.common import SCALE
 
     suites = dict(paper_tables.ALL)
     suites.update(beyond_paper.ALL)
+    suites.update(substrates.ALL)
 
     print(f"== repro benchmarks (scale={SCALE}) ==\n")
     for key, (title, fn) in suites.items():

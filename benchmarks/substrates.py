@@ -1,0 +1,97 @@
+"""B9: execution substrates — jnp vs pallas, end-to-end on the B7 workload.
+
+Times ``CompletionIndex.complete`` through both registered substrates on
+the same built index (the substrate switch is a config flip; host/device
+structures are shared), for both phase-2 engines from B7: the
+paper-faithful beam and the beyond-paper cached top-K.  On CPU the pallas
+column runs the kernels in interpret mode — that measures dispatch
+correctness and overhead, not kernel speed; the TPU run is where the
+comparison is meaningful (see README "choosing a substrate").
+
+  PYTHONPATH=src python -m benchmarks.substrates            # table
+  PYTHONPATH=src python -m benchmarks.substrates --smoke \
+      --out substrates-smoke.json                            # CI artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from benchmarks.common import (SIZES, build_index, dataset, emit,
+                               fixed_batches, time_batches)
+from repro.data.strings import make_workload
+
+# (label, build kwargs) — the two phase-2 engines benchmarked in B7
+ENGINES = [("beam", {}), ("cached_k16", {"cache_k": 16})]
+SUBSTRATES = ("jnp", "pallas")
+
+
+def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
+                     smoke: bool = False):
+    """Returns one row dict per (engine, substrate) with us/query."""
+    n_queries = 200 if smoke else SIZES["queries"] // 2
+    ds = dataset(name)
+    if smoke:
+        ds = type(ds)(name=ds.name, strings=ds.strings[:2000],
+                      scores=ds.scores[:2000], rules=ds.rules)
+    qs = make_workload(ds, n_queries, seed=11, max_len=14)
+    if smoke:
+        batch = 64
+    rows = []
+    for engine, kw in ENGINES:
+        idx = build_index(ds, "et", **kw)
+        for substrate in SUBSTRATES:
+            idx.set_substrate(substrate)
+            batches = fixed_batches(qs, batch)
+            sec = time_batches(lambda b: idx.complete(b, k=k), batches)
+            rows.append({
+                "engine": engine,
+                "substrate": substrate,
+                "backend": jax.default_backend(),
+                "interpret_mode": jax.default_backend() != "tpu"
+                and substrate == "pallas",
+                "bytes_per_string": round(idx.stats.bytes_per_string, 1),
+                "us_per_q": round(sec * 1e6, 1),
+            })
+    return rows
+
+
+def b9_substrates():
+    rows = bench_substrates()
+    emit([[r["engine"], r["substrate"], r["us_per_q"]] for r in rows],
+         ["engine", "substrate", "us_per_q"])
+    return rows
+
+
+ALL = {
+    "b9": ("execution substrates: jnp vs pallas end-to-end", b9_substrates),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI; pairs with --out for the "
+                         "perf-trajectory artifact")
+    ap.add_argument("--out", default=None,
+                    help="also write rows as JSON to this path")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    rows = bench_substrates(k=args.k, batch=args.batch, smoke=args.smoke)
+    emit([[r["engine"], r["substrate"], r["us_per_q"]] for r in rows],
+         ["engine", "substrate", "us_per_q"])
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"benchmark": "substrates",
+                       "backend": jax.default_backend(),
+                       "smoke": args.smoke, "rows": rows}, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -139,6 +139,7 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
         max_terms_per_node=rule_trie.max_terms_per_node,
         teleports=trie.max_syn_targets,
         use_cache=spec.cache_k > 0, cache_k=spec.cache_k,
+        substrate=eng.resolve_substrate(spec.substrate),
     )
     stats = _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
                         len(ss), time.perf_counter() - t0)

@@ -68,6 +68,24 @@ class CompletionIndex:
     def kind(self) -> str:
         return self.spec.kind
 
+    @property
+    def substrate(self) -> str:
+        """The resolved execution substrate lookups run on."""
+        return self.cfg.substrate
+
+    def set_substrate(self, name: str) -> "CompletionIndex":
+        """Switch the execution substrate ("jnp", "pallas", or "auto").
+
+        Cheap: host/device structures are untouched; the substrate rides
+        ``EngineConfig`` (and thus every compile-cache key), so the next
+        lookup compiles through the new substrate while executables for
+        the old one stay cached.  Returns ``self`` for chaining.
+        """
+        resolved = eng.resolve_substrate(name)
+        self.spec = self.spec.replace(substrate=name)
+        self.cfg = replace(self.cfg, substrate=resolved)
+        return self
+
     # -- construction ------------------------------------------------------
 
     @staticmethod

@@ -112,13 +112,21 @@ def load_index_parts(path: str) -> dict:
             _unpack_bytes(z["rules__lhs_blob"], z["rules__lhs_offsets"]),
             _unpack_bytes(z["rules__rhs_blob"], z["rules__rhs_offsets"]))]
 
+    spec = IndexSpec.from_dict(meta["spec"])
+    known = {f.name for f in dataclasses.fields(eng.EngineConfig)}
+    cfg = eng.EngineConfig(
+        **{k: v for k, v in meta["cfg"].items() if k in known})
+    # the substrate is a property of the *host* we load on, not the one
+    # that saved: re-resolve the spec's (possibly "auto") choice here
+    cfg = dataclasses.replace(
+        cfg, substrate=eng.resolve_substrate(spec.substrate))
     return {
-        "spec": IndexSpec.from_dict(meta["spec"]),
+        "spec": spec,
         "trie": trie,
         "rule_trie": rule_trie,
         "rules": rules,
         "strings": strings,
         "scores": scores,
-        "cfg": eng.EngineConfig(**meta["cfg"]),
+        "cfg": cfg,
         "stats": BuildStats(**meta["stats"]),
     }

@@ -29,6 +29,10 @@ class IndexSpec:
     alpha: HT space ratio in [0, 1] (paper Fig. 8); ignored by other kinds.
     cache_k: materialize per-node top-K lists (0 = off; beyond-paper).
     frontier/gens/expand/max_steps: static engine widths (jit shape key).
+    substrate: execution substrate — "jnp" (reference), "pallas" (tuned
+        kernels; interpret mode off-TPU), or "auto" (pallas on TPU, jnp
+        elsewhere).  Resolved at build/load time against the substrate
+        registry in :mod:`repro.core.engine.substrate`.
     """
 
     kind: str = "et"
@@ -38,6 +42,7 @@ class IndexSpec:
     gens: int = 48
     expand: int = 8
     max_steps: int = 512
+    substrate: str = "auto"
 
     def validate(self) -> "IndexSpec":
         if self.kind not in _BUILDERS:
@@ -46,6 +51,12 @@ class IndexSpec:
                 f"{registered_kinds()}")
         if not 0.0 <= self.alpha <= 1.0:
             raise ValueError(f"alpha must be in [0, 1], got {self.alpha}")
+        from repro.core.engine.substrate import available_substrates
+        if self.substrate != "auto" and \
+                self.substrate not in available_substrates():
+            raise ValueError(
+                f"unknown substrate {self.substrate!r}; expected 'auto' or "
+                f"one of {available_substrates()}")
         for name in ("cache_k",):
             if getattr(self, name) < 0:
                 raise ValueError(f"{name} must be >= 0")

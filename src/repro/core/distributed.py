@@ -23,6 +23,25 @@ from jax.sharding import PartitionSpec as P
 from repro.api import CompletionIndex, IndexSpec, build_index
 from repro.core import engine as eng
 
+# Feature detection: the manual-sharding APIs this module (and the mesh
+# tests) rely on moved to the jax top level in newer releases.  Tests
+# skip on the flag instead of CI hard-deselecting them.
+from repro.distributed.sharding import missing_sharding_apis
+
+_MISSING_SHARDING_APIS = missing_sharding_apis()
+HAS_MODERN_SHARDING = not _MISSING_SHARDING_APIS
+SHARDING_SKIP_REASON = (
+    "container jax lacks " + ", ".join(_MISSING_SHARDING_APIS)
+    + " (simulated-mesh paths need a newer jax)"
+) if _MISSING_SHARDING_APIS else ""
+
+
+def require_modern_sharding() -> None:
+    """Raise a clear error (instead of an AttributeError mid-trace) when
+    the running jax cannot execute the shard_map paths."""
+    if not HAS_MODERN_SHARDING:
+        raise RuntimeError(SHARDING_SKIP_REASON)
+
 
 def shard_strings(strings, scores, n_shards: int):
     """Hash-partition (deterministic, seed-free) strings into shards."""
@@ -73,6 +92,7 @@ def stack_shards(indexes: list[CompletionIndex]):
         teleports=max(c.teleports for c in cfgs),
         use_cache=all(c.use_cache for c in cfgs),
         cache_k=min(c.cache_k for c in cfgs),
+        substrate=cfgs[0].substrate,   # shards share one IndexSpec
     )
     stride = max(len(ix.strings) for ix in indexes)
     return eng.DeviceTrie(**stacked), merged, stride
@@ -89,6 +109,7 @@ def sharded_complete(stacked: eng.DeviceTrie, cfg: eng.EngineConfig,
     qs: int32[B, L] global batch; qlens int32[B].
     Returns (scores[B, k], global_sids[B, k]).
     """
+    require_modern_sharding()
     trie_spec = jax.tree.map(lambda _: P(model_axis), stacked,
                              is_leaf=lambda x: not isinstance(x, tuple))
     q_spec = P(data_axes)

@@ -1,0 +1,109 @@
+"""Phase 2a — beam top-k (paper-faithful priority search, vectorized).
+
+Each locus becomes a lazy generator over its score-sorted emission list;
+every step pops the best P emissions across all generators (lax.top_k) and
+re-arms them.  This is the paper's priority queue, vectorized P-at-a-time,
+with the same admissible bound (max descendant score).  Exactness is
+tracked: if the width-bounded pools ever dropped a candidate better than
+the k-th result, the query is flagged for a host-side retry with doubled
+widths.
+
+The generator loop is data-dependent (lax.while_loop) and stays pure-jnp
+on every substrate; a fused Pallas beam kernel is tracked as a ROADMAP
+open item and would land as a ``Substrate.beam_topk_batch`` override.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
+
+
+def beam_topk(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
+    """Top-k leaves under the locus antichain.
+
+    Returns (scores[k], sids[k], exact bool). scores are -1 padded.
+    """
+    W, P = cfg.gens, cfg.expand
+    if int(t.emit_node.shape[0]) == 0:  # degenerate empty dictionary
+        return (jnp.full((k,), NEG_ONE, jnp.int32),
+                jnp.full((k,), NEG_ONE, jnp.int32), jnp.bool_(True))
+    e_size = max(int(t.emit_node.shape[0]), 1)
+
+    def emit_bound(nodes, cursors):
+        valid = nodes >= 0
+        n = jnp.where(valid, nodes, 0)
+        e = t.emit_ptr[n] + cursors
+        ok = valid & (e < t.emit_ptr[n + 1])
+        score = t.emit_score[jnp.clip(e, 0, e_size - 1)]
+        return jnp.where(ok, score, NEG_ONE)
+
+    # generator pool seeded with loci
+    gn = jnp.full((W,), NEG_ONE, jnp.int32)
+    gc = jnp.zeros((W,), jnp.int32)
+    gn = jax.lax.dynamic_update_slice(gn, loci, (0,))
+    gb = emit_bound(gn, gc)
+    gn = jnp.where(gb >= 0, gn, NEG_ONE)
+
+    ls = jnp.full((k,), NEG_ONE, jnp.int32)   # leaf scores desc
+    li = jnp.full((k,), NEG_ONE, jnp.int32)   # leaf sids
+    dropped_max = NEG_ONE
+    steps = jnp.int32(0)
+
+    def cond(state):
+        gn, gc, gb, ls, li, dropped_max, steps = state
+        best = jnp.max(gb)
+        kth = ls[k - 1]
+        return (best >= 0) & (kth < best) & (steps < cfg.max_steps)
+
+    def body(state):
+        gn, gc, gb, ls, li, dropped_max, steps = state
+        topb, topi = jax.lax.top_k(gb, P)
+        sel_valid = topb >= 0
+        sel_n = jnp.where(sel_valid, gn[topi], 0)
+        e = t.emit_ptr[sel_n] + gc[topi]
+        e = jnp.clip(e, 0, e_size - 1)
+        em_node = t.emit_node[e]
+        em_score = t.emit_score[e]
+        em_leaf = t.emit_is_leaf[e]
+
+        # leaves -> result buffer
+        leaf_ok = sel_valid & em_leaf
+        new_ls = jnp.where(leaf_ok, em_score, NEG_ONE)
+        new_li = jnp.where(leaf_ok, t.leaf_sid[jnp.where(leaf_ok, em_node, 0)],
+                           NEG_ONE)
+        cat_s = jnp.concatenate([ls, new_ls])
+        cat_i = jnp.concatenate([li, new_li])
+        top_s, idx = jax.lax.top_k(cat_s, k)
+        ls2, li2 = top_s, cat_i[idx]
+
+        # internal emissions -> new generators
+        int_ok = sel_valid & ~em_leaf
+        new_n = jnp.where(int_ok, em_node, NEG_ONE)
+        new_c = jnp.zeros((P,), jnp.int32)
+        new_b = emit_bound(new_n, new_c)
+        new_n = jnp.where(new_b >= 0, new_n, NEG_ONE)
+
+        # advance selected generators
+        gc2 = gc.at[topi].add(jnp.where(sel_valid, 1, 0))
+        gb2 = emit_bound(gn, gc2)
+        gn2 = jnp.where(gb2 >= 0, gn, NEG_ONE)
+
+        # merge pools, keep top-W by bound
+        pool_n = jnp.concatenate([gn2, new_n])
+        pool_c = jnp.concatenate([gc2, new_c])
+        pool_b = jnp.concatenate([gb2, new_b])
+        keep_b, keep_i = jax.lax.top_k(pool_b, W)
+        drop_mask = jnp.ones((W + P,), bool).at[keep_i].set(False)
+        drop_best = jnp.max(jnp.where(drop_mask, pool_b, NEG_ONE))
+        dropped_max2 = jnp.maximum(dropped_max, drop_best)
+        return (pool_n[keep_i], pool_c[keep_i], keep_b, ls2, li2,
+                dropped_max2, steps + 1)
+
+    state = (gn, gc, gb, ls, li, dropped_max, steps)
+    gn, gc, gb, ls, li, dropped_max, steps = jax.lax.while_loop(cond, body, state)
+    finished = ~((jnp.max(gb) >= 0) & (ls[k - 1] < jnp.max(gb)))
+    exact = (ls[k - 1] >= dropped_max) & finished
+    return ls, li, exact

@@ -1,0 +1,40 @@
+"""Phase 2b — cached top-k (beyond-paper, cf. Li et al. [9]).
+
+Gather the materialized per-node top-K lists of the locus antichain and
+merge.  O(1) lookups, no while_loop; exact for k <= K.
+
+The gather+merge is the substrate seam's batched hot primitive
+(``Substrate.cached_topk_batch``): the jnp reference below flattens and
+runs lax.top_k; the Pallas substrate fuses gather and k-round selection in
+one kernel (:mod:`repro.kernels.locus_merge`).  Both orders candidates
+loci-major/K-minor, so ties resolve identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
+
+
+def gather_cached(t: DeviceTrie, loci: jax.Array):
+    """Flatten the per-node top-K lists of a locus row/batch.
+
+    loci int32[..., F] -> (scores[..., F*K], sids[..., F*K]), -1 where the
+    locus slot is empty, loci-major/K-minor candidate order.
+    """
+    valid = loci >= 0
+    n = jnp.where(valid, loci, 0)
+    sc = jnp.where(valid[..., None], t.topk_score[n], NEG_ONE)
+    si = jnp.where(valid[..., None], t.topk_sid[n], NEG_ONE)
+    flat = loci.shape[:-1] + (-1,)
+    return sc.reshape(flat), si.reshape(flat)
+
+
+def cached_topk(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
+    """Single-row reference merge: loci [F] -> (scores[k], sids[k], exact)."""
+    assert cfg.use_cache and k <= cfg.cache_k, "cache disabled or k too large"
+    flat_s, flat_i = gather_cached(t, loci)
+    top_s, idx = jax.lax.top_k(flat_s, k)
+    return top_s, flat_i[idx], jnp.bool_(True)

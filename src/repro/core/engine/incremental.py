@@ -1,0 +1,134 @@
+"""Phase 1' — incremental locus DP (stateful per-keystroke sessions).
+
+One keystroke extends the carried frontier by a single char-step instead
+of re-running the full locus DP over the prefix.  All inner lookups and
+compactions thread through the active substrate, so a session opened on a
+``pallas``-substrate index runs its per-keystroke top-k through the same
+kernels as the one-shot batch path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.locus import finalize_loci, link_lookup, teleport_expand
+from repro.core.engine.primitives import iters_for, resolve_sub
+from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
+
+
+class LocusState(NamedTuple):
+    """Resumable locus-DP state after consuming some prefix.
+
+    rows[0] is the teleport-expanded frontier for the full prefix; rows[j]
+    (j < max_lhs_len) is the frontier j keystrokes ago.  The history window
+    is required because a synonym rule whose lhs ends at the newest char
+    anchors at the frontier of the position where the lhs *started*.
+    rnodes[j] is the rule-trie node for the walk over the last j+1 chars
+    (-1 once the walk dies), so full-lhs matches ending at the newest char
+    are recognised without rescanning the prefix.
+    """
+
+    rows: jax.Array      # int32[H, F] expanded frontier rows, newest first
+    rnodes: jax.Array    # int32[H]   rule-trie suffix walks, shortest first
+    overflow: jax.Array  # int32      accumulated frontier drops (0 => exact)
+    length: jax.Array    # int32      chars consumed
+
+
+def init_locus_state(t: DeviceTrie, cfg: EngineConfig, sub=None) -> LocusState:
+    """State for the empty prefix (locus = expanded root)."""
+    sub = resolve_sub(cfg, sub)
+    F = cfg.frontier
+    H = max(cfg.max_lhs_len, 1)
+    row = jnp.full((F,), NEG_ONE, jnp.int32).at[0].set(0)
+    row, drop = teleport_expand(t, cfg, row, sub)
+    rows = jnp.full((H, F), NEG_ONE, jnp.int32).at[0].set(row)
+    return LocusState(rows=rows,
+                      rnodes=jnp.full((H,), NEG_ONE, jnp.int32),
+                      overflow=jnp.int32(0) + drop,
+                      length=jnp.int32(0))
+
+
+def advance_locus_state(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
+                        c, sub=None) -> LocusState:
+    """One keystroke: extend the frontier by char ``c`` (no-op when c < 0).
+
+    Equivalent to one step of ``locus_dp`` — literal dict/synonym-branch
+    children of the current frontier, plus link-store steps for every rule
+    whose lhs ends exactly at the new char — but reuses the carried frontier
+    instead of rescanning the prefix.
+    """
+    sub = resolve_sub(cfg, sub)
+    F = cfg.frontier
+    H = state.rows.shape[0]
+    c = jnp.asarray(c, jnp.int32)
+    row = state.rows[0]
+
+    d_iters = iters_for(int(t.edge_char.shape[0]))
+    parts = [sub.csr_child_lookup(t.first_child, t.edge_char, t.edge_child,
+                                  row, c, d_iters)]
+    if int(t.s_edge_child.shape[0]) > 0:
+        s_iters = iters_for(int(t.s_edge_char.shape[0]))
+        parts.append(sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
+                                          t.s_edge_child, row, c, s_iters))
+
+    rnodes = state.rnodes
+    if cfg.rule_matches > 0 and cfg.max_lhs_len > 0:
+        r_iters = iters_for(int(t.r_edge_char.shape[0]))
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  state.rnodes[:-1]])
+        rnodes = sub.csr_child_lookup(t.r_first_child, t.r_edge_char,
+                                      t.r_edge_child, starts, c, r_iters)
+        r_size = max(int(t.r_term_rule.shape[0]), 1)
+        for j in range(H):
+            node = rnodes[j]
+            ok = node >= 0
+            nn = jnp.where(ok, node, 0)
+            t_lo = t.r_term_ptr[nn]
+            t_hi = t.r_term_ptr[nn + 1]
+            # lhs of length j+1 anchors at the frontier j keystrokes back
+            anchor_row = state.rows[j]
+            anchor_ok = anchor_row >= 0
+            anchor_ok &= ~t.syn_mask[jnp.where(anchor_row >= 0, anchor_row, 0)]
+            anchors = jnp.where(anchor_ok, anchor_row, NEG_ONE)
+            for j2 in range(cfg.max_terms_per_node):
+                has = ok & (t_lo + j2 < t_hi)
+                rid = t.r_term_rule[jnp.clip(t_lo + j2, 0, r_size - 1)]
+                tgt = link_lookup(t, anchors, rid)
+                parts.append(jnp.where(has, tgt, NEG_ONE))
+
+    merged, d1 = sub.dedup_compact(jnp.concatenate(parts), F)
+    merged, d2 = teleport_expand(t, cfg, merged, sub)
+    new_rows = jnp.concatenate([merged[None], state.rows[:-1]], axis=0)
+    ok = c >= 0
+    return LocusState(
+        rows=jnp.where(ok, new_rows, state.rows),
+        rnodes=jnp.where(ok, rnodes, state.rnodes),
+        overflow=state.overflow + jnp.where(ok, d1 + d2, 0),
+        length=state.length + jnp.where(ok, 1, 0),
+    )
+
+
+def advance_loci(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
+                 chars: jax.Array, sub=None) -> LocusState:
+    """Extend the state by a fixed-shape char vector (-1 entries ignored)."""
+    sub = resolve_sub(cfg, sub)
+
+    def step(s, c):
+        return advance_locus_state(t, cfg, s, c, sub), None
+
+    state, _ = jax.lax.scan(step, state, jnp.asarray(chars, jnp.int32))
+    return state
+
+
+def topk_from_loci(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
+                   k: int, sub=None):
+    """Top-k for the prefix carried by ``state`` (scores, sids, exact)."""
+    from repro.core.engine.substrate import topk_phase2
+
+    sub = resolve_sub(cfg, sub)
+    loci = finalize_loci(t, state.rows[0])
+    scores, sids, exact = topk_phase2(t, cfg, loci, k, sub)
+    return scores, sids, exact & (state.overflow == 0)

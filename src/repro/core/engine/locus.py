@@ -1,0 +1,188 @@
+"""Phase 1 — locus DP: a fixed-width frontier sweep over query positions.
+
+reach[pos] = set of trie nodes reachable by consuming p[:pos] under some
+rewriting.  Transitions: literal char step (dict + synonym-branch
+children), synonym teleports (ET/HT expanded rules), and rule steps
+through the link store (TT/HT unexpanded rules).  All fixed shapes.
+
+Every inner CSR lookup / dedup-compaction routes through the active
+:class:`~repro.core.engine.substrate.Substrate` (threaded as ``sub``), so
+kernel-backed substrates can replace the primitives without touching the
+DP structure.  Substrates may also replace this whole sweep at batch
+granularity (``Substrate.walk_batch``) — e.g. the Pallas trie-walk kernel
+handles the rule-free prefix case end-to-end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.primitives import (dedup_pad, iters_for, lower_bound,
+                                          resolve_sub)
+from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
+
+
+def match_table(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, sub=None):
+    """All full-lhs rule matches per query position.
+
+    Returns (rule[L, M], end[L, M]) with -1 padding; end = pos + len(lhs).
+    """
+    sub = resolve_sub(cfg, sub)
+    L = q.shape[0]
+    M = cfg.rule_matches
+    if M == 0:
+        z = jnp.full((L, 1), NEG_ONE, jnp.int32)
+        return z, z
+    iters = iters_for(int(t.r_edge_char.shape[0]))
+    qx = jnp.concatenate([q, jnp.full((cfg.max_lhs_len,), NEG_ONE, jnp.int32)])
+
+    def at_pos(i):
+        rules = jnp.full((M,), NEG_ONE, jnp.int32)
+        ends = jnp.full((M,), NEG_ONE, jnp.int32)
+        node = jnp.int32(0)
+        cnt = jnp.int32(0)
+        for j in range(cfg.max_lhs_len):
+            c = jax.lax.dynamic_index_in_dim(qx, i + j, keepdims=False)
+            node = sub.csr_child_lookup(
+                t.r_first_child, t.r_edge_char, t.r_edge_child,
+                node[None], c[None], iters)[0]
+            ok = node >= 0
+            nn = jnp.where(ok, node, 0)
+            t_lo = t.r_term_ptr[nn]
+            t_hi = t.r_term_ptr[nn + 1]
+            for j2 in range(cfg.max_terms_per_node):
+                has = ok & (t_lo + j2 < t_hi) & (cnt < M)
+                rid = t.r_term_rule[jnp.clip(t_lo + j2, 0, max(int(t.r_term_rule.shape[0]), 1) - 1)]
+                slot = jnp.clip(cnt, 0, M - 1)
+                rules = jnp.where(has, rules.at[slot].set(rid), rules)
+                ends = jnp.where(has, ends.at[slot].set(i + j + 1), ends)
+                cnt = jnp.where(has, cnt + 1, cnt)
+        return rules, ends
+
+    return jax.vmap(at_pos)(jnp.arange(L, dtype=jnp.int32))
+
+
+def teleport_expand(t: DeviceTrie, cfg: EngineConfig, row: jax.Array,
+                    sub=None):
+    """row [F] -> row plus teleport targets, dedup'd back to [F]."""
+    if cfg.teleports == 0:
+        return row, jnp.int32(0)
+    sub = resolve_sub(cfg, sub)
+    F = row.shape[0]
+    valid = row >= 0
+    n = jnp.where(valid, row, 0)
+    lo = t.syn_ptr[n]
+    hi = t.syn_ptr[n + 1]
+    size = max(int(t.syn_tgt.shape[0]), 1)
+    offs = jnp.arange(cfg.teleports, dtype=jnp.int32)
+    idx = lo[:, None] + offs[None, :]
+    ok = (idx < hi[:, None]) & valid[:, None]
+    tgt = jnp.where(ok, t.syn_tgt[jnp.clip(idx, 0, size - 1)], NEG_ONE)
+    merged = jnp.concatenate([row, tgt.reshape(-1)])
+    return sub.dedup_compact(merged, F)
+
+
+def link_lookup(t: DeviceTrie, anchors: jax.Array, rid: jax.Array):
+    """Link-store search: (anchor, rule) -> target or -1. anchors [F]."""
+    n_link = int(t.link_anchor.shape[0])
+    if n_link == 0:
+        return jnp.full(anchors.shape, NEG_ONE, jnp.int32)
+    iters = iters_for(n_link)
+    valid = anchors >= 0
+    a = jnp.where(valid, anchors, 0)
+    zero = jnp.zeros_like(a)
+    full = jnp.full_like(a, n_link)
+    lo = lower_bound(t.link_anchor, zero, full, a, iters)
+    hi = lower_bound(t.link_anchor, zero, full, a + 1, iters)
+    pos = lower_bound(t.link_rule, lo, hi, rid, iters)
+    found = (pos < hi) & (t.link_rule[jnp.clip(pos, 0, n_link - 1)] == rid) & valid
+    return jnp.where(found, t.link_target[jnp.clip(pos, 0, n_link - 1)], NEG_ONE)
+
+
+def finalize_loci(t: DeviceTrie, row: jax.Array) -> jax.Array:
+    """Turn a (teleport-expanded) frontier row into the final locus antichain:
+    drop mid-variant synonym nodes, dedup, and remove covered descendants."""
+    F = row.shape[0]
+    # strict semantics: drop mid-variant (synonym) loci
+    is_syn = t.syn_mask[jnp.where(row >= 0, row, 0)]
+    row = jnp.where((row >= 0) & ~is_syn, row, NEG_ONE)
+    row, _ = dedup_pad(row, F)
+    # antichain reduction via preorder intervals: drop descendants
+    tin = jnp.where(row >= 0, row, NEG_ONE)
+    to = t.tout[jnp.where(row >= 0, row, 0)]
+    covered = (
+        (tin[None, :] <= tin[:, None]) & (tin[:, None] < to[None, :])
+        & (jnp.arange(F)[None, :] != jnp.arange(F)[:, None])
+        & (row[None, :] >= 0) & (row[:, None] >= 0)
+    ).any(axis=1)
+    # ties: identical ids already removed by dedup; strict ancestor covers
+    return jnp.where(covered, NEG_ONE, row)
+
+
+def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array,
+             sub=None):
+    """Locus set after consuming the whole query under all rewritings.
+
+    q: int32[L] (-1 padded), qlen: int32 scalar.
+    Returns (loci[F] dict-node ids, -1 padded; overflow count int32).
+    """
+    sub = resolve_sub(cfg, sub)
+    L = int(q.shape[0])
+    F = cfg.frontier
+    d_iters = iters_for(int(t.edge_char.shape[0]))
+    s_iters = iters_for(int(t.s_edge_char.shape[0]))
+    has_syn_edges = int(t.s_edge_child.shape[0]) > 0
+    M = cfg.rule_matches
+
+    mrule, mend = match_table(t, cfg, q, sub)
+
+    buf = jnp.full((L + 1, F), NEG_ONE, jnp.int32)
+    buf = buf.at[0, 0].set(0)
+    overflow = jnp.int32(0)
+
+    def step(i, carry):
+        buf, overflow = carry
+        row = jax.lax.dynamic_slice(buf, (i, 0), (1, F))[0]
+        row, drop = teleport_expand(t, cfg, row, sub)
+        overflow += drop
+        c = jax.lax.dynamic_index_in_dim(q, i, keepdims=False)
+
+        # literal char step: dict children + synonym-branch children
+        nd = sub.csr_child_lookup(t.first_child, t.edge_char, t.edge_child,
+                                  row, c, d_iters)
+        parts = [nd]
+        if has_syn_edges:
+            ns = sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
+                                      t.s_edge_child, row, c, s_iters)
+            parts.append(ns)
+        nxt_row = jax.lax.dynamic_slice(buf, (i + 1, 0), (1, F))[0]
+        merged, drop = sub.dedup_compact(jnp.concatenate([nxt_row] + parts), F)
+        overflow += drop
+        buf = jax.lax.dynamic_update_slice(buf, merged[None], (i + 1, 0))
+
+        # rule steps through the link store (anchors must be dict nodes)
+        if M > 0:
+            anchor_ok = row >= 0
+            anchor_ok &= ~t.syn_mask[jnp.where(row >= 0, row, 0)]
+            anchors = jnp.where(anchor_ok, row, NEG_ONE)
+            for m in range(M):
+                rid = mrule[i, m]
+                end = mend[i, m]
+                tgt = link_lookup(t, anchors, rid)
+                tgt = jnp.where((rid >= 0), tgt, NEG_ONE)
+                j = jnp.clip(jnp.where(end >= 0, end, 0), 0, L)
+                dst = jax.lax.dynamic_slice(buf, (j, 0), (1, F))[0]
+                merged, drop = sub.dedup_compact(jnp.concatenate([dst, tgt]), F)
+                any_tgt = jnp.any(tgt >= 0)
+                merged = jnp.where(any_tgt, merged, dst)
+                overflow += jnp.where(any_tgt, drop, 0)
+                buf = jax.lax.dynamic_update_slice(buf, merged[None], (j, 0))
+        return buf, overflow
+
+    buf, overflow = jax.lax.fori_loop(0, L, step, (buf, overflow))
+
+    row = jax.lax.dynamic_slice(buf, (jnp.clip(qlen, 0, L), 0), (1, F))[0]
+    row, drop = teleport_expand(t, cfg, row, sub)
+    overflow += drop
+    return finalize_loci(t, row), overflow

@@ -1,0 +1,77 @@
+"""Engine data structures: the device-resident trie and the static config.
+
+:class:`DeviceTrie` is the array encoding of a built TT/ET/HT/plain index
+(one NamedTuple of jax arrays, a valid pytree for jit/vmap/shard_map).
+:class:`EngineConfig` holds every static shape parameter — it is frozen and
+hashable so it can join jit/compile-cache keys, and it names the execution
+``substrate`` (see :mod:`repro.core.engine.substrate`) that the entry
+points dispatch through.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+INT_MAX = np.int32(2**31 - 1)
+NEG_ONE = np.int32(-1)
+
+
+class DeviceTrie(NamedTuple):
+    # dict-trie node arrays
+    depth: jax.Array        # int32[N]
+    max_score: jax.Array    # int32[N]
+    leaf_score: jax.Array   # int32[N]
+    leaf_sid: jax.Array     # int32[N]
+    syn_mask: jax.Array     # bool[N]
+    tout: jax.Array         # int32[N]
+    # dict child CSR
+    first_child: jax.Array  # int32[N+1]
+    edge_char: jax.Array    # int32[E]
+    edge_child: jax.Array   # int32[E]
+    # synonym child CSR
+    s_first_child: jax.Array
+    s_edge_char: jax.Array
+    s_edge_child: jax.Array
+    # emissions
+    emit_ptr: jax.Array
+    emit_node: jax.Array
+    emit_score: jax.Array
+    emit_is_leaf: jax.Array
+    # teleports
+    syn_ptr: jax.Array
+    syn_tgt: jax.Array
+    # link store
+    link_anchor: jax.Array
+    link_rule: jax.Array
+    link_target: jax.Array
+    # rule trie
+    r_first_child: jax.Array
+    r_edge_char: jax.Array
+    r_edge_child: jax.Array
+    r_term_ptr: jax.Array
+    r_term_rule: jax.Array
+    r_rule_len: jax.Array
+    # materialized per-node top-K (dummy (1,1) when disabled)
+    topk_score: jax.Array
+    topk_sid: jax.Array
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static engine shape parameters (hashable; part of the jit key)."""
+
+    frontier: int = 32          # F: locus DP width
+    gens: int = 48              # W: generator pool width (beam phase)
+    expand: int = 8             # P: emissions popped per beam step
+    max_steps: int = 256        # beam step cap
+    rule_matches: int = 0       # M: max lhs matches per query position
+    max_lhs_len: int = 0        # rule-trie walk depth
+    max_terms_per_node: int = 1
+    teleports: int = 0          # Ts: max teleport targets per node
+    use_cache: bool = False     # phase-2 via materialized top-K
+    cache_k: int = 0
+    substrate: str = "jnp"      # execution substrate ("jnp" | "pallas")

@@ -1,0 +1,222 @@
+"""Pluggable execution substrates + the public completion entry points.
+
+A :class:`Substrate` bundles the engine's hot primitives behind one seam:
+
+  - ``csr_child_lookup`` / ``dedup_compact`` — the inner locus-DP ops
+    (threaded through every frontier step);
+  - ``walk_batch``       — phase 1 at batch granularity (locus DP, or a
+    batched longest-prefix kernel when the trie is rule-free);
+  - ``topk_with_payload`` — batched small-k selection with payload;
+  - ``cached_topk_batch`` — the cached-top-K locus gather+merge;
+  - ``beam_topk_batch``   — phase 2a (vmapped beam; jnp on all substrates
+    until the fused beam kernel lands — see ROADMAP).
+
+The base class *is* the reference implementation (pure jnp, registered as
+``"jnp"``).  :class:`PallasSubstrate` (``"pallas"``) routes the batched
+walk through :func:`repro.kernels.ops.trie_walk`, cached merges through
+:func:`repro.kernels.ops.topk_select` / ``cached_topk_merge``, and runs in
+interpret mode off-TPU.  ``EngineConfig.substrate`` names the substrate,
+so it rides every jit/compile-cache key; ``resolve_substrate("auto")``
+picks ``pallas`` on TPU and ``jnp`` elsewhere (interpret-mode pallas is
+opt-in, not a default, off-TPU).
+
+New kernel work (fused locus DP, DMA-streamed CSR for HBM-resident tries)
+lands as an additive substrate method override, not an engine rewrite.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import beam, cached, locus, primitives
+from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
+
+
+class Substrate:
+    """Reference (pure-jnp) execution substrate; the protocol other
+    substrates subclass.  Stateless — one shared instance per registry
+    entry."""
+
+    name = "jnp"
+
+    # -- locus-DP inner primitives ----------------------------------------
+
+    def csr_child_lookup(self, ptr, chars, children, nodes, ch, iters: int):
+        return primitives.csr_child_lookup(ptr, chars, children, nodes, ch,
+                                           iters)
+
+    def dedup_compact(self, vec: jax.Array, width: int):
+        return primitives.dedup_pad(vec, width)
+
+    # -- phase 1: batched locus walk --------------------------------------
+
+    def walk_batch(self, t: DeviceTrie, cfg: EngineConfig, qs: jax.Array,
+                   qlens: jax.Array):
+        """qs int32[B, L] (-1 padded), qlens int32[B] ->
+        (loci[B, F], overflow[B])."""
+        return jax.vmap(
+            lambda q, ql: locus.locus_dp(t, cfg, q, ql, self))(qs, qlens)
+
+    # -- phase 2: top-k ----------------------------------------------------
+
+    def topk_with_payload(self, scores: jax.Array, payload: jax.Array,
+                          k: int):
+        """scores/payload int32[B, C] -> (top_s[B, k], top_p[B, k]),
+        score-descending, ties toward the lower candidate index."""
+        top_s, idx = jax.lax.top_k(scores, k)
+        return top_s, jnp.take_along_axis(payload, idx, axis=1)
+
+    def cached_topk_batch(self, t: DeviceTrie, cfg: EngineConfig,
+                          loci: jax.Array, k: int):
+        """Cached-top-K gather+merge: loci int32[B, F] ->
+        (scores[B, k], sids[B, k], exact[B])."""
+        assert cfg.use_cache and k <= cfg.cache_k, \
+            "cache disabled or k too large"
+        flat_s, flat_i = cached.gather_cached(t, loci)
+        s, p = self.topk_with_payload(flat_s, flat_i, k)
+        return s, p, jnp.ones(loci.shape[:-1], bool)
+
+    def beam_topk_batch(self, t: DeviceTrie, cfg: EngineConfig,
+                        loci: jax.Array, k: int):
+        """Beam phase 2 over a locus batch: (scores[B,k], sids[B,k],
+        exact[B])."""
+        return jax.vmap(lambda l: beam.beam_topk(t, cfg, l, k))(loci)
+
+
+class PallasSubstrate(Substrate):
+    """Kernel-backed substrate: dispatches the batched hot primitives to
+    :mod:`repro.kernels` (compiled on TPU, interpret mode elsewhere).
+
+    The locus DP's inner lookups/compactions are inherited from the jnp
+    reference — they run inside vmap/fori_loop where a pallas_call cannot
+    be tiled today; the batched seams below are where the kernels bite.
+    """
+
+    name = "pallas"
+
+    @staticmethod
+    def _rule_free(t: DeviceTrie, cfg: EngineConfig) -> bool:
+        """True when the walk is a pure prefix descent (plain kind, or a
+        rule-free build): no link store, no teleports, no synonym edges —
+        the frontier then never holds more than one node."""
+        return (cfg.rule_matches == 0 and cfg.teleports == 0
+                and int(t.s_edge_child.shape[0]) == 0)
+
+    def walk_batch(self, t, cfg, qs, qlens):
+        if not self._rule_free(t, cfg):
+            return super().walk_batch(t, cfg, qs, qlens)
+        from repro.kernels import ops
+
+        node, depth = ops.trie_walk(t.first_child, t.edge_char, t.edge_child,
+                                    qs, qlens)
+        B = int(qs.shape[0])
+        hit = depth == qlens        # partial walks have no completions
+        loci = jnp.full((B, cfg.frontier), NEG_ONE, jnp.int32)
+        loci = loci.at[:, 0].set(jnp.where(hit, node, NEG_ONE))
+        return loci, jnp.zeros((B,), jnp.int32)
+
+    def topk_with_payload(self, scores, payload, k):
+        from repro.kernels import ops
+
+        return ops.topk_select(scores, payload, k)
+
+    def cached_topk_batch(self, t, cfg, loci, k):
+        assert cfg.use_cache and k <= cfg.cache_k, \
+            "cache disabled or k too large"
+        from repro.kernels import ops
+
+        exact = jnp.ones(loci.shape[:-1], bool)
+        if self._rule_free(t, cfg):
+            # single-locus rows: the gather is one row per query; merging
+            # reduces to selecting from the node's own (sorted) top-K list
+            sc, si = cached.gather_cached(t, loci[:, :1])
+            s, p = self.topk_with_payload(sc, si, k)
+            return s, p, exact
+        s, p = ops.cached_topk_merge(loci, t.topk_score, t.topk_sid, k)
+        return s, p, exact
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_SUBSTRATES: dict[str, Substrate] = {}
+
+
+def register_substrate(name: str, substrate: Substrate) -> Substrate:
+    """Register an execution substrate; a new backend is an additive
+    ``register_substrate("<name>", MySubstrate())`` away."""
+    if name in _SUBSTRATES:
+        raise ValueError(f"substrate {name!r} already registered")
+    _SUBSTRATES[name] = substrate
+    return substrate
+
+
+def get_substrate(name: str) -> Substrate:
+    try:
+        return _SUBSTRATES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown substrate {name!r}; registered: "
+            f"{available_substrates()}") from None
+
+
+def available_substrates() -> list[str]:
+    return sorted(_SUBSTRATES)
+
+
+def resolve_substrate(name: str) -> str:
+    """Resolve a user-facing substrate choice to a registry name.
+
+    ``"auto"`` picks ``pallas`` when running on TPU and the ``jnp``
+    reference elsewhere (interpret-mode pallas off-TPU is opt-in by naming
+    ``"pallas"`` explicitly).  Concrete names are validated against the
+    registry and passed through.
+    """
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    get_substrate(name)
+    return name
+
+
+register_substrate("jnp", Substrate())
+register_substrate("pallas", PallasSubstrate())
+
+
+# ---------------------------------------------------------------------------
+# public entry points (substrate-dispatched)
+# ---------------------------------------------------------------------------
+
+
+def _phase2_batch(t, cfg, loci, k, sub):
+    """Phase-2 dispatch: cached merge when materialized and k fits, else
+    beam."""
+    if cfg.use_cache and k <= cfg.cache_k:
+        return sub.cached_topk_batch(t, cfg, loci, k)
+    return sub.beam_topk_batch(t, cfg, loci, k)
+
+
+def topk_phase2(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int,
+                sub=None):
+    """Single-row phase 2 (loci [F]); used by the incremental session."""
+    sub = primitives.resolve_sub(cfg, sub)
+    s, p, e = _phase2_batch(t, cfg, loci[None], k, sub)
+    return s[0], p[0], e[0]
+
+
+def complete_batch(t: DeviceTrie, cfg: EngineConfig, qs: jax.Array,
+                   qlens: jax.Array, k: int, sub=None):
+    """qs: int32[B, L]; qlens: int32[B] -> (scores[B,k], sids[B,k],
+    exact[B])."""
+    sub = primitives.resolve_sub(cfg, sub)
+    loci, overflow = sub.walk_batch(t, cfg, qs, qlens)
+    scores, sids, exact = _phase2_batch(t, cfg, loci, k, sub)
+    return scores, sids, exact & (overflow == 0)
+
+
+def complete_one(t: DeviceTrie, cfg: EngineConfig, q: jax.Array,
+                 qlen: jax.Array, k: int, sub=None):
+    scores, sids, exact = complete_batch(
+        t, cfg, q[None], jnp.asarray(qlen)[None], k, sub)
+    return scores[0], sids[0], exact[0]

@@ -2,8 +2,13 @@
 
 - trie_walk:       batched longest-prefix trie descent (paper hot loop)
 - topk_select:     fused small-k top-k with payload (merge points)
+- locus_merge:     fused cached-top-K locus gather + merge (phase 2b)
 - embedding_bag:   ragged gather + segment reduce (recsys substrate)
 - candidate_topk:  fused dot scoring + running top-k (retrieval / merges)
+
+The completion engine reaches these through its ``pallas`` execution
+substrate (see :mod:`repro.core.engine.substrate`); ``kernels/ops.py``
+holds the padding/interpret-mode wrappers.
 """
 
 from repro.kernels import ops, ref

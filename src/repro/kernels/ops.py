@@ -15,6 +15,7 @@ import numpy as np
 from repro.kernels import ref
 from repro.kernels.candidate_topk import candidate_topk as _candidate_topk
 from repro.kernels.embedding_bag import embedding_bag_dense as _embedding_bag
+from repro.kernels.locus_merge import locus_topk_merge as _locus_topk_merge
 from repro.kernels.topk_select import topk_select as _topk_select
 from repro.kernels.trie_walk import trie_walk as _trie_walk
 
@@ -24,6 +25,12 @@ def _interpret() -> bool:
 
 
 def _pad_rows(x, mult, fill):
+    """Pad axis 0 of ``x`` up to a multiple of ``mult`` with ``fill``.
+
+    Returns (padded, original_row_count).  Callers slice the kernel output
+    back to the original count; the fill value must make padded rows
+    inert for the kernel at hand (see ``_pad_query_batch``).
+    """
     b = x.shape[0]
     pad = (-b) % mult
     if pad == 0:
@@ -32,12 +39,30 @@ def _pad_rows(x, mult, fill):
     return jnp.pad(x, widths, constant_values=fill), b
 
 
+def _pad_query_batch(queries, qlens, mult):
+    """Pad a (queries, qlens) batch together to a multiple of ``mult`` rows.
+
+    Invariant: a padded row must walk to the root with depth 0 so it can
+    be sliced off without a trace.  Two independent guards enforce it —
+    chars fill with -1 (never matches an edge) AND qlens fill with 0 (the
+    walk is inactive from step 0) — so a future change to either fill
+    value alone stays safe.  Checked here on concrete (non-traced) calls.
+    """
+    q, b = _pad_rows(queries, mult, -1)
+    ql, b2 = _pad_rows(qlens, mult, 0)
+    assert b == b2, "queries and qlens disagree on batch size"
+    if b < q.shape[0] and not isinstance(q, jax.core.Tracer):
+        assert (np.asarray(q[b:]) < 0).all() and \
+            (np.asarray(ql[b:]) == 0).all(), \
+            "padded query rows must walk to the root with depth 0"
+    return q, ql, b
+
+
 def trie_walk(first_child, edge_char, edge_child, queries, qlens,
               block_q: int = 128):
     """Batched longest-prefix walk; see kernels/trie_walk.py."""
     block_q = min(block_q, max(int(queries.shape[0]), 1))
-    q, b = _pad_rows(queries, block_q, -1)
-    ql, _ = _pad_rows(qlens, block_q, 0)
+    q, ql, b = _pad_query_batch(queries, qlens, block_q)
     node, depth = _trie_walk(first_child, edge_char, edge_child, q, ql,
                              block_q=block_q, interpret=_interpret())
     return node[:b], depth[:b]
@@ -52,6 +77,29 @@ def topk_select(scores, payload, k: int, block_b: int = 8):
     p, _ = _pad_rows(payload, block_b, -1)
     ts, tp = _topk_select(s, p, k, block_b=block_b, interpret=_interpret())
     return ts[:b], tp[:b]
+
+
+def cached_topk_merge(loci, topk_score, topk_sid, k: int, block_b: int = 8):
+    """Fused cached-top-K locus gather + merge; see kernels/locus_merge.py.
+
+    loci int32[B, F] (-1 padded); topk_score/topk_sid int32[N, K].
+    Returns (scores[B, k], sids[B, k]).
+    """
+    f = int(loci.shape[1])
+    kk = int(topk_score.shape[1])
+    if k >= f * kk:
+        # selection degenerates to sorting the whole (tiny) union
+        s, p = ref.cached_topk_merge_ref(loci, topk_score, topk_sid,
+                                         min(k, f * kk))
+        pad = ((0, 0), (0, k - s.shape[1]))
+        return jnp.pad(s, pad, constant_values=-1), \
+            jnp.pad(p, pad, constant_values=-1)
+    block_b = min(block_b, max(int(loci.shape[0]), 1))
+    # padded rows are all -1 loci => every candidate masked empty; sliced off
+    l, b = _pad_rows(loci, block_b, -1)
+    s, p = _locus_topk_merge(l, topk_score, topk_sid, k, block_b=block_b,
+                             interpret=_interpret())
+    return s[:b], p[:b]
 
 
 def embedding_bag(table, indices, offsets, weights=None, mode: str = "sum",

@@ -85,3 +85,23 @@ def candidate_topk_ref(query, candidates, k: int):
     s = candidates @ query
     top, idx = jax.lax.top_k(s, k)
     return top, idx.astype(jnp.int32)
+
+
+def cached_topk_merge_ref(loci, topk_score, topk_sid, k: int):
+    """Cached-top-K locus gather + merge (engine phase 2b).
+
+    loci: int32[B, F] locus antichains (-1 = empty slot);
+    topk_score/topk_sid: int32[N, K] materialized per-node top-K lists.
+    Returns (scores[B, k], sids[B, k]), score-descending, -1 where empty;
+    candidates ordered loci-major/K-minor so ties resolve identically to
+    the fused kernel.
+    """
+    valid = loci >= 0
+    n = jnp.where(valid, loci, 0)
+    sc = jnp.where(valid[..., None], topk_score[n], -1)
+    si = jnp.where(valid[..., None], topk_sid[n], -1)
+    b = loci.shape[0]
+    flat_s = sc.reshape(b, -1)
+    flat_i = si.reshape(b, -1)
+    top_s, idx = jax.lax.top_k(flat_s, k)
+    return top_s, jnp.take_along_axis(flat_i, idx, axis=1)

@@ -7,7 +7,9 @@
 For autocomplete archs this is the paper's end-to-end system: build (or
 ``--load-index``) the index, replay a workload — one-shot batches or an
 incremental per-keystroke stream through stateful sessions — and report
-latency/throughput (Fig. 7-style numbers).
+latency/throughput (Fig. 7-style numbers).  ``--substrate`` picks the
+execution substrate (jnp reference vs Pallas kernels; ``auto`` resolves
+to pallas on TPU only).
 """
 
 from __future__ import annotations
@@ -34,11 +36,16 @@ def _make_index(spec, args):
     ds = DATASETS[name](n=n, seed=0)
     t0 = time.perf_counter()
     if args.load_index:
+        # loading re-resolves the *saved* spec's substrate for this host;
+        # only an explicit --substrate flag overrides it
         idx = CompletionIndex.load(args.load_index)
+        if args.substrate is not None:
+            idx.set_substrate(args.substrate)
     else:
         idx = build_index(
             ds.strings, ds.scores, make_rules(ds.rules),
-            IndexSpec(kind=args.index_kind, cache_k=args.cache_k))
+            IndexSpec(kind=args.index_kind, cache_k=args.cache_k,
+                      substrate=args.substrate or "auto"))
     build_s = time.perf_counter() - t0
     if args.save_index:
         idx.save(args.save_index)
@@ -60,6 +67,7 @@ def serve_autocomplete(spec, args):
     hit = sum(bool(r) for r in results) / max(len(results), 1)
     out = {
         "arch": spec.arch_id, "kind": idx.kind,
+        "substrate": idx.substrate,
         "workload": "batch",
         "n_strings": idx.stats.n_strings,
         "bytes_per_string": round(idx.stats.bytes_per_string, 1),
@@ -89,6 +97,7 @@ def serve_keystroke(spec, args):
     st = svc.stats
     out = {
         "arch": spec.arch_id, "kind": idx.kind,
+        "substrate": idx.substrate,
         "workload": "keystroke",
         "n_strings": idx.stats.n_strings,
         "build_seconds": round(build_s, 2),
@@ -136,6 +145,12 @@ def main():
     ap.add_argument("--index-kind", default="et",
                     choices=["tt", "et", "ht", "plain"])
     ap.add_argument("--cache-k", type=int, default=0)
+    ap.add_argument("--substrate", default=None,
+                    choices=["jnp", "pallas", "auto"],
+                    help="execution substrate; auto = pallas on TPU, jnp "
+                         "elsewhere (interpret-mode pallas is opt-in). "
+                         "Default: auto when building, the saved choice "
+                         "when --load-index")
     ap.add_argument("--workload", default="batch",
                     choices=["batch", "keystroke"])
     ap.add_argument("--save-index", default=None,

@@ -8,6 +8,14 @@ import sys
 
 import pytest
 
+from repro.core.distributed import HAS_MODERN_SHARDING, SHARDING_SKIP_REASON
+
+# every test here builds an AxisType mesh / traces through shard_map in its
+# subprocess (same interpreter + jax as this process), so skip them all on
+# old jax with the feature-detected reason instead of CI deselection
+pytestmark = pytest.mark.skipif(not HAS_MODERN_SHARDING,
+                                reason=SHARDING_SKIP_REASON)
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -94,3 +94,81 @@ def test_engine_uses_same_semantics_as_trie_walk(rng):
     nodes, depth = ops.trie_walk(t.first_child, t.edge_char, t.edge_child,
                                  jnp.asarray(qs), jnp.asarray(qlens))
     assert list(np.asarray(depth)) == [2, 3, 2, 0]
+
+
+@pytest.mark.parametrize("b,f,n,kk,k,block_b", [
+    (8, 4, 50, 8, 5, 4), (16, 32, 300, 16, 10, 8), (5, 8, 40, 4, 3, 8),
+])
+def test_cached_topk_merge_sweep(b, f, n, kk, k, block_b, rng):
+    loci = rng.integers(-1, n, (b, f)).astype(np.int32)
+    ts = np.sort(rng.integers(0, 10**6, (n, kk)).astype(np.int32),
+                 axis=1)[:, ::-1].copy()      # per-node lists score-desc
+    ti = rng.integers(0, 10**6, (n, kk)).astype(np.int32)
+    a = ops.cached_topk_merge(jnp.asarray(loci), jnp.asarray(ts),
+                              jnp.asarray(ti), k, block_b=block_b)
+    bref = ref.cached_topk_merge_ref(jnp.asarray(loci), jnp.asarray(ts),
+                                     jnp.asarray(ti), k)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(bref[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(bref[1]))
+
+
+def test_cached_topk_merge_empty_rows_and_ties(rng):
+    """All-empty loci rows give -1 results; equal scores resolve to the
+    lower flat (loci-major) candidate index, matching lax.top_k."""
+    n, kk = 20, 4
+    ts = np.zeros((n, kk), np.int32)          # all scores tie at 0
+    ti = np.arange(n * kk, dtype=np.int32).reshape(n, kk)
+    loci = np.array([[3, 7, -1, -1], [-1, -1, -1, -1]], np.int32)
+    s, p = ops.cached_topk_merge(jnp.asarray(loci), jnp.asarray(ts),
+                                 jnp.asarray(ti), 6)
+    rs, rp = ref.cached_topk_merge_ref(jnp.asarray(loci), jnp.asarray(ts),
+                                       jnp.asarray(ti), 6)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(rp))
+    assert (np.asarray(s)[1] == -1).all() and (np.asarray(p)[1] == -1).all()
+
+
+def test_cached_topk_merge_k_saturates_union(rng):
+    """k >= F*K falls back to sorting the whole union, padded to k."""
+    loci = np.array([[1, -1]], np.int32)
+    ts = np.array([[9, 5], [7, 3]], np.int32)
+    ti = np.array([[10, 11], [20, 21]], np.int32)
+    s, p = ops.cached_topk_merge(jnp.asarray(loci), jnp.asarray(ts),
+                                 jnp.asarray(ti), 6)
+    assert s.shape == (1, 6) and p.shape == (1, 6)
+    assert list(np.asarray(s)[0][:2]) == [7, 3]
+    assert list(np.asarray(p)[0][:2]) == [20, 21]
+    assert (np.asarray(s)[0][2:] == -1).all()
+
+
+@pytest.mark.parametrize("bsz", [1, 3, 13, 130])
+def test_trie_walk_nonmultiple_batch_sizes(bsz, rng):
+    """Regression (ops.py padding invariant): batch sizes off the block
+    grid must pad with rows that walk to the root and slice off cleanly."""
+    strings = [f"key {i:04d} tail" for i in range(300)]
+    idx = CompletionIndex.build(strings, list(range(300)), make_rules([]),
+                                kind="plain")
+    t = idx.device
+    queries = [strings[int(rng.integers(0, 300))][: int(rng.integers(0, 9))]
+               for _ in range(bsz)]
+    qs, qlens = pad_queries(queries, 12)
+    a = ops.trie_walk(t.first_child, t.edge_char, t.edge_child,
+                      jnp.asarray(qs), jnp.asarray(qlens), block_q=8)
+    b = ref.trie_walk_ref(t.first_child, t.edge_char, t.edge_child,
+                          jnp.asarray(qs), jnp.asarray(qlens))
+    assert a[0].shape == (bsz,)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_pad_query_batch_invariant():
+    """Padded rows carry qlen 0 AND chars -1 — each alone keeps the walk
+    at the root, so the padded outputs are inert before slicing."""
+    qs = jnp.asarray(np.full((3, 4), 7, np.int32))
+    qlens = jnp.asarray(np.full((3,), 4, np.int32))
+    q, ql, b = ops._pad_query_batch(qs, qlens, 8)
+    assert b == 3 and q.shape == (8, 4) and ql.shape == (8,)
+    assert (np.asarray(q[3:]) == -1).all()
+    assert (np.asarray(ql[3:]) == 0).all()
+    # real rows untouched
+    np.testing.assert_array_equal(np.asarray(q[:3]), np.asarray(qs))
