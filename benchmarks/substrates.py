@@ -1,12 +1,20 @@
 """B9: execution substrates — jnp vs pallas, end-to-end on the B7 workload.
 
 Times ``CompletionIndex.complete`` through both registered substrates on
-the same built index (the substrate switch is a config flip; host/device
-structures are shared), for both phase-2 engines from B7: the
-paper-faithful beam and the beyond-paper cached top-K.  On CPU the pallas
-column runs the kernels in interpret mode — that measures dispatch
-correctness and overhead, not kernel speed; the TPU run is where the
-comparison is meaningful (see README "choosing a substrate").
+the same built indexes (the substrate switch is a config flip; host/device
+structures are shared), across two axes:
+
+- *phase-2 engine* (from B7): the paper-faithful beam vs the beyond-paper
+  cached top-K (``cached_k16``), on the ET index;
+- *rule-bearing walk* (the fused locus-DP kernel's workload): tt/et/ht
+  with the dataset's synonym rule set, where phase 1 is the synonym-aware
+  frontier sweep rather than the rule-free prefix walk.
+
+On CPU the pallas column runs the kernels in interpret mode — that
+measures dispatch correctness and overhead, not kernel speed; the TPU run
+is where the comparison is meaningful (see README "choosing a
+substrate").  Each row records whether the pallas substrate claimed the
+walk natively (``fused_walk``, from the ``can_walk_batch`` probe).
 
   PYTHONPATH=src python -m benchmarks.substrates            # table
   PYTHONPATH=src python -m benchmarks.substrates --smoke \
@@ -24,14 +32,23 @@ from benchmarks.common import (SIZES, build_index, dataset, emit,
                                fixed_batches, time_batches)
 from repro.data.strings import make_workload
 
-# (label, build kwargs) — the two phase-2 engines benchmarked in B7
-ENGINES = [("beam", {}), ("cached_k16", {"cache_k": 16})]
+# (label, index kind, build kwargs) — the two phase-2 engines benchmarked
+# in B7 on ET, plus the rule-bearing walk workloads for the fused
+# locus-DP kernel (tt = link store, ht = links + teleports)
+CASES = [
+    ("beam", "et", {}),
+    ("cached_k16", "et", {"cache_k": 16}),
+    ("beam", "tt", {}),
+    ("beam", "ht", {}),
+]
 SUBSTRATES = ("jnp", "pallas")
 
 
 def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
                      smoke: bool = False):
-    """Returns one row dict per (engine, substrate) with us/query."""
+    """Returns one row dict per (engine, kind, substrate) with us/query."""
+    from repro.core import engine as eng
+
     n_queries = 200 if smoke else SIZES["queries"] // 2
     ds = dataset(name)
     if smoke:
@@ -41,28 +58,40 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
     if smoke:
         batch = 64
     rows = []
-    for engine, kw in ENGINES:
-        idx = build_index(ds, "et", **kw)
+    # the probe must see the padded length complete() will actually jit
+    # with, or the fused_walk column could misreport the timed path
+    from repro.api.compile_cache import bucket_size
+    seq_len = bucket_size(max(len(q) for q in qs))
+    for engine, kind, kw in CASES:
+        idx = build_index(ds, kind, **kw)
         for substrate in SUBSTRATES:
             idx.set_substrate(substrate)
+            fused = substrate == "pallas" and eng.get_substrate(
+                substrate).can_walk_batch(idx.device, idx.cfg, seq_len)
             batches = fixed_batches(qs, batch)
             sec = time_batches(lambda b: idx.complete(b, k=k), batches)
             rows.append({
                 "engine": engine,
+                "kind": kind,
                 "substrate": substrate,
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu"
                 and substrate == "pallas",
+                "fused_walk": bool(fused),
                 "bytes_per_string": round(idx.stats.bytes_per_string, 1),
                 "us_per_q": round(sec * 1e6, 1),
             })
     return rows
 
 
+def _table(rows):
+    emit([[r["engine"], r["kind"], r["substrate"], r["us_per_q"]]
+          for r in rows], ["engine", "kind", "substrate", "us_per_q"])
+
+
 def b9_substrates():
     rows = bench_substrates()
-    emit([[r["engine"], r["substrate"], r["us_per_q"]] for r in rows],
-         ["engine", "substrate", "us_per_q"])
+    _table(rows)
     return rows
 
 
@@ -83,8 +112,7 @@ def main() -> None:
     args = ap.parse_args()
 
     rows = bench_substrates(k=args.k, batch=args.batch, smoke=args.smoke)
-    emit([[r["engine"], r["substrate"], r["us_per_q"]] for r in rows],
-         ["engine", "substrate", "us_per_q"])
+    _table(rows)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"benchmark": "substrates",

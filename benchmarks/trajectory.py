@@ -1,0 +1,92 @@
+"""Perf trajectory: fold substrate smoke runs into one repo-root history.
+
+Each CI run of ``benchmarks.substrates --smoke --out substrates-smoke.json``
+produces a point-in-time JSON; this tool appends it to
+``BENCH_substrates.json`` at the repo root so the jnp-vs-pallas (and
+rule-bearing vs rule-free walk) numbers accumulate into a trajectory that
+can be read across PRs (ROADMAP open item).  Entries are keyed by commit
+when available so re-runs of the same commit update in place instead of
+duplicating.
+
+  PYTHONPATH=src python -m benchmarks.trajectory substrates-smoke.json
+  PYTHONPATH=src python -m benchmarks.trajectory smoke.json \
+      --history BENCH_substrates.json --commit "$GITHUB_SHA"
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import time
+
+DEFAULT_HISTORY = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_substrates.json")
+
+
+def _commit() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            check=True).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def load_history(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        hist = json.load(f)
+    if not isinstance(hist, list):
+        raise ValueError(f"{path}: trajectory must be a JSON list")
+    return hist
+
+
+def append_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
+               commit: str | None = None, timestamp: float | None = None):
+    """Append one smoke JSON to the trajectory; returns the new history."""
+    with open(smoke_path) as f:
+        run = json.load(f)
+    entry = {
+        "timestamp": timestamp if timestamp is not None else time.time(),
+        "commit": commit or _commit(),
+        "backend": run.get("backend"),
+        "smoke": run.get("smoke"),
+        "rows": run.get("rows", []),
+    }
+    hist = load_history(history_path)
+    hist = [e for e in hist if e.get("commit") != entry["commit"]
+            or entry["commit"] == "unknown"]
+    hist.append(entry)
+    with open(history_path, "w") as f:
+        json.dump(hist, f, indent=2)
+        f.write("\n")
+    return hist
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("smoke_json", help="output of benchmarks.substrates "
+                                       "--smoke --out <path>")
+    ap.add_argument("--history", default=DEFAULT_HISTORY,
+                    help="trajectory file to append to "
+                         "(default: BENCH_substrates.json at repo root)")
+    ap.add_argument("--commit", default=None,
+                    help="commit id to key this run by (default: "
+                         "$GITHUB_SHA or git rev-parse HEAD)")
+    args = ap.parse_args()
+    hist = append_run(args.smoke_json, args.history, args.commit)
+    last = hist[-1]
+    print(f"appended run {last['commit'][:12]} "
+          f"({len(last['rows'])} rows) -> {args.history} "
+          f"[{len(hist)} runs total]")
+
+
+if __name__ == "__main__":
+    main()

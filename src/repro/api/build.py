@@ -129,6 +129,7 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
 
     if spec.cache_k > 0:
         tb.build_topk_cache(trie, spec.cache_k)
+    tb.pack_rule_planes(trie, rule_trie)
 
     has_rule_side = bool(active.any())
     cfg = eng.EngineConfig(
@@ -138,12 +139,48 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
         max_lhs_len=rule_trie.max_lhs_len if has_rule_side else 0,
         max_terms_per_node=rule_trie.max_terms_per_node,
         teleports=trie.max_syn_targets,
+        tele_width=trie.tele_plane.shape[1],
+        term_width=rule_trie.term_plane.shape[1],
         use_cache=spec.cache_k > 0, cache_k=spec.cache_k,
         substrate=eng.resolve_substrate(spec.substrate),
     )
+    validate_rule_planes(trie, rule_trie, cfg)
     stats = _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
                         len(ss), time.perf_counter() - t0)
     return CompletionIndex(spec, trie, rule_trie, rules, ss, sc, cfg, stats)
+
+
+def validate_rule_planes(trie, rule_trie, cfg) -> None:
+    """Cross-check the packed rule plane against the static widths the
+    engine was configured with (the jit shape key).  Runs at build time and
+    again when a persisted container is loaded, so a stale or hand-edited
+    container fails loudly instead of mis-gathering on device."""
+    n = trie.n_nodes
+    checks = [
+        ("tele_plane", trie.tele_plane, (n, cfg.tele_width)),
+        ("link_ptr", trie.link_ptr, (n + 1,)),
+        ("term_plane", rule_trie.term_plane,
+         (rule_trie.n_nodes, cfg.term_width)),
+    ]
+    for name, arr, want in checks:
+        if arr is None or tuple(arr.shape) != want:
+            got = None if arr is None else tuple(arr.shape)
+            raise ValueError(
+                f"rule plane {name!r} has shape {got}, expected {want}; "
+                "rebuild the index (or re-save the container) with this "
+                "version")
+    # the plane widths are derived statics: they must agree with the
+    # engine widths the DP actually loops over
+    if cfg.tele_width != max(cfg.teleports, 1):
+        raise ValueError(
+            f"rule plane width mismatch: tele_width={cfg.tele_width} but "
+            f"teleports={cfg.teleports}")
+    if cfg.term_width != max(cfg.max_terms_per_node, 1):
+        raise ValueError(
+            f"rule plane width mismatch: term_width={cfg.term_width} but "
+            f"max_terms_per_node={cfg.max_terms_per_node}")
+    if int(trie.link_ptr[-1]) != len(trie.link_rule):
+        raise ValueError("link_ptr does not cover the link store rows")
 
 
 def _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
@@ -158,9 +195,9 @@ def _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
         "emit_score", "emit_is_leaf"))
     syn_edge_bytes = sum(getattr(trie, n).nbytes for n in (
         "s_first_child", "s_edge_char", "s_edge_child", "syn_ptr",
-        "syn_tgt"))
+        "syn_tgt", "tele_plane"))
     link_bytes = sum(getattr(trie, n).nbytes for n in (
-        "link_anchor", "link_rule", "link_target"))
+        "link_anchor", "link_rule", "link_target", "link_ptr"))
     cache_bytes = (trie.topk_score.nbytes + trie.topk_sid.nbytes
                    if trie.topk_score is not None else 0)
     syn_frac = n_syn / max(n_nodes, 1)

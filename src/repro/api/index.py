@@ -26,6 +26,9 @@ def _to_device(trie: tb.DictTrie, rule_trie: tb.RuleTrie) -> eng.DeviceTrie:
     j = jnp.asarray
     has_cache = trie.topk_score is not None
     dummy = np.full((1, 1), -1, np.int32)
+    if trie.tele_plane is None or trie.link_ptr is None \
+            or rule_trie.term_plane is None:
+        tb.pack_rule_planes(trie, rule_trie)
     return eng.DeviceTrie(
         depth=j(trie.depth), max_score=j(trie.max_score),
         leaf_score=j(trie.leaf_score), leaf_sid=j(trie.leaf_sid),
@@ -36,12 +39,12 @@ def _to_device(trie: tb.DictTrie, rule_trie: tb.RuleTrie) -> eng.DeviceTrie:
         s_edge_child=j(trie.s_edge_child),
         emit_ptr=j(trie.emit_ptr), emit_node=j(trie.emit_node),
         emit_score=j(trie.emit_score), emit_is_leaf=j(trie.emit_is_leaf),
-        syn_ptr=j(trie.syn_ptr), syn_tgt=j(trie.syn_tgt),
-        link_anchor=j(trie.link_anchor), link_rule=j(trie.link_rule),
+        tele_plane=j(trie.tele_plane),
+        link_ptr=j(trie.link_ptr), link_rule=j(trie.link_rule),
         link_target=j(trie.link_target),
         r_first_child=j(rule_trie.first_child), r_edge_char=j(rule_trie.edge_char),
-        r_edge_child=j(rule_trie.edge_child), r_term_ptr=j(rule_trie.term_ptr),
-        r_term_rule=j(rule_trie.term_rule), r_rule_len=j(rule_trie.rule_len),
+        r_edge_child=j(rule_trie.edge_child),
+        r_term_plane=j(rule_trie.term_plane), r_rule_len=j(rule_trie.rule_len),
         topk_score=j(trie.topk_score if has_cache else dummy),
         topk_sid=j(trie.topk_sid if has_cache else dummy),
     )

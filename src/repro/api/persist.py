@@ -6,6 +6,15 @@ version, IndexSpec, EngineConfig, BuildStats, trie scalars) into a single
 compressed ``.npz``.  ``load_index_parts`` reverses it without re-running
 trie construction — a serving process restarts in milliseconds instead of
 paying the multi-second rebuild.
+
+Format history:
+
+- v1 (PR 1): dict/rule-trie CSRs + metadata.
+- v2 (this version): adds the packed rule plane (``trie__tele_plane``,
+  ``trie__link_ptr``, ``rule_trie__term_plane``) and the static plane
+  widths on the persisted EngineConfig.  v1 containers still load — the
+  planes are rebuilt from the CSRs on the fly (a few ms of numpy) and the
+  widths recomputed, so old on-disk indexes keep working unchanged.
 """
 
 from __future__ import annotations
@@ -20,7 +29,8 @@ from repro.api.spec import IndexSpec
 from repro.core import engine as eng
 from repro.core import trie_build as tb
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+_SUPPORTED_VERSIONS = (1, 2)
 _META_KEY = "__meta__"
 
 
@@ -87,10 +97,10 @@ def load_index_parts(path: str) -> dict:
             raise ValueError(f"{path}: not a repro completion-index container")
         meta = json.loads(z[_META_KEY].tobytes().decode())
         version = meta.get("format_version")
-        if version != FORMAT_VERSION:
+        if version not in _SUPPORTED_VERSIONS:
             raise ValueError(
                 f"{path}: unsupported index format version {version!r} "
-                f"(this build reads version {FORMAT_VERSION})")
+                f"(this build reads versions {_SUPPORTED_VERSIONS})")
 
         def group(prefix: str) -> dict[str, np.ndarray]:
             return {k[len(prefix):]: z[k] for k in z.files
@@ -106,6 +116,8 @@ def load_index_parts(path: str) -> dict:
                            max_depth=ts["max_depth"],
                            max_syn_targets=ts["max_syn_targets"])
         rule_trie = tb.RuleTrie(**rt_arrays, **meta["rule_trie_scalars"])
+        if version < 2:   # pre-rule-plane container: rebuild from the CSRs
+            tb.pack_rule_planes(trie, rule_trie)
         strings = _unpack_bytes(z["strings__blob"], z["strings__offsets"])
         scores = z["scores"]
         rules = [tb.SynonymRule(lhs, rhs) for lhs, rhs in zip(
@@ -117,9 +129,15 @@ def load_index_parts(path: str) -> dict:
     cfg = eng.EngineConfig(
         **{k: v for k, v in meta["cfg"].items() if k in known})
     # the substrate is a property of the *host* we load on, not the one
-    # that saved: re-resolve the spec's (possibly "auto") choice here
+    # that saved: re-resolve the spec's (possibly "auto") choice here.
+    # Plane widths come from the arrays themselves (v1 metadata predates
+    # them) and are cross-checked before anything reaches the device.
     cfg = dataclasses.replace(
-        cfg, substrate=eng.resolve_substrate(spec.substrate))
+        cfg, substrate=eng.resolve_substrate(spec.substrate),
+        tele_width=trie.tele_plane.shape[1],
+        term_width=rule_trie.term_plane.shape[1])
+    from repro.api.build import validate_rule_planes
+    validate_rule_planes(trie, rule_trie, cfg)
     return {
         "spec": spec,
         "trie": trie,

@@ -458,21 +458,21 @@ def _build_autocomplete(spec: ArchSpec, cell: ShapeCell, mesh, cfg) -> CellBuild
         emit_ptr=shard_arr((n + 1,)), emit_node=shard_arr((e + n,)),
         emit_score=shard_arr((e + n,)),
         emit_is_leaf=shard_arr((e + n,), jnp.bool_),
-        syn_ptr=shard_arr((n + 1,)), syn_tgt=shard_arr((max(e // 8, 1),)),
-        link_anchor=shard_arr((max(e // 4, 1),)),
+        tele_plane=shard_arr((n, 2)),
+        link_ptr=shard_arr((n + 1,)),
         link_rule=shard_arr((max(e // 4, 1),)),
         link_target=shard_arr((max(e // 4, 1),)),
         r_first_child=shard_arr((p["rule_nodes"] + 1,)),
         r_edge_char=shard_arr((p["rule_nodes"],)),
         r_edge_child=shard_arr((p["rule_nodes"],)),
-        r_term_ptr=shard_arr((p["rule_nodes"] + 1,)),
-        r_term_rule=shard_arr((p["rules"],)),
+        r_term_plane=shard_arr((p["rule_nodes"], 2)),
         r_rule_len=shard_arr((p["rules"],)),
         topk_score=shard_arr((n, K)), topk_sid=shard_arr((n, K)),
     )
     ecfg = eng.EngineConfig(
         frontier=16, gens=32, expand=8, max_steps=64,
         rule_matches=2, max_lhs_len=12, max_terms_per_node=2, teleports=2,
+        tele_width=2, term_width=2,
         use_cache=p.get("cache_k", 0) > 0, cache_k=p.get("cache_k", 0))
     qs = _sds((B, Lq), i32, ("batch", None), mesh)
     qlens = _sds((B,), i32, ("batch",), mesh)

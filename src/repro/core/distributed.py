@@ -60,7 +60,11 @@ def _pad_to(a: np.ndarray, shape) -> np.ndarray:
     pad = [(0, t - s) for s, t in zip(a.shape, shape)]
     if a.dtype == bool:
         return np.pad(a, pad, constant_values=False)
-    return np.pad(a, pad, mode="edge" if a.ndim == 1 and a.shape[0] > 0 else "constant")
+    if a.ndim == 1 and a.shape[0] > 0:
+        return np.pad(a, pad, mode="edge")
+    # 2-D planes (tele_plane, r_term_plane, topk_*) use -1 = empty, so
+    # width padding across shards must stay inert, not point at node 0
+    return np.pad(a, pad, constant_values=-1)
 
 
 def stack_shards(indexes: list[CompletionIndex]):
@@ -90,6 +94,8 @@ def stack_shards(indexes: list[CompletionIndex]):
         max_lhs_len=max(c.max_lhs_len for c in cfgs),
         max_terms_per_node=max(c.max_terms_per_node for c in cfgs),
         teleports=max(c.teleports for c in cfgs),
+        tele_width=max(c.tele_width for c in cfgs),
+        term_width=max(c.term_width for c in cfgs),
         use_cache=all(c.use_cache for c in cfgs),
         cache_k=min(c.cache_k for c in cfgs),
         substrate=cfgs[0].substrate,   # shards share one IndexSpec

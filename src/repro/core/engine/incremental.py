@@ -81,21 +81,19 @@ def advance_locus_state(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
                                   state.rnodes[:-1]])
         rnodes = sub.csr_child_lookup(t.r_first_child, t.r_edge_char,
                                       t.r_edge_child, starts, c, r_iters)
-        r_size = max(int(t.r_term_rule.shape[0]), 1)
         for j in range(H):
             node = rnodes[j]
             ok = node >= 0
             nn = jnp.where(ok, node, 0)
-            t_lo = t.r_term_ptr[nn]
-            t_hi = t.r_term_ptr[nn + 1]
+            terms = t.r_term_plane[nn]          # [term_width], -1 padded
             # lhs of length j+1 anchors at the frontier j keystrokes back
             anchor_row = state.rows[j]
             anchor_ok = anchor_row >= 0
             anchor_ok &= ~t.syn_mask[jnp.where(anchor_row >= 0, anchor_row, 0)]
             anchors = jnp.where(anchor_ok, anchor_row, NEG_ONE)
             for j2 in range(cfg.max_terms_per_node):
-                has = ok & (t_lo + j2 < t_hi)
-                rid = t.r_term_rule[jnp.clip(t_lo + j2, 0, r_size - 1)]
+                rid = terms[j2]
+                has = ok & (rid >= 0)
                 tgt = link_lookup(t, anchors, rid)
                 parts.append(jnp.where(has, tgt, NEG_ONE))
 

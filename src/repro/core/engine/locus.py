@@ -3,14 +3,20 @@
 reach[pos] = set of trie nodes reachable by consuming p[:pos] under some
 rewriting.  Transitions: literal char step (dict + synonym-branch
 children), synonym teleports (ET/HT expanded rules), and rule steps
-through the link store (TT/HT unexpanded rules).  All fixed shapes.
+through the link store (TT/HT unexpanded rules).  All fixed shapes; the
+rule-side lookups read the packed rule plane
+(:func:`repro.core.trie_build.pack_rule_planes`): dense ``tele_plane``
+rows for teleports, ``link_ptr`` + one binary search for link steps, and
+``r_term_plane`` rows for full-lhs matches.
 
 Every inner CSR lookup / dedup-compaction routes through the active
 :class:`~repro.core.engine.substrate.Substrate` (threaded as ``sub``), so
 kernel-backed substrates can replace the primitives without touching the
 DP structure.  Substrates may also replace this whole sweep at batch
-granularity (``Substrate.walk_batch``) — e.g. the Pallas trie-walk kernel
-handles the rule-free prefix case end-to-end.
+granularity (``Substrate.walk_batch``) — the Pallas trie-walk kernel
+handles the rule-free prefix case and the fused locus-DP kernel
+(:mod:`repro.kernels.locus_dp`) the rule-bearing tt/et/ht case, both
+bit-identical to this reference.
 """
 
 from __future__ import annotations
@@ -49,11 +55,10 @@ def match_table(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, sub=None):
                 node[None], c[None], iters)[0]
             ok = node >= 0
             nn = jnp.where(ok, node, 0)
-            t_lo = t.r_term_ptr[nn]
-            t_hi = t.r_term_ptr[nn + 1]
+            terms = t.r_term_plane[nn]          # [term_width], -1 padded
             for j2 in range(cfg.max_terms_per_node):
-                has = ok & (t_lo + j2 < t_hi) & (cnt < M)
-                rid = t.r_term_rule[jnp.clip(t_lo + j2, 0, max(int(t.r_term_rule.shape[0]), 1) - 1)]
+                rid = terms[j2]
+                has = ok & (rid >= 0) & (cnt < M)
                 slot = jnp.clip(cnt, 0, M - 1)
                 rules = jnp.where(has, rules.at[slot].set(rid), rules)
                 ends = jnp.where(has, ends.at[slot].set(i + j + 1), ends)
@@ -72,29 +77,25 @@ def teleport_expand(t: DeviceTrie, cfg: EngineConfig, row: jax.Array,
     F = row.shape[0]
     valid = row >= 0
     n = jnp.where(valid, row, 0)
-    lo = t.syn_ptr[n]
-    hi = t.syn_ptr[n + 1]
-    size = max(int(t.syn_tgt.shape[0]), 1)
-    offs = jnp.arange(cfg.teleports, dtype=jnp.int32)
-    idx = lo[:, None] + offs[None, :]
-    ok = (idx < hi[:, None]) & valid[:, None]
-    tgt = jnp.where(ok, t.syn_tgt[jnp.clip(idx, 0, size - 1)], NEG_ONE)
+    tgt = jnp.where(valid[:, None], t.tele_plane[n], NEG_ONE)
     merged = jnp.concatenate([row, tgt.reshape(-1)])
     return sub.dedup_compact(merged, F)
 
 
 def link_lookup(t: DeviceTrie, anchors: jax.Array, rid: jax.Array):
-    """Link-store search: (anchor, rule) -> target or -1. anchors [F]."""
-    n_link = int(t.link_anchor.shape[0])
+    """Link-store search: (anchor, rule) -> target or -1. anchors [F].
+
+    The packed ``link_ptr`` CSR bounds each anchor's (rule-sorted) row
+    range with one pointer load, so the whole lookup is a single binary
+    search over ``link_rule`` instead of the pre-relayout three."""
+    n_link = int(t.link_rule.shape[0])
     if n_link == 0:
         return jnp.full(anchors.shape, NEG_ONE, jnp.int32)
     iters = iters_for(n_link)
     valid = anchors >= 0
     a = jnp.where(valid, anchors, 0)
-    zero = jnp.zeros_like(a)
-    full = jnp.full_like(a, n_link)
-    lo = lower_bound(t.link_anchor, zero, full, a, iters)
-    hi = lower_bound(t.link_anchor, zero, full, a + 1, iters)
+    lo = t.link_ptr[a]
+    hi = t.link_ptr[a + 1]
     pos = lower_bound(t.link_rule, lo, hi, rid, iters)
     found = (pos < hi) & (t.link_rule[jnp.clip(pos, 0, n_link - 1)] == rid) & valid
     return jnp.where(found, t.link_target[jnp.clip(pos, 0, n_link - 1)], NEG_ONE)

@@ -41,19 +41,18 @@ class DeviceTrie(NamedTuple):
     emit_node: jax.Array
     emit_score: jax.Array
     emit_is_leaf: jax.Array
-    # teleports
-    syn_ptr: jax.Array
-    syn_tgt: jax.Array
-    # link store
-    link_anchor: jax.Array
-    link_rule: jax.Array
-    link_target: jax.Array
-    # rule trie
+    # -- packed rule plane (built by trie_build.pack_rule_planes) --------
+    # teleports: dense per-node target plane, -1 padded
+    tele_plane: jax.Array   # int32[N, tele_width]
+    # link store: per-anchor CSR over rule-sorted rows
+    link_ptr: jax.Array     # int32[N+1]
+    link_rule: jax.Array    # int32[Lk]
+    link_target: jax.Array  # int32[Lk]
+    # rule trie (CSR children + dense term plane)
     r_first_child: jax.Array
     r_edge_char: jax.Array
     r_edge_child: jax.Array
-    r_term_ptr: jax.Array
-    r_term_rule: jax.Array
+    r_term_plane: jax.Array  # int32[Nr, term_width], -1 padded
     r_rule_len: jax.Array
     # materialized per-node top-K (dummy (1,1) when disabled)
     topk_score: jax.Array
@@ -72,6 +71,11 @@ class EngineConfig:
     max_lhs_len: int = 0        # rule-trie walk depth
     max_terms_per_node: int = 1
     teleports: int = 0          # Ts: max teleport targets per node
+    # static widths of the packed rule plane (tele_plane / r_term_plane
+    # column counts; always >= 1, validated against the arrays at
+    # build/load time — see api.build.validate_rule_planes)
+    tele_width: int = 1
+    term_width: int = 1
     use_cache: bool = False     # phase-2 via materialized top-K
     cache_k: int = 0
     substrate: str = "jnp"      # execution substrate ("jnp" | "pallas")

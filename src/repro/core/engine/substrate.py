@@ -4,8 +4,9 @@ A :class:`Substrate` bundles the engine's hot primitives behind one seam:
 
   - ``csr_child_lookup`` / ``dedup_compact`` — the inner locus-DP ops
     (threaded through every frontier step);
-  - ``walk_batch``       — phase 1 at batch granularity (locus DP, or a
-    batched longest-prefix kernel when the trie is rule-free);
+  - ``walk_batch``       — phase 1 at batch granularity, with a
+    ``can_walk_batch`` capability probe naming which (trie, config)
+    shapes the substrate handles natively;
   - ``topk_with_payload`` — batched small-k selection with payload;
   - ``cached_topk_batch`` — the cached-top-K locus gather+merge;
   - ``beam_topk_batch``   — phase 2a (vmapped beam; jnp on all substrates
@@ -13,18 +14,23 @@ A :class:`Substrate` bundles the engine's hot primitives behind one seam:
 
 The base class *is* the reference implementation (pure jnp, registered as
 ``"jnp"``).  :class:`PallasSubstrate` (``"pallas"``) routes the batched
-walk through :func:`repro.kernels.ops.trie_walk`, cached merges through
-:func:`repro.kernels.ops.topk_select` / ``cached_topk_merge``, and runs in
-interpret mode off-TPU.  ``EngineConfig.substrate`` names the substrate,
-so it rides every jit/compile-cache key; ``resolve_substrate("auto")``
-picks ``pallas`` on TPU and ``jnp`` elsewhere (interpret-mode pallas is
-opt-in, not a default, off-TPU).
+walk through :func:`repro.kernels.ops.trie_walk` (rule-free tries) or the
+fused synonym-aware locus-DP kernel :func:`repro.kernels.ops.locus_walk`
+(tt/et/ht), cached merges through :func:`repro.kernels.ops.topk_select` /
+``cached_topk_merge``, and runs in interpret mode off-TPU.
+``EngineConfig.substrate`` names the substrate, so it rides every
+jit/compile-cache key; ``resolve_substrate("auto")`` picks ``pallas`` on
+TPU and ``jnp`` elsewhere (interpret-mode pallas is opt-in, not a
+default, off-TPU).
 
-New kernel work (fused locus DP, DMA-streamed CSR for HBM-resident tries)
-lands as an additive substrate method override, not an engine rewrite.
+New kernel work (fused beam phase 2, DMA-streamed CSR for HBM-resident
+tries) lands as an additive substrate method override, not an engine
+rewrite.
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +56,13 @@ class Substrate:
         return primitives.dedup_pad(vec, width)
 
     # -- phase 1: batched locus walk --------------------------------------
+
+    def can_walk_batch(self, t: DeviceTrie, cfg: EngineConfig,
+                       seq_len: int) -> bool:
+        """Capability probe: True when ``walk_batch`` has a native
+        (non-fallback) path for this (trie, config, query length).  The
+        jnp reference DP handles everything."""
+        return True
 
     def walk_batch(self, t: DeviceTrie, cfg: EngineConfig, qs: jax.Array,
                    qlens: jax.Array):
@@ -88,12 +101,31 @@ class PallasSubstrate(Substrate):
     """Kernel-backed substrate: dispatches the batched hot primitives to
     :mod:`repro.kernels` (compiled on TPU, interpret mode elsewhere).
 
-    The locus DP's inner lookups/compactions are inherited from the jnp
-    reference — they run inside vmap/fori_loop where a pallas_call cannot
-    be tiled today; the batched seams below are where the kernels bite.
+    Phase 1 has two kernel paths: rule-free tries take the single-node
+    longest-prefix walk (``trie_walk``), rule-bearing tt/et/ht tries take
+    the fused synonym-aware locus DP (``locus_walk``) whenever the static
+    shapes fit the kernel (``can_walk_batch``); anything else falls back
+    to the inherited jnp DP, which is bit-identical by contract.  The
+    DP's *inner* lookups/compactions are likewise inherited — they only
+    run on the fallback path, where a pallas_call cannot be tiled.
     """
 
     name = "pallas"
+
+    # fused locus-DP static-shape envelope: beyond these the unrolled
+    # sweep stops being a sensible single kernel (trace size / VMEM) and
+    # the jnp DP is the right tool.  The unrolled trip count grows as
+    # seq_len * max_lhs_len * max_terms_per_node, and the dedup width as
+    # frontier * tele_width, so every one of those dimensions is bounded.
+    # Table bytes must leave VMEM room for the (block_q, L+1, F) frontier
+    # scratch + query tile.
+    _FUSE_MAX_SEQ = 64
+    _FUSE_MAX_FRONTIER = 128
+    _FUSE_MAX_RULE_MATCHES = 8
+    _FUSE_MAX_LHS = 24
+    _FUSE_MAX_TERMS = 4
+    _FUSE_MAX_TELEPORTS = 16
+    _FUSE_MAX_TABLE_BYTES = 8 << 20
 
     @staticmethod
     def _rule_free(t: DeviceTrie, cfg: EngineConfig) -> bool:
@@ -103,18 +135,43 @@ class PallasSubstrate(Substrate):
         return (cfg.rule_matches == 0 and cfg.teleports == 0
                 and int(t.s_edge_child.shape[0]) == 0)
 
+    def _can_fuse_locus_dp(self, t: DeviceTrie, cfg: EngineConfig,
+                           seq_len: int) -> bool:
+        """Probe the fused locus-DP kernel's static envelope."""
+        if seq_len > self._FUSE_MAX_SEQ \
+                or cfg.frontier > self._FUSE_MAX_FRONTIER \
+                or cfg.rule_matches > self._FUSE_MAX_RULE_MATCHES \
+                or cfg.max_lhs_len > self._FUSE_MAX_LHS \
+                or cfg.max_terms_per_node > self._FUSE_MAX_TERMS \
+                or cfg.teleports > self._FUSE_MAX_TELEPORTS:
+            return False
+        table_elems = sum(
+            math.prod(getattr(t, f).shape) for f in (
+                "first_child", "edge_char", "edge_child", "s_first_child",
+                "s_edge_char", "s_edge_child", "syn_mask", "tout",
+                "tele_plane", "link_ptr", "link_rule", "link_target",
+                "r_first_child", "r_edge_char", "r_edge_child",
+                "r_term_plane"))
+        return table_elems * 4 <= self._FUSE_MAX_TABLE_BYTES
+
+    def can_walk_batch(self, t, cfg, seq_len):
+        return self._rule_free(t, cfg) \
+            or self._can_fuse_locus_dp(t, cfg, seq_len)
+
     def walk_batch(self, t, cfg, qs, qlens):
-        if not self._rule_free(t, cfg):
-            return super().walk_batch(t, cfg, qs, qlens)
         from repro.kernels import ops
 
-        node, depth = ops.trie_walk(t.first_child, t.edge_char, t.edge_child,
-                                    qs, qlens)
-        B = int(qs.shape[0])
-        hit = depth == qlens        # partial walks have no completions
-        loci = jnp.full((B, cfg.frontier), NEG_ONE, jnp.int32)
-        loci = loci.at[:, 0].set(jnp.where(hit, node, NEG_ONE))
-        return loci, jnp.zeros((B,), jnp.int32)
+        if self._rule_free(t, cfg):
+            node, depth = ops.trie_walk(t.first_child, t.edge_char,
+                                        t.edge_child, qs, qlens)
+            B = int(qs.shape[0])
+            hit = depth == qlens    # partial walks have no completions
+            loci = jnp.full((B, cfg.frontier), NEG_ONE, jnp.int32)
+            loci = loci.at[:, 0].set(jnp.where(hit, node, NEG_ONE))
+            return loci, jnp.zeros((B,), jnp.int32)
+        if self._can_fuse_locus_dp(t, cfg, int(qs.shape[1])):
+            return ops.locus_walk(t, cfg, qs, qlens)
+        return super().walk_batch(t, cfg, qs, qlens)
 
     def topk_with_payload(self, scores, payload, k):
         from repro.kernels import ops

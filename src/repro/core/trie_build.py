@@ -100,6 +100,12 @@ class DictTrie:
     link_rule: np.ndarray    # int32[L]
     link_target: np.ndarray  # int32[L]
 
+    # packed rule plane (see pack_rule_planes): dense, padded relayouts of
+    # the rule-side CSRs that the device engine and the fused locus-DP
+    # kernel consume directly
+    tele_plane: np.ndarray | None = None  # int32[N, Tw] teleports, -1 pad
+    link_ptr: np.ndarray | None = None    # int32[N+1] anchor -> link rows
+
     # optional materialized per-node top-K (dict leaves only)
     topk_score: np.ndarray | None = None  # int32[N, K]
     topk_sid: np.ndarray | None = None    # int32[N, K]
@@ -138,6 +144,10 @@ class RuleTrie:
     term_ptr: np.ndarray     # int32[N+1]  node -> rule ids terminating here
     term_rule: np.ndarray    # int32[T]
     rule_len: np.ndarray     # int32[R]    lhs length per rule id
+    # packed rule plane (see pack_rule_planes): term lists as a dense,
+    # -1-padded [N, term_width] plane (term_width >= 1 even when empty,
+    # so device gathers never need a degenerate-shape guard)
+    term_plane: np.ndarray | None = None  # int32[N, Tw]
     max_lhs_len: int = 0
     max_matches_per_pos: int = 0  # max #terminals on any root path
     max_terms_per_node: int = 1   # max #rules terminating at one node
@@ -497,6 +507,51 @@ def set_link_store(trie: DictTrie, anchors, rids, targets) -> None:
     trie.link_anchor = anchors[order].astype(np.int32)
     trie.link_rule = rids[order].astype(np.int32)
     trie.link_target = targets[order].astype(np.int32)
+
+
+def _csr_to_plane(ptr: np.ndarray, data: np.ndarray, width: int) -> np.ndarray:
+    """Dense [len(ptr)-1, width] plane of a CSR, -1 padded, row order kept."""
+    n = len(ptr) - 1
+    plane = np.full((n, max(width, 1)), -1, dtype=np.int32)
+    counts = np.diff(ptr)
+    if len(data):
+        rows = np.repeat(np.arange(n, dtype=np.int64), counts)
+        cols = np.arange(len(data), dtype=np.int64) - np.repeat(
+            ptr[:-1].astype(np.int64), counts)
+        plane[rows, cols] = data
+    return plane
+
+
+def pack_rule_planes(trie: DictTrie, rule_trie: RuleTrie) -> None:
+    """Relayout the rule-side structures into the packed *rule plane*.
+
+    The frontier sweep's three rule-side lookups each pay for CSR
+    indirection in the sweep's hot loop; this packs them into the dense,
+    padded forms the device engine (and the fused locus-DP kernel) consume
+    with one vectorized gather / one binary search each:
+
+    - ``trie.tele_plane`` int32[N, tele_width]: teleport targets per node,
+      -1 padded (replaces the syn_ptr/syn_tgt gather chain);
+    - ``trie.link_ptr`` int32[N+1]: per-anchor CSR over the (rule-sorted)
+      ``link_rule``/``link_target`` rows (replaces two binary searches over
+      ``link_anchor`` with one pointer load);
+    - ``rule_trie.term_plane`` int32[Nr, term_width]: rule ids terminating
+      at each rule-trie node, -1 padded.  Width >= 1 always, so gathers
+      need no degenerate-shape clamp even for rule-free builds.
+
+    Plane widths are static (recorded as ``EngineConfig.tele_width`` /
+    ``term_width`` at build time) and ride the npz container from format
+    version 2 on; loading an older container rebuilds them here.
+    Must run after ``set_link_store`` / the final ``rebuild_edges``.
+    """
+    n = trie.n_nodes
+    trie.tele_plane = _csr_to_plane(trie.syn_ptr, trie.syn_tgt,
+                                    trie.max_syn_targets)
+    trie.link_ptr = np.searchsorted(
+        trie.link_anchor, np.arange(n + 1, dtype=np.int64)).astype(np.int32)
+    rule_trie.term_plane = _csr_to_plane(rule_trie.term_ptr,
+                                         rule_trie.term_rule,
+                                         rule_trie.max_terms_per_node)
 
 
 # ---------------------------------------------------------------------------

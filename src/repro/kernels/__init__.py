@@ -1,6 +1,8 @@
 """Pallas TPU kernels (interpret-mode validated on CPU) + jnp references.
 
-- trie_walk:       batched longest-prefix trie descent (paper hot loop)
+- trie_walk:       batched longest-prefix trie descent (rule-free phase 1)
+- locus_dp:        fused synonym-aware locus DP (tt/et/ht phase 1 — the
+                   paper's rewriting-aware frontier sweep in one kernel)
 - topk_select:     fused small-k top-k with payload (merge points)
 - locus_merge:     fused cached-top-K locus gather + merge (phase 2b)
 - embedding_bag:   ragged gather + segment reduce (recsys substrate)

@@ -1,0 +1,290 @@
+"""Pallas TPU kernel: fused synonym-aware locus DP (phase 1, tt/et/ht).
+
+The paper's core walk — reach[pos] = trie nodes reachable by consuming
+p[:pos] under some rewriting — fused into one kernel per query block.
+The pure-jnp path (`engine/locus.py`) runs the same sweep as a vmap of a
+per-query `fori_loop` whose every inner step (CSR child lookup, teleport
+gather, link-store search, dedup-compaction) is a separate XLA op; this
+kernel keeps the whole (L+1, F) frontier buffer resident in VMEM scratch
+and executes the sweep as masked fixed-trip loops over the packed rule
+plane (`trie_build.pack_rule_planes`):
+
+- literal char step: binary-searched CSR child lookup over the dict and
+  synonym-branch edge sets;
+- teleports (ET/HT): one vectorized gather from the dense, -1-padded
+  ``tele_plane``;
+- rule steps (TT/HT): the rule-trie descent is inlined per position, so
+  every full-lhs match lands at a *static* end offset and the link-store
+  step (one ``link_ptr`` load + one binary search over ``link_rule``)
+  merges straight into the matching frontier row;
+- dedup-compaction: one sort + rank-scatter per merge, bit-identical to
+  ``primitives.dedup_pad``;
+- finalization: synonym-loci drop + dedup + preorder-interval antichain
+  reduction, all in-block.
+
+Every trip count (L, max_lhs_len, terms/node, frontier width, binary
+search rounds) is static, so there is no data-dependent control flow —
+the VPU executes the whole sweep without divergence.  Results (loci and
+overflow counts) are bit-identical to the jnp reference engine; the
+substrate parity suite enforces this in interpret mode on CPU.
+
+The CSR tables and the rule plane are VMEM-resident like the trie-walk
+kernel's; `PallasSubstrate.can_walk_batch` probes the static sizes and
+falls back to the jnp DP when a configuration outgrows the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# plain python ints: jnp scalars would be captured as constants by the
+# pallas kernel tracer
+_INT_MAX = 2**31 - 1
+_NEG_ONE = -1
+
+
+def _iters(n: int) -> int:
+    """Binary-search trip count for an n-row table (matches
+    ``primitives.iters_for``)."""
+    return max(1, int(math.ceil(math.log2(max(n, 1) + 1))))
+
+
+def _lower_bound(arr, lo, hi, x, iters: int):
+    """First index in [lo, hi) with arr[idx] >= x (fixed trips)."""
+    size = max(int(arr.shape[0]), 1)
+    for _ in range(iters):
+        cont = lo < hi
+        mid = (lo + hi) >> 1
+        v = jnp.take(arr, jnp.clip(mid, 0, size - 1))
+        go_right = v < x
+        lo = jnp.where(cont & go_right, mid + 1, lo)
+        hi = jnp.where(cont & ~go_right, mid, hi)
+    return lo
+
+
+def _csr_children(ptr, chars, children, nodes, ch):
+    """children[nodes] labelled ch; -1 propagated/absent.  nodes and ch
+    broadcast together (same semantics as ``primitives.csr_child_lookup``)."""
+    valid = nodes >= 0
+    nn = jnp.where(valid, nodes, 0)
+    lo = jnp.take(ptr, nn)
+    hi = jnp.take(ptr, nn + 1)
+    pos = _lower_bound(chars, lo, hi, ch, _iters(int(chars.shape[0])))
+    size = max(int(chars.shape[0]), 1)
+    posc = jnp.clip(pos, 0, size - 1)
+    found = (pos < hi) & (jnp.take(chars, posc) == ch) & valid & (ch >= 0)
+    return jnp.where(found, jnp.take(children, posc), _NEG_ONE)
+
+
+def _dedup(cand, width: int):
+    """Row-wise unique-compact of cand [BQ, V] to [BQ, width] ascending,
+    -1 padded; returns (out, n_dropped[BQ]).  Bit-identical to
+    ``primitives.dedup_pad`` per row (same sort + rank-scatter)."""
+    bq, v = cand.shape
+    big = jnp.where(cand < 0, _INT_MAX, cand)
+    s = jnp.sort(big, axis=1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bq, v), 1)
+    keep = (idx == 0) | (s != jnp.roll(s, 1, axis=1))
+    keep &= s != _INT_MAX
+    rank = jnp.cumsum(keep, axis=1) - 1          # position among kept
+    n_uniq = (rank[:, -1] + 1).astype(jnp.int32)
+    dst = jnp.where(keep & (rank < width), rank, width)  # width = drop slot
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bq, v), 0)
+    out = jnp.full((bq, width + 1), _NEG_ONE, jnp.int32)
+    out = out.at[rows, dst].set(s, mode="drop")
+    out = jnp.where(out == _INT_MAX, _NEG_ONE, out)[:, :width]
+    return out, jnp.maximum(n_uniq - width, 0).astype(jnp.int32)
+
+
+def _plane_rows(plane, nodes):
+    """Gather full plane rows for a node vector: plane [N, W], nodes
+    [BQ] or [BQ, F] -> [..., W] (rows of invalid nodes read row 0 and are
+    masked by the caller)."""
+    w = int(plane.shape[1])
+    offs = jnp.arange(w, dtype=jnp.int32)
+    idx = nodes[..., None] * w + offs
+    return jnp.take(plane.reshape(-1), idx)
+
+
+def _tele_expand(tele_plane, row, width: int):
+    """Frontier row [BQ, F] -> row plus teleport targets, dedup'd back."""
+    bq, f = row.shape
+    valid = row >= 0
+    nn = jnp.where(valid, row, 0)
+    tgt = jnp.where(valid[:, :, None], _plane_rows(tele_plane, nn), _NEG_ONE)
+    return _dedup(jnp.concatenate([row, tgt.reshape(bq, -1)], axis=1), width)
+
+
+def _link_lookup(link_ptr, link_rule, link_target, anchors, rid):
+    """(anchor, rule) -> target or -1.  anchors [BQ, F], rid [BQ]."""
+    n_link = int(link_rule.shape[0])
+    valid = anchors >= 0
+    a = jnp.where(valid, anchors, 0)
+    lo = jnp.take(link_ptr, a)
+    hi = jnp.take(link_ptr, a + 1)
+    pos = _lower_bound(link_rule, lo, hi, rid[:, None], _iters(n_link))
+    posc = jnp.clip(pos, 0, max(n_link, 1) - 1)
+    found = (pos < hi) & (jnp.take(link_rule, posc) == rid[:, None]) & valid
+    return jnp.where(found, jnp.take(link_target, posc), _NEG_ONE)
+
+
+def _kernel(fc_ref, ec_ref, echild_ref,
+            sfc_ref, sec_ref, sechild_ref,
+            syn_mask_ref, tout_ref, tele_ref,
+            lptr_ref, lrule_ref, ltgt_ref,
+            rfc_ref, rec_ref, rechild_ref, rterm_ref,
+            q_ref, qlen_ref,
+            loci_ref, ov_ref,
+            buf_ref, *,
+            frontier: int, rule_matches: int, max_lhs_len: int,
+            max_terms: int, has_syn: bool, has_tele: bool, has_links: bool,
+            seq_len: int):
+    fc, ec, echild = fc_ref[...], ec_ref[...], echild_ref[...]
+    syn_mask, tout = syn_mask_ref[...], tout_ref[...]
+    q = q_ref[...]                                   # [BQ, L]
+    qlen = qlen_ref[...]
+    bq = q.shape[0]
+    F, L, M = frontier, seq_len, rule_matches
+
+    # frontier buffer: reach[pos] for every position, resident in scratch
+    buf_ref[...] = jnp.full(
+        (bq, L + 1, F), _NEG_ONE, jnp.int32).at[:, 0, 0].set(0)
+    overflow = jnp.zeros((bq,), jnp.int32)
+
+    for i in range(L):
+        row = buf_ref[:, i, :]
+        if has_tele:
+            row, drop = _tele_expand(tele_ref[...], row, F)
+            overflow += drop
+        c = q[:, i]
+
+        # literal char step: dict children + synonym-branch children
+        parts = [_csr_children(fc, ec, echild, row, c[:, None])]
+        if has_syn:
+            parts.append(_csr_children(sfc_ref[...], sec_ref[...],
+                                       sechild_ref[...], row, c[:, None]))
+        merged, drop = _dedup(
+            jnp.concatenate([buf_ref[:, i + 1, :]] + parts, axis=1), F)
+        overflow += drop
+        buf_ref[:, i + 1, :] = merged
+
+        # rule steps: inline rule-trie descent from position i; a full-lhs
+        # match at depth j lands at the static frontier row i + j + 1
+        if M > 0:
+            amask = (row >= 0) & \
+                (jnp.take(syn_mask, jnp.where(row >= 0, row, 0)) == 0)
+            anchors = jnp.where(amask, row, _NEG_ONE)
+            node = jnp.zeros((bq,), jnp.int32)       # rule-trie root
+            cnt = jnp.zeros((bq,), jnp.int32)
+            for j in range(min(max_lhs_len, L - i)):
+                node = _csr_children(rfc_ref[...], rec_ref[...],
+                                     rechild_ref[...], node, q[:, i + j])
+                ok = node >= 0
+                terms = _plane_rows(rterm_ref[...],
+                                    jnp.where(ok, node, 0))  # [BQ, Tw]
+                end = i + j + 1
+                for j2 in range(max_terms):
+                    rid = terms[:, j2]
+                    has = ok & (rid >= 0) & (cnt < M)
+                    cnt = jnp.where(has, cnt + 1, cnt)
+                    if has_links:
+                        tgt = _link_lookup(lptr_ref[...], lrule_ref[...],
+                                           ltgt_ref[...], anchors, rid)
+                        tgt = jnp.where(has[:, None], tgt, _NEG_ONE)
+                    else:
+                        tgt = jnp.full((bq, F), _NEG_ONE, jnp.int32)
+                    dst = buf_ref[:, end, :]
+                    merged, drop = _dedup(
+                        jnp.concatenate([dst, tgt], axis=1), F)
+                    any_tgt = (tgt >= 0).any(axis=1)
+                    merged = jnp.where(any_tgt[:, None], merged, dst)
+                    overflow += jnp.where(any_tgt, drop, 0)
+                    buf_ref[:, end, :] = merged
+
+    # final frontier: the row at each query's own length
+    buf = buf_ref[...]
+    sel = jnp.broadcast_to(jnp.clip(qlen, 0, L)[:, None, None], (bq, 1, F))
+    row = jnp.take_along_axis(buf, sel, axis=1)[:, 0, :]
+    if has_tele:
+        row, drop = _tele_expand(tele_ref[...], row, F)
+        overflow += drop
+
+    # finalize: strict semantics drop mid-variant (synonym) loci, then
+    # antichain reduction over preorder intervals [id, tout)
+    is_syn = jnp.take(syn_mask, jnp.where(row >= 0, row, 0))
+    row = jnp.where((row >= 0) & (is_syn == 0), row, _NEG_ONE)
+    row, _ = _dedup(row, F)
+    tin = jnp.where(row >= 0, row, _NEG_ONE)
+    to = jnp.take(tout, jnp.where(row >= 0, row, 0))
+    tin_i, tin_j = tin[:, :, None], tin[:, None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (bq, F, F), 1)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (bq, F, F), 2)
+    covered = ((tin_j <= tin_i) & (tin_i < to[:, None, :]) & (ii != jj)
+               & (tin_j >= 0) & (tin_i >= 0)).any(axis=2)
+    loci_ref[...] = jnp.where(covered, _NEG_ONE, row)
+    ov_ref[...] = overflow
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "frontier", "rule_matches", "max_lhs_len", "max_terms", "has_syn",
+    "has_tele", "has_links", "block_q", "interpret"))
+def locus_dp_walk(first_child, edge_char, edge_child,
+                  s_first_child, s_edge_char, s_edge_child,
+                  syn_mask, tout, tele_plane,
+                  link_ptr, link_rule, link_target,
+                  r_first_child, r_edge_char, r_edge_child, r_term_plane,
+                  queries, qlens, *,
+                  frontier: int, rule_matches: int, max_lhs_len: int,
+                  max_terms: int, has_syn: bool, has_tele: bool,
+                  has_links: bool, block_q: int = 8, interpret: bool = True):
+    """Fused locus DP over a query batch.
+
+    queries int32[B, L] (-1 padded, B divisible by block_q; the wrapper in
+    ops.py pads), qlens int32[B].  Tables are the DeviceTrie arrays with
+    empties padded to length 1 (gated off by the ``has_*`` statics).
+    Returns (loci[B, F] finalized antichains, overflow[B]) — bit-identical
+    to ``jax.vmap(engine.locus.locus_dp)`` on the jnp substrate.
+    """
+    bsz, seq_len = queries.shape
+    F = frontier
+    grid = (bsz // block_q,)
+
+    def full(a):
+        shape = tuple(int(s) for s in a.shape)
+        return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
+
+    kernel = functools.partial(
+        _kernel, frontier=F, rule_matches=rule_matches,
+        max_lhs_len=max_lhs_len, max_terms=max_terms, has_syn=has_syn,
+        has_tele=has_tele, has_links=has_links, seq_len=seq_len)
+    tables = [first_child, edge_char, edge_child,
+              s_first_child, s_edge_char, s_edge_child,
+              syn_mask, tout, tele_plane,
+              link_ptr, link_rule, link_target,
+              r_first_child, r_edge_char, r_edge_child, r_term_plane]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[full(a) for a in tables] + [
+            pl.BlockSpec((block_q, seq_len), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, F), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, F), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, seq_len + 1, F), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*tables, queries, qlens)

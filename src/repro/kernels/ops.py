@@ -68,6 +68,43 @@ def trie_walk(first_child, edge_char, edge_child, queries, qlens,
     return node[:b], depth[:b]
 
 
+def _nonempty(a, fill=-1):
+    """Pad a 0-row table to one inert row (pallas refs need size >= 1;
+    callers gate usage with the matching ``has_*`` static)."""
+    if int(a.shape[0]) > 0:
+        return a
+    return jnp.full((1,) + tuple(a.shape[1:]), fill, a.dtype)
+
+
+def locus_walk(t, cfg, queries, qlens, block_q: int = 8):
+    """Fused synonym-aware locus DP; see kernels/locus_dp.py.
+
+    t: engine DeviceTrie (duck-typed — only the array fields are read);
+    cfg: EngineConfig.  queries int32[B, L] (-1 padded), qlens int32[B].
+    Returns (loci[B, F], overflow[B]) matching the jnp reference DP
+    bit-for-bit.
+    """
+    from repro.kernels.locus_dp import locus_dp_walk as _locus_dp
+
+    block_q = min(block_q, max(int(queries.shape[0]), 1))
+    q, ql, b = _pad_query_batch(queries, qlens, block_q)
+    loci, overflow = _locus_dp(
+        t.first_child, t.edge_char, t.edge_child,
+        t.s_first_child, _nonempty(t.s_edge_char), _nonempty(t.s_edge_child),
+        t.syn_mask.astype(jnp.int32), t.tout, t.tele_plane,
+        t.link_ptr, _nonempty(t.link_rule), _nonempty(t.link_target),
+        t.r_first_child, _nonempty(t.r_edge_char), _nonempty(t.r_edge_child),
+        t.r_term_plane,
+        q, ql,
+        frontier=cfg.frontier, rule_matches=cfg.rule_matches,
+        max_lhs_len=cfg.max_lhs_len, max_terms=cfg.max_terms_per_node,
+        has_syn=int(t.s_edge_char.shape[0]) > 0,
+        has_tele=cfg.teleports > 0,
+        has_links=int(t.link_rule.shape[0]) > 0,
+        block_q=block_q, interpret=_interpret())
+    return loci[:b], overflow[:b]
+
+
 def topk_select(scores, payload, k: int, block_b: int = 8):
     """Fused top-k with payload; see kernels/topk_select.py."""
     if k >= scores.shape[1]:

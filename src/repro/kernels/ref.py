@@ -42,6 +42,22 @@ def trie_walk_ref(first_child, edge_char, edge_child, queries, qlens):
     return jax.vmap(one)(queries, qlens)
 
 
+def locus_walk_ref(t, cfg, queries, qlens):
+    """Synonym-aware locus DP over a batch (kernels/locus_dp.py contract).
+
+    The contract *is* the engine's reference frontier DP on the jnp
+    substrate — the kernel must reproduce it bit-for-bit (loci antichains
+    and overflow counts), which is what makes the pallas substrate safe to
+    swap in under `complete`/`Session`.
+    """
+    from repro.core.engine import locus
+    from repro.core.engine.substrate import get_substrate
+
+    sub = get_substrate("jnp")
+    return jax.vmap(
+        lambda q, ql: locus.locus_dp(t, cfg, q, ql, sub))(queries, qlens)
+
+
 def topk_select_ref(scores, payload, k: int):
     """Top-k by score with payload carried along.
 

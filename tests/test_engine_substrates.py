@@ -177,6 +177,142 @@ def test_pallas_rule_free_walk_matches_locus_dp(paper_data):
     np.testing.assert_array_equal(np.asarray(ov_p), np.asarray(ov_j))
 
 
+# -- fused locus-DP kernel (rule-bearing walk) --------------------------------
+
+
+def _walk_parity(idx, queries, max_len):
+    """Assert pallas walk_batch == jnp walk_batch bit-for-bit; returns the
+    (jnp) overflow vector for extra assertions."""
+    from repro.core.alphabet import pad_queries
+
+    t, cfg = idx.device, idx.cfg
+    qs, qlens = pad_queries(queries, max_len)
+    loci_p, ov_p = eng.get_substrate("pallas").walk_batch(t, cfg, qs, qlens)
+    loci_j, ov_j = eng.get_substrate("jnp").walk_batch(t, cfg, qs, qlens)
+    np.testing.assert_array_equal(np.asarray(loci_p), np.asarray(loci_j))
+    np.testing.assert_array_equal(np.asarray(ov_p), np.asarray(ov_j))
+    return np.asarray(ov_j)
+
+
+@pytest.mark.parametrize("kind", ["tt", "et", "ht"])
+def test_fused_walk_claims_rule_bearing_kinds(paper_data, kind):
+    """tt/et/ht walks are no longer a jnp fallback: the pallas substrate
+    probes capable and its fused kernel reproduces the reference DP."""
+    idx = _build(paper_data, kind)
+    t, cfg = idx.device, idx.cfg
+    sub = eng.get_substrate("pallas")
+    assert not sub._rule_free(t, cfg)
+    assert sub.can_walk_batch(t, cfg, 16)
+    assert sub._can_fuse_locus_dp(t, cfg, 16)
+    _walk_parity(idx, QUERIES, 16)
+
+
+@pytest.mark.parametrize("kind", ["tt", "et", "ht"])
+def test_fused_walk_overflow_frontier_parity(paper_data, kind):
+    """A starved frontier forces dedup-compaction drops; the kernel's
+    overflow accounting must match the reference exactly (it gates the
+    exactness flag and thus the host-side retry)."""
+    idx = _build(paper_data, kind, frontier=1)
+    ov = _walk_parity(idx, QUERIES + ["andy", "bill", "bill of ri"], 16)
+    assert (ov > 0).any()   # F=1 cannot hold literal node + rule target
+
+
+def test_fused_walk_nonbucket_batches(paper_data):
+    """Rule-bearing batches off the kernel block grid exercise the ops.py
+    padding (padded rows walk to the root and slice off)."""
+    idx = _build(paper_data, "ht")
+    for qs in (["andy"], QUERIES[:3], QUERIES[:7], QUERIES * 2):
+        _walk_parity(idx, qs, 12)
+
+
+def test_fused_walk_probe_envelope_falls_back(paper_data):
+    """Configs outside the kernel's static envelope are refused by the
+    probe, and walk_batch still answers (via the inherited jnp DP) with
+    identical results."""
+    sub = eng.get_substrate("pallas")
+    idx = _build(paper_data, "ht",
+                 frontier=2 * sub._FUSE_MAX_FRONTIER)
+    t, cfg = idx.device, idx.cfg
+    assert not sub.can_walk_batch(t, cfg, 16)
+    _walk_parity(idx, QUERIES[:4], 16)
+    # the probe is about width/length, not kind: the same trie at default
+    # widths is claimed
+    assert sub.can_walk_batch(_build(paper_data, "ht").device,
+                              _build(paper_data, "ht").cfg, 16)
+
+
+def test_fused_walk_session_and_batch_agree(paper_data):
+    """End-to-end: per-keystroke sessions (which reuse the packed rule
+    planes incrementally) and the fused batch walk give the same answers
+    on the pallas substrate."""
+    idx = _build(paper_data, "ht", cache_k=8).set_substrate("pallas")
+    sess = Session(idx, k=3)
+    rows = [sess.type(ch) for ch in "andy pa"]
+    assert rows[-1] == idx.complete(["andy pa"], k=3)[0]
+
+
+# -- persistence: rule-plane container migration ------------------------------
+
+
+def _rewrite_as_v1(path):
+    """Strip the packed rule plane from a saved container and stamp it as
+    format_version 1 — byte-level shape of a pre-relayout index."""
+    import json
+
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    for k in ("trie__tele_plane", "trie__link_ptr", "rule_trie__term_plane"):
+        assert k in arrays, f"v2 container should carry {k}"
+        del arrays[k]
+    meta = json.loads(arrays["__meta__"].tobytes().decode())
+    meta["format_version"] = 1
+    for key in ("tele_width", "term_width"):
+        meta["cfg"].pop(key, None)
+    arrays["__meta__"] = np.frombuffer(json.dumps(meta).encode(),
+                                       dtype=np.uint8)
+    np.savez_compressed(path, **arrays)
+
+
+@pytest.mark.parametrize("kind", ["tt", "ht"])
+def test_load_v1_container_rebuilds_rule_planes(paper_data, kind, tmp_path):
+    from repro.api import CompletionIndex
+
+    idx = _build(paper_data, kind, cache_k=4)
+    expect = idx.complete(QUERIES, k=3)
+    path = str(tmp_path / "idx.npz")
+    idx.save(path)
+    _rewrite_as_v1(path)
+    loaded = CompletionIndex.load(path)
+    assert loaded.trie.tele_plane is not None
+    assert loaded.trie.link_ptr is not None
+    assert loaded.rule_trie.term_plane is not None
+    assert loaded.cfg.tele_width == idx.cfg.tele_width
+    assert loaded.cfg.term_width == idx.cfg.term_width
+    for substrate in ("jnp", "pallas"):
+        assert loaded.set_substrate(substrate).complete(QUERIES, k=3) \
+            == expect
+
+
+def test_load_rejects_mismatched_rule_plane(paper_data, tmp_path):
+    """A container whose planes disagree with the recorded static widths
+    must fail loudly at load, not mis-gather on device."""
+    import json
+
+    idx = _build(paper_data, "ht")
+    path = str(tmp_path / "idx.npz")
+    idx.save(path)
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    plane = arrays["trie__tele_plane"]
+    arrays["trie__tele_plane"] = np.concatenate(
+        [plane, np.full_like(plane[:, :1], -1)], axis=1)
+    meta = json.loads(arrays["__meta__"].tobytes().decode())
+    np.savez_compressed(path, **arrays)
+    from repro.api import CompletionIndex
+    with pytest.raises(ValueError, match="rule plane"):
+        CompletionIndex.load(path)
+
+
 def test_persist_reresolves_substrate(paper_data, tmp_path):
     idx = _build(paper_data, "ht", cache_k=4)    # spec.substrate == "auto"
     path = str(tmp_path / "idx.npz")

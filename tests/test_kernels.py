@@ -161,6 +161,31 @@ def test_trie_walk_nonmultiple_batch_sizes(bsz, rng):
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
 
 
+@pytest.mark.parametrize("kind,frontier,block_q", [
+    ("tt", 16, 4), ("et", 32, 8), ("ht", 8, 8), ("ht", 2, 4),
+])
+def test_locus_walk_sweep(kind, frontier, block_q, rng):
+    """Fused locus-DP kernel vs the reference frontier DP on rule-bearing
+    tries (incl. a starved frontier that forces overflow drops)."""
+    words = ["st", "saint", "street", "ave", "avenue", "dr", "drive"]
+    strings = [f"{words[int(rng.integers(0, len(words)))]} "
+               f"{words[int(rng.integers(0, len(words)))]} {i % 23:02d}"
+               for i in range(150)]
+    idx = CompletionIndex.build(
+        strings, list(rng.integers(0, 1000, len(strings))),
+        make_rules([("st", "saint"), ("st", "street"), ("ave", "avenue"),
+                    ("dr", "drive")]), kind=kind, frontier=frontier)
+    t, cfg = idx.device, idx.cfg
+    queries = [s[: int(rng.integers(1, 11))] for s in strings[:29]] + \
+        ["st st", "zzz", ""]
+    qs, qlens = pad_queries(queries, 12)
+    a = ops.locus_walk(t, cfg, jnp.asarray(qs), jnp.asarray(qlens),
+                       block_q=block_q)
+    b = ref.locus_walk_ref(t, cfg, jnp.asarray(qs), jnp.asarray(qlens))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
 def test_pad_query_batch_invariant():
     """Padded rows carry qlen 0 AND chars -1 — each alone keeps the walk
     at the root, so the padded outputs are inert before slicing."""
