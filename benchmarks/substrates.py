@@ -8,7 +8,12 @@ structures are shared), across two axes:
   cached top-K (``cached_k16``), on the ET index;
 - *rule-bearing walk* (the fused locus-DP kernel's workload): tt/et/ht
   with the dataset's synonym rule set, where phase 1 is the synonym-aware
-  frontier sweep rather than the rule-free prefix walk.
+  frontier sweep rather than the rule-free prefix walk;
+- *beam phase 2* (the fused beam kernel's workload): every ``beam`` row
+  runs the generator-pool priority search, and the rule-free ``plain``
+  row isolates it behind the trivial prefix walk.  Each row records
+  whether the pallas substrate claimed the beam natively (``fused_beam``,
+  from the ``can_beam_batch`` probe).
 
 On CPU the pallas column runs the kernels in interpret mode — that
 measures dispatch correctness and overhead, not kernel speed; the TPU run
@@ -33,13 +38,16 @@ from benchmarks.common import (SIZES, build_index, dataset, emit,
 from repro.data.strings import make_workload
 
 # (label, index kind, build kwargs) — the two phase-2 engines benchmarked
-# in B7 on ET, plus the rule-bearing walk workloads for the fused
-# locus-DP kernel (tt = link store, ht = links + teleports)
+# in B7 on ET, the rule-bearing walk workloads for the fused locus-DP
+# kernel (tt = link store, ht = links + teleports), and a rule-free beam
+# row where phase 1 is the trivial prefix walk so the beam phase-2 kernel
+# dominates the measurement
 CASES = [
     ("beam", "et", {}),
     ("cached_k16", "et", {"cache_k": 16}),
     ("beam", "tt", {}),
     ("beam", "ht", {}),
+    ("beam", "plain", {}),
 ]
 SUBSTRATES = ("jnp", "pallas")
 
@@ -66,8 +74,13 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
         idx = build_index(ds, kind, **kw)
         for substrate in SUBSTRATES:
             idx.set_substrate(substrate)
-            fused = substrate == "pallas" and eng.get_substrate(
-                substrate).can_walk_batch(idx.device, idx.cfg, seq_len)
+            sub = eng.get_substrate(substrate)
+            fused = substrate == "pallas" and sub.can_walk_batch(
+                idx.device, idx.cfg, seq_len)
+            # beam rows route phase 2 through the fused beam kernel when
+            # the probe claims it (cached rows never touch the beam)
+            fused_beam = substrate == "pallas" and engine == "beam" \
+                and sub.can_beam_batch(idx.device, idx.cfg, k)
             batches = fixed_batches(qs, batch)
             sec = time_batches(lambda b: idx.complete(b, k=k), batches)
             rows.append({
@@ -78,6 +91,7 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
                 "interpret_mode": jax.default_backend() != "tpu"
                 and substrate == "pallas",
                 "fused_walk": bool(fused),
+                "fused_beam": bool(fused_beam),
                 "bytes_per_string": round(idx.stats.bytes_per_string, 1),
                 "us_per_q": round(sec * 1e6, 1),
             })

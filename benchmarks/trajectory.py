@@ -1,16 +1,29 @@
-"""Perf trajectory: fold substrate smoke runs into one repo-root history.
+"""Perf trajectory: fold substrate smoke runs into one repo-root history,
+render it, and gate on it.
 
 Each CI run of ``benchmarks.substrates --smoke --out substrates-smoke.json``
 produces a point-in-time JSON; this tool appends it to
 ``BENCH_substrates.json`` at the repo root so the jnp-vs-pallas (and
 rule-bearing vs rule-free walk) numbers accumulate into a trajectory that
-can be read across PRs (ROADMAP open item).  Entries are keyed by commit
+is *read* on every run, not just uploaded.  Entries are keyed by commit
 when available so re-runs of the same commit update in place instead of
 duplicating.
 
+Three modes (CI runs all three, in order):
+
+  # 1. append the fresh smoke run to the history (default mode)
   PYTHONPATH=src python -m benchmarks.trajectory substrates-smoke.json
-  PYTHONPATH=src python -m benchmarks.trajectory smoke.json \
-      --history BENCH_substrates.json --commit "$GITHUB_SHA"
+
+  # 2. render the trajectory as a markdown table (us/query per workload
+  #    row, one column per commit) — CI appends it to $GITHUB_STEP_SUMMARY
+  PYTHONPATH=src python -m benchmarks.trajectory substrates-smoke.json \
+      --render >> "$GITHUB_STEP_SUMMARY"
+
+  # 3. gate: compare the fresh run against the history median and fail
+  #    on a >1.5x slowdown in any fused-kernel (pallas) row; jnp
+  #    reference rows only warn
+  PYTHONPATH=src python -m benchmarks.trajectory substrates-smoke.json \
+      --check
 """
 
 from __future__ import annotations
@@ -18,7 +31,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import subprocess
+import sys
 import time
 
 DEFAULT_HISTORY = os.path.join(
@@ -70,17 +85,145 @@ def append_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
     return hist
 
 
+def _row_key(row: dict) -> tuple:
+    """Workload identity of a smoke row (what us/query is comparable
+    across runs): engine x kind x substrate on one backend, *including*
+    which fused paths the substrate claimed — when a PR lands a kernel
+    that changes what a row measures (e.g. the beam rows once the fused
+    beam kernel claims them), the row starts a fresh history instead of
+    being gated against timings of a different code path."""
+    return (row.get("engine"), row.get("kind"), row.get("substrate"),
+            row.get("backend"), bool(row.get("fused_walk")),
+            bool(row.get("fused_beam")))
+
+
+def _key_label(key: tuple) -> str:
+    engine, kind, substrate, _, fused_walk, fused_beam = key
+    fused = "+".join(n for n, f in (("fw", fused_walk), ("fb", fused_beam))
+                     if f)
+    return f"{engine}/{kind}/{substrate}" + (f" [{fused}]" if fused else "")
+
+
+def render_markdown(hist: list[dict], max_commits: int = 8) -> str:
+    """Markdown table of the trajectory: one row per workload
+    (engine/kind/substrate), one column per commit (oldest -> newest,
+    capped at the newest ``max_commits``), cells in us/query."""
+    if not hist:
+        return "### Substrate perf trajectory\n\n_(no runs recorded)_\n"
+    runs = hist[-max_commits:]
+    keys: list[tuple] = []
+    for entry in runs:
+        for row in entry.get("rows", []):
+            if _row_key(row) not in keys:
+                keys.append(_row_key(row))
+    cells = {}          # (key, commit) -> us/query
+    for entry in runs:
+        for row in entry.get("rows", []):
+            cells[(_row_key(row), entry["commit"])] = row.get("us_per_q")
+    backend = runs[-1].get("backend", "?")
+    lines = [f"### Substrate perf trajectory (us/query, backend={backend})",
+             ""]
+    heads = ["workload"] + [str(e["commit"])[:8] for e in runs]
+    lines.append("| " + " | ".join(heads) + " |")
+    lines.append("|" + "---|" * len(heads))
+    for key in keys:
+        row_cells = [_key_label(key)]
+        for entry in runs:
+            v = cells.get((key, entry["commit"]))
+            row_cells.append("-" if v is None else f"{v:g}")
+        lines.append("| " + " | ".join(row_cells) + " |")
+    if len(hist) > max_commits:
+        lines.append("")
+        lines.append(f"_({len(hist)} runs total; newest {len(runs)} shown;"
+                     f" pallas rows run in interpret mode off-TPU;"
+                     f" [fw]/[fb] = fused walk/beam kernel claimed)_")
+    else:
+        lines.append("")
+        lines.append("_(pallas rows run in interpret mode off-TPU; "
+                     "[fw]/[fb] = fused walk/beam kernel claimed)_")
+    return "\n".join(lines) + "\n"
+
+
+def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
+              commit: str | None = None, threshold: float = 1.5):
+    """Gate the fresh smoke run against the trajectory median.
+
+    For every row of the smoke run, compares us/query against the median
+    of the same workload (engine x kind x substrate x backend) over all
+    *prior* runs (the current commit's own history entry is excluded, so
+    the append step can run first).  Returns (failures, warnings) —
+    slowdowns beyond ``threshold`` in fused-kernel (``pallas``) rows are
+    failures; jnp reference rows are warn-only (interpret-mode dispatch
+    overhead is what the pallas rows measure off-TPU, but the jnp rows
+    track ambient CI noise too closely to gate on).  A row hard-fails
+    only once its history holds at least two prior samples — a lone
+    sample (e.g. the committed seed, recorded on a different machine)
+    gives the median no noise robustness, so it warns instead.
+    """
+    with open(smoke_path) as f:
+        run = json.load(f)
+    commit = commit or _commit()
+    prior: dict[tuple, list[float]] = {}
+    for entry in load_history(history_path):
+        if entry.get("commit") == commit:
+            continue
+        for row in entry.get("rows", []):
+            if row.get("us_per_q") is not None:
+                prior.setdefault(_row_key(row), []).append(
+                    float(row["us_per_q"]))
+    failures, warnings = [], []
+    for row in run.get("rows", []):
+        key = _row_key(row)
+        base = prior.get(key)
+        if not base or row.get("us_per_q") is None:
+            continue        # new workload row or no history yet: no gate
+        median = statistics.median(base)
+        now = float(row["us_per_q"])
+        if median <= 0 or now <= threshold * median:
+            continue
+        msg = (f"{_key_label(key)}: {now:g} us/q vs history median "
+               f"{median:g} us/q over {len(base)} run(s) "
+               f"({now / median:.2f}x > {threshold}x)")
+        gate = row.get("substrate") == "pallas" and len(base) >= 2
+        (failures if gate else warnings).append(msg)
+    return failures, warnings
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("smoke_json", help="output of benchmarks.substrates "
                                        "--smoke --out <path>")
     ap.add_argument("--history", default=DEFAULT_HISTORY,
-                    help="trajectory file to append to "
+                    help="trajectory file to append to / read "
                          "(default: BENCH_substrates.json at repo root)")
     ap.add_argument("--commit", default=None,
                     help="commit id to key this run by (default: "
                          "$GITHUB_SHA or git rev-parse HEAD)")
+    ap.add_argument("--render", action="store_true",
+                    help="print the trajectory as a markdown table "
+                         "(for $GITHUB_STEP_SUMMARY) instead of appending")
+    ap.add_argument("--check", action="store_true",
+                    help="compare the smoke run against the history median"
+                         " and exit 1 on a >threshold slowdown in any "
+                         "pallas row (jnp rows warn only)")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="slowdown factor that fails --check (default 1.5)")
     args = ap.parse_args()
+
+    if args.render:
+        print(render_markdown(load_history(args.history)), end="")
+        return
+    if args.check:
+        failures, warnings = check_run(args.smoke_json, args.history,
+                                       args.commit, args.threshold)
+        for msg in warnings:
+            print(f"WARN (jnp reference row, not gated): {msg}")
+        for msg in failures:
+            print(f"FAIL (fused-kernel row regressed): {msg}")
+        if failures:
+            sys.exit(1)
+        print(f"perf-trajectory check passed ({len(warnings)} warning(s))")
+        return
     hist = append_run(args.smoke_json, args.history, args.commit)
     last = hist[-1]
     print(f"appended run {last['commit'][:12]} "

@@ -180,6 +180,11 @@ class CompletionIndex:
             scores, sids = scores.copy(), sids.copy()
         tries = 0
         while bad.any() and tries < 3:
+            # the widened config re-dispatches through the substrate, so
+            # each retry round re-probes can_beam_batch: the first round
+            # (gens x4) re-enters the fused beam kernel at the default
+            # widths; rounds that outgrow its envelope fall back to the
+            # jnp reference with identical results
             cfg = replace(cfg, frontier=cfg.frontier * 2, gens=cfg.gens * 4,
                           max_steps=cfg.max_steps * 4, use_cache=False)
             sub = np.nonzero(bad)[0]

@@ -13,10 +13,11 @@ The paper's best-first heap search (Alg. 2 / Alg. 4) is re-cast for TPU as:
 
 Execution routes through a pluggable *substrate* (:mod:`.substrate`):
 ``"jnp"`` is the pure-jnp reference, ``"pallas"`` dispatches the batched
-hot primitives (longest-prefix walk, cached gather+merge, top-k with
-payload) to the tuned kernels in :mod:`repro.kernels`.  The substrate name
-lives on :class:`EngineConfig` and therefore joins every jit/compile-cache
-key.
+hot primitives (locus walk — rule-free and fused rule-bearing —, beam
+priority search, cached gather+merge, top-k with payload) to the tuned
+kernels in :mod:`repro.kernels`; every hot phase is substrate-pluggable.
+The substrate name lives on :class:`EngineConfig` and therefore joins
+every jit/compile-cache key.
 
 Everything here lowers under jit/vmap/shard_map with ShapeDtypeStruct
 inputs, which is what the multi-pod dry-run exercises.

@@ -8,9 +8,17 @@ tracked: if the width-bounded pools ever dropped a candidate better than
 the k-th result, the query is flagged for a host-side retry with doubled
 widths.
 
-The generator loop is data-dependent (lax.while_loop) and stays pure-jnp
-on every substrate; a fused Pallas beam kernel is tracked as a ROADMAP
-open item and would land as a ``Substrate.beam_topk_batch`` override.
+This is the reference implementation behind ``Substrate.beam_topk_batch``:
+the generator loop is data-dependent (lax.while_loop) here, and the pallas
+substrate replaces the whole search with the fused kernel in
+:mod:`repro.kernels.beam_topk` (pool + heap in VMEM scratch, masked
+fixed-trip loop) whenever ``can_beam_batch`` probes capable — results,
+including the ``exact`` flags, are bit-identical by contract.
+
+Exactness uses the *strict* admissible bound: only a dropped candidate
+whose bound strictly exceeds the final k-th score can have displaced a
+result, so an equal-bound drop (a score tie at the boundary) stays exact
+and must not trigger the host-side doubled-width retry.
 """
 
 from __future__ import annotations
@@ -105,5 +113,7 @@ def beam_topk(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
     state = (gn, gc, gb, ls, li, dropped_max, steps)
     gn, gc, gb, ls, li, dropped_max, steps = jax.lax.while_loop(cond, body, state)
     finished = ~((jnp.max(gb) >= 0) & (ls[k - 1] < jnp.max(gb)))
-    exact = (ls[k - 1] >= dropped_max) & finished
+    # strict bound: inexact only when a drop strictly beat the k-th score —
+    # an equal-bound drop ties at best and must not trigger a retry
+    exact = (dropped_max <= ls[k - 1]) & finished
     return ls, li, exact

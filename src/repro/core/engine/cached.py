@@ -8,6 +8,11 @@ The gather+merge is the substrate seam's batched hot primitive
 runs lax.top_k; the Pallas substrate fuses gather and k-round selection in
 one kernel (:mod:`repro.kernels.locus_merge`).  Both orders candidates
 loci-major/K-minor, so ties resolve identically.
+
+When k outgrows the materialized K — and on the widened exactness-retry
+rounds, which disable the cache outright — phase 2 drops to the beam
+(``Substrate.beam_topk_batch``), which the pallas substrate likewise
+serves with a fused kernel (:mod:`repro.kernels.beam_topk`).
 """
 
 from __future__ import annotations

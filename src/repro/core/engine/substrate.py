@@ -9,23 +9,26 @@ A :class:`Substrate` bundles the engine's hot primitives behind one seam:
     shapes the substrate handles natively;
   - ``topk_with_payload`` — batched small-k selection with payload;
   - ``cached_topk_batch`` — the cached-top-K locus gather+merge;
-  - ``beam_topk_batch``   — phase 2a (vmapped beam; jnp on all substrates
-    until the fused beam kernel lands — see ROADMAP).
+  - ``beam_topk_batch``   — phase 2a at batch granularity, with a
+    ``can_beam_batch`` capability probe naming which (trie, config, k)
+    shapes the substrate handles natively.
 
 The base class *is* the reference implementation (pure jnp, registered as
 ``"jnp"``).  :class:`PallasSubstrate` (``"pallas"``) routes the batched
 walk through :func:`repro.kernels.ops.trie_walk` (rule-free tries) or the
 fused synonym-aware locus-DP kernel :func:`repro.kernels.ops.locus_walk`
-(tt/et/ht), cached merges through :func:`repro.kernels.ops.topk_select` /
-``cached_topk_merge``, and runs in interpret mode off-TPU.
-``EngineConfig.substrate`` names the substrate, so it rides every
-jit/compile-cache key; ``resolve_substrate("auto")`` picks ``pallas`` on
-TPU and ``jnp`` elsewhere (interpret-mode pallas is opt-in, not a
-default, off-TPU).
+(tt/et/ht), beam phase 2 through the fused generator-pool priority-search
+kernel :func:`repro.kernels.ops.beam_topk`, cached merges through
+:func:`repro.kernels.ops.topk_select` / ``cached_topk_merge``, and runs
+in interpret mode off-TPU.  ``EngineConfig.substrate`` names the
+substrate, so it rides every jit/compile-cache key;
+``resolve_substrate("auto")`` picks ``pallas`` on TPU and ``jnp``
+elsewhere (interpret-mode pallas is opt-in, not a default, off-TPU).
 
-New kernel work (fused beam phase 2, DMA-streamed CSR for HBM-resident
-tries) lands as an additive substrate method override, not an engine
-rewrite.
+With the fused beam kernel every hot phase — walk, beam, cached merge —
+is substrate-pluggable; remaining kernel work (DMA-streamed CSR for
+HBM-resident tries, dedup-compaction) lands as an additive substrate
+method override, not an engine rewrite.
 """
 
 from __future__ import annotations
@@ -90,6 +93,13 @@ class Substrate:
         s, p = self.topk_with_payload(flat_s, flat_i, k)
         return s, p, jnp.ones(loci.shape[:-1], bool)
 
+    def can_beam_batch(self, t: DeviceTrie, cfg: EngineConfig,
+                       k: int) -> bool:
+        """Capability probe: True when ``beam_topk_batch`` has a native
+        (non-fallback) path for this (trie, config, k).  The vmapped jnp
+        reference handles everything."""
+        return True
+
     def beam_topk_batch(self, t: DeviceTrie, cfg: EngineConfig,
                         loci: jax.Array, k: int):
         """Beam phase 2 over a locus batch: (scores[B,k], sids[B,k],
@@ -108,6 +118,13 @@ class PallasSubstrate(Substrate):
     to the inherited jnp DP, which is bit-identical by contract.  The
     DP's *inner* lookups/compactions are likewise inherited — they only
     run on the fallback path, where a pallas_call cannot be tiled.
+
+    Phase 2a (beam) takes the fused generator-pool priority-search kernel
+    (``beam_topk``) whenever (W, P, k, max_steps, emission-table bytes)
+    fit the ``can_beam_batch`` envelope; outside it — including the later
+    rounds of the host-side doubled-width exactness retry, whose widths
+    grow 4x per round — the inherited vmapped reference answers with
+    identical results.
     """
 
     name = "pallas"
@@ -126,6 +143,18 @@ class PallasSubstrate(Substrate):
     _FUSE_MAX_TERMS = 4
     _FUSE_MAX_TELEPORTS = 16
     _FUSE_MAX_TABLE_BYTES = 8 << 20
+
+    # fused beam static-shape envelope: the selection network unrolls
+    # W + P + k (argmax, mask) rounds per fixed-trip step, so the pool
+    # and pop widths are bounded; max_steps is only the fori_loop trip
+    # count but still caps the search the kernel is asked to run.  The
+    # first doubled-width retry round (W x4) stays inside the envelope at
+    # the default widths; later rounds fall back to the jnp reference.
+    _BEAM_MAX_GENS = 256
+    _BEAM_MAX_EXPAND = 32
+    _BEAM_MAX_K = 64
+    _BEAM_MAX_STEPS = 4096
+    _BEAM_MAX_TABLE_BYTES = 8 << 20
 
     @staticmethod
     def _rule_free(t: DeviceTrie, cfg: EngineConfig) -> bool:
@@ -172,6 +201,33 @@ class PallasSubstrate(Substrate):
         if self._can_fuse_locus_dp(t, cfg, int(qs.shape[1])):
             return ops.locus_walk(t, cfg, qs, qlens)
         return super().walk_batch(t, cfg, qs, qlens)
+
+    def can_beam_batch(self, t, cfg, k):
+        """Probe the fused beam kernel's static envelope.
+
+        Mirrors ``can_walk_batch``: the kernel requires the pool to hold
+        the seed antichain (F <= W) and a pop no wider than the pool
+        (P <= W) — both preconditions of the reference too — plus bounded
+        selection-network widths and VMEM-resident emission tables."""
+        if cfg.gens > self._BEAM_MAX_GENS \
+                or cfg.expand > self._BEAM_MAX_EXPAND \
+                or k > self._BEAM_MAX_K \
+                or cfg.max_steps > self._BEAM_MAX_STEPS \
+                or cfg.frontier > cfg.gens \
+                or cfg.expand > cfg.gens:
+            return False
+        table_elems = sum(
+            math.prod(getattr(t, f).shape) for f in (
+                "emit_ptr", "emit_node", "emit_score", "emit_is_leaf",
+                "leaf_sid"))
+        return table_elems * 4 <= self._BEAM_MAX_TABLE_BYTES
+
+    def beam_topk_batch(self, t, cfg, loci, k):
+        if not self.can_beam_batch(t, cfg, k):
+            return super().beam_topk_batch(t, cfg, loci, k)
+        from repro.kernels import ops
+
+        return ops.beam_topk(t, cfg, loci, k)
 
     def topk_with_payload(self, scores, payload, k):
         from repro.kernels import ops

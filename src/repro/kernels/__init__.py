@@ -3,6 +3,9 @@
 - trie_walk:       batched longest-prefix trie descent (rule-free phase 1)
 - locus_dp:        fused synonym-aware locus DP (tt/et/ht phase 1 — the
                    paper's rewriting-aware frontier sweep in one kernel)
+- beam_topk:       fused beam phase 2 — the generator-pool priority
+                   search (pool + result heap in VMEM scratch, masked
+                   fixed-trip loop, in-kernel selection network)
 - topk_select:     fused small-k top-k with payload (merge points)
 - locus_merge:     fused cached-top-K locus gather + merge (phase 2b)
 - embedding_bag:   ragged gather + segment reduce (recsys substrate)

@@ -1,0 +1,252 @@
+"""Pallas TPU kernel: fused beam phase 2 (generator-pool priority search).
+
+The paper's top-k priority search (engine/beam.py): every locus becomes a
+lazy generator over its score-sorted emission list; each step pops the
+best P emissions across all generators, folds leaves into the result heap,
+re-arms popped generators, and keeps the best W of the merged pool by
+admissible bound.  The pure-jnp path runs this as a vmapped data-dependent
+``lax.while_loop`` whose every step is a chain of XLA ``top_k`` / gather /
+scatter ops; this kernel keeps the whole per-query search state resident
+in VMEM scratch for the entire search:
+
+- the ``(W,)`` generator pool — node ids ``gn``, emission cursors ``gc``,
+  admissible bounds ``gb``;
+- the ``(k,)`` result heap (``ls`` scores / ``li`` string ids);
+- the ``dropped_max`` exactness tracker (max bound ever dropped by the
+  width-bounded pool — the admissible-bound exactness guard of the paper's
+  §2.2 retry).
+
+The data-dependent while_loop becomes a **masked fixed-trip loop** bounded
+by the static ``max_steps``: ``lax.fori_loop`` runs exactly ``max_steps``
+trips and every state write is predicated on the per-query ``active``
+flag (the reference loop's own continuation condition), so rows that
+finish early freeze bit-exactly where the while_loop would have stopped
+them.  Each P-wide ``lax.top_k`` pop — and the k-wide leaf merge and
+W-wide pool re-selection — is replaced by an in-kernel **bitonic
+selection network**: one lexicographic sort over (bound desc, column
+asc) pairs, which reproduces ``lax.top_k`` ordering exactly
+(score-descending, ties to the lower index) and lowers to a single
+bitonic network on the VPU instead of ``top_k``'s gather/scatter chain.
+
+The emission tables (``emit_ptr``/``emit_node``/``emit_score``/
+``emit_is_leaf``) and ``leaf_sid`` are VMEM-resident like the trie-walk
+kernel's CSRs; ``PallasSubstrate.can_beam_batch`` probes the static sizes
+(W, P, k, max_steps, table bytes) and falls back to the vmapped jnp
+reference outside the envelope.  Results — scores, string ids, AND the
+per-query ``exact`` flags — are bit-identical to
+``jax.vmap(engine.beam.beam_topk)``; the substrate parity suite enforces
+this in interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# plain python int: jnp scalars would be captured as constants by the
+# pallas kernel tracer
+_NEG_ONE = -1
+
+
+def _row_take(mat, idx):
+    """mat [BQ, C], idx [BQ, X] row-local columns -> mat[row, idx[row]]."""
+    c = int(mat.shape[1])
+    rows = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 0)
+    return jnp.take(mat.reshape(-1), rows * c + idx)
+
+
+def _topk_sorted(vals, n: int, payloads):
+    """``lax.top_k(vals, n)`` with payloads, as one bitonic selection
+    network over [BQ, C].
+
+    A single lexicographic sort on the key pair (-value, column index) —
+    ascending on the negated value = descending on the value, with ties
+    resolved toward the lower column index — reproduces ``lax.top_k``
+    ordering exactly.  Returns (top_vals [BQ, n],
+    top_idx [BQ, n], [top_payload [BQ, n], ...], residue_vals
+    [BQ, C-n]): the residue is the sorted tail of *unselected* values
+    (the pool re-selection reads the dropped bounds off it).  Values must
+    stay above INT32_MIN (scores are >= -1 here), so the key negation
+    cannot overflow.
+    """
+    bq, c = vals.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bq, c), 1)
+    out = jax.lax.sort((-vals, idx) + tuple(payloads), dimension=1,
+                       num_keys=2, is_stable=False)
+    svals = -out[0]
+    return (svals[:, :n], out[1][:, :n],
+            [p[:, :n] for p in out[2:]], svals[:, n:])
+
+
+def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
+            loci_ref,
+            os_ref, oi_ref, oe_ref,
+            gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref, *,
+            gens: int, expand: int, k: int, max_steps: int, e_size: int):
+    eptr, enode = eptr_ref[...], enode_ref[...]
+    escore, eleaf, lsid = escore_ref[...], eleaf_ref[...], lsid_ref[...]
+    loci = loci_ref[...]                              # [BQ, F]
+    bq, f = loci.shape
+    W, P = gens, expand
+
+    def emit_bound(nodes, cursors):
+        """Admissible bound of each generator's current emission; -1 when
+        the node is dead or the cursor ran off its emission list."""
+        valid = nodes >= 0
+        n = jnp.where(valid, nodes, 0)
+        e = jnp.take(eptr, n) + cursors
+        ok = valid & (e < jnp.take(eptr, n + 1))
+        score = jnp.take(escore, jnp.clip(e, 0, e_size - 1))
+        return jnp.where(ok, score, _NEG_ONE)
+
+    # pool seeded with the locus antichain (reference: dynamic_update_slice
+    # of loci into a -1-filled (W,) pool; the probe guarantees F <= W)
+    gn = jnp.concatenate(
+        [loci, jnp.full((bq, W - f), _NEG_ONE, jnp.int32)], axis=1) \
+        if W > f else loci[:, :W]
+    gc = jnp.zeros((bq, W), jnp.int32)
+    gb = emit_bound(gn, gc)
+    gn_ref[...] = jnp.where(gb >= 0, gn, _NEG_ONE)
+    gc_ref[...] = gc
+    gb_ref[...] = gb
+    ls_ref[...] = jnp.full((bq, k), _NEG_ONE, jnp.int32)
+    li_ref[...] = jnp.full((bq, k), _NEG_ONE, jnp.int32)
+    dm_ref[...] = jnp.full((bq,), _NEG_ONE, jnp.int32)
+
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (bq, W), 1)
+
+    def step(_, carry):
+        gn, gc, gb = gn_ref[...], gc_ref[...], gb_ref[...]
+        ls, li, dm = ls_ref[...], li_ref[...], dm_ref[...]
+        best = jnp.max(gb, axis=1)
+        kth = ls[:, k - 1]
+        # the reference while_loop's continuation condition, per query
+        active = (best >= 0) & (kth < best)
+
+        # pop the best P emissions across all generators
+        topb, topi, _, _ = _topk_sorted(gb, P, ())
+        sel_valid = topb >= 0
+        sel_n = jnp.where(sel_valid, _row_take(gn, topi), 0)
+        e = jnp.take(eptr, sel_n) + _row_take(gc, topi)
+        e = jnp.clip(e, 0, e_size - 1)
+        em_node = jnp.take(enode, e)
+        em_score = jnp.take(escore, e)
+        em_leaf = jnp.take(eleaf, e) != 0
+
+        # leaves -> result heap (k-round merge of heap + new leaves; heap
+        # entries sit at lower indices, so ties keep the incumbent)
+        leaf_ok = sel_valid & em_leaf
+        new_ls = jnp.where(leaf_ok, em_score, _NEG_ONE)
+        new_li = jnp.where(
+            leaf_ok, jnp.take(lsid, jnp.where(leaf_ok, em_node, 0)),
+            _NEG_ONE)
+        ls2, _, (li2,), _ = _topk_sorted(
+            jnp.concatenate([ls, new_ls], axis=1), k,
+            (jnp.concatenate([li, new_li], axis=1),))
+
+        # internal emissions -> new generators
+        int_ok = sel_valid & ~em_leaf
+        new_n = jnp.where(int_ok, em_node, _NEG_ONE)
+        new_c = jnp.zeros((bq, P), jnp.int32)
+        new_b = emit_bound(new_n, new_c)
+        new_n = jnp.where(new_b >= 0, new_n, _NEG_ONE)
+
+        # advance popped generators (one-hot scatter: topi rows are
+        # distinct positions, so the sum is the reference's .at[].add)
+        hit = (topi[:, :, None] == iota_w[:, None, :]) \
+            & sel_valid[:, :, None]
+        gc2 = gc + hit.sum(axis=1).astype(jnp.int32)
+        gb2 = emit_bound(gn, gc2)
+        gn2 = jnp.where(gb2 >= 0, gn, _NEG_ONE)
+
+        # merge pools, keep top-W by bound; the sorted residue holds the
+        # dropped bounds for the exactness tracker
+        pool_n = jnp.concatenate([gn2, new_n], axis=1)
+        pool_c = jnp.concatenate([gc2, new_c], axis=1)
+        pool_b = jnp.concatenate([gb2, new_b], axis=1)
+        keep_b, _, (keep_n, keep_c), residue = _topk_sorted(
+            pool_b, W, (pool_n, pool_c))
+        drop_best = jnp.max(jnp.maximum(residue, _NEG_ONE), axis=1)
+        dm2 = jnp.maximum(dm, drop_best)
+
+        m = active[:, None]
+        gn_ref[...] = jnp.where(m, keep_n, gn)
+        gc_ref[...] = jnp.where(m, keep_c, gc)
+        gb_ref[...] = jnp.where(m, keep_b, gb)
+        ls_ref[...] = jnp.where(m, ls2, ls)
+        li_ref[...] = jnp.where(m, li2, li)
+        dm_ref[...] = jnp.where(active, dm2, dm)
+        return carry
+
+    jax.lax.fori_loop(0, max_steps, step, 0)
+
+    gb, ls, dm = gb_ref[...], ls_ref[...], dm_ref[...]
+    best = jnp.max(gb, axis=1)
+    kth = ls[:, k - 1]
+    finished = ~((best >= 0) & (kth < best))
+    # strict admissible bound: only a dropped candidate strictly above the
+    # k-th score threatens exactness — an equal-bound drop ties at best
+    # and must NOT trigger the doubled-width retry
+    exact = (dm <= kth) & finished
+    os_ref[...] = ls
+    oi_ref[...] = li_ref[...]
+    oe_ref[...] = exact.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gens", "expand", "k", "max_steps", "block_b", "interpret"))
+def beam_topk_batch(emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid,
+                    loci, *, gens: int, expand: int, k: int, max_steps: int,
+                    block_b: int = 8, interpret: bool = True):
+    """Fused beam phase 2 over a locus batch.
+
+    loci int32[B, F] (-1 padded locus antichains, B divisible by block_b;
+    the wrapper in ops.py pads — all-(-1) rows yield -1 results with
+    exact=1).  Tables are the DeviceTrie emission arrays (``emit_is_leaf``
+    as int32) and ``leaf_sid``; ``emit_node`` must be non-empty (the
+    degenerate empty dictionary short-circuits in ops.py, mirroring the
+    reference).  Returns (scores[B, k], sids[B, k], exact[B] int32 0/1) —
+    bit-identical to ``jax.vmap(engine.beam.beam_topk)`` on the jnp
+    substrate.
+    """
+    bsz, f = loci.shape
+    e_size = max(int(emit_node.shape[0]), 1)
+    grid = (bsz // block_b,)
+
+    def full(a):
+        shape = tuple(int(s) for s in a.shape)
+        return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
+
+    kernel = functools.partial(_kernel, gens=gens, expand=expand, k=k,
+                               max_steps=max_steps, e_size=e_size)
+    tables = [emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[full(a) for a in tables] + [
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, k), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, k), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, gens), jnp.int32),   # gn: generator nodes
+            pltpu.VMEM((block_b, gens), jnp.int32),   # gc: emission cursors
+            pltpu.VMEM((block_b, gens), jnp.int32),   # gb: admissible bounds
+            pltpu.VMEM((block_b, k), jnp.int32),      # ls: result scores
+            pltpu.VMEM((block_b, k), jnp.int32),      # li: result sids
+            pltpu.VMEM((block_b,), jnp.int32),        # dropped_max tracker
+        ],
+        interpret=interpret,
+    )(*tables, loci)

@@ -105,6 +105,35 @@ def locus_walk(t, cfg, queries, qlens, block_q: int = 8):
     return loci[:b], overflow[:b]
 
 
+def beam_topk(t, cfg, loci, k: int, block_b: int = 8):
+    """Fused beam phase 2; see kernels/beam_topk.py.
+
+    t: engine DeviceTrie (duck-typed — only the emission arrays and
+    ``leaf_sid`` are read); cfg: EngineConfig (``gens``/``expand``/
+    ``max_steps`` become the kernel's static trip counts).
+    loci int32[B, F] (-1 padded locus antichains).
+    Returns (scores[B, k], sids[B, k], exact[B] bool) matching
+    ``jax.vmap(engine.beam.beam_topk)`` bit-for-bit.
+    """
+    from repro.kernels.beam_topk import beam_topk_batch as _beam_topk
+
+    B = int(loci.shape[0])
+    if int(t.emit_node.shape[0]) == 0:
+        # degenerate empty dictionary: mirror the reference's short-circuit
+        return (jnp.full((B, k), -1, jnp.int32),
+                jnp.full((B, k), -1, jnp.int32),
+                jnp.ones((B,), bool))
+    block_b = min(block_b, max(B, 1))
+    # padded rows are all -1 loci => dead pool, -1 results, exact; sliced off
+    l, b = _pad_rows(loci, block_b, -1)
+    s, i, e = _beam_topk(
+        t.emit_ptr, t.emit_node, t.emit_score,
+        t.emit_is_leaf.astype(jnp.int32), t.leaf_sid, l,
+        gens=cfg.gens, expand=cfg.expand, k=k, max_steps=cfg.max_steps,
+        block_b=block_b, interpret=_interpret())
+    return s[:b], i[:b], e[:b].astype(bool)
+
+
 def topk_select(scores, payload, k: int, block_b: int = 8):
     """Fused top-k with payload; see kernels/topk_select.py."""
     if k >= scores.shape[1]:

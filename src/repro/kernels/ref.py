@@ -58,6 +58,20 @@ def locus_walk_ref(t, cfg, queries, qlens):
         lambda q, ql: locus.locus_dp(t, cfg, q, ql, sub))(queries, qlens)
 
 
+def beam_topk_ref(t, cfg, loci, k: int):
+    """Beam phase 2 over a locus batch (kernels/beam_topk.py contract).
+
+    The contract *is* the engine's paper-faithful priority search on the
+    jnp substrate — the kernel must reproduce it bit-for-bit (scores,
+    string ids AND the per-query exact flags, which gate the host-side
+    doubled-width retry) for the pallas substrate to be safe to swap in
+    under `complete`/`Session`.
+    """
+    from repro.core.engine import beam
+
+    return jax.vmap(lambda l: beam.beam_topk(t, cfg, l, k))(loci)
+
+
 def topk_select_ref(scores, payload, k: int):
     """Top-k by score with payload carried along.
 

@@ -251,6 +251,95 @@ def test_fused_walk_session_and_batch_agree(paper_data):
     assert rows[-1] == idx.complete(["andy pa"], k=3)[0]
 
 
+# -- fused beam phase-2 kernel ------------------------------------------------
+
+
+def _beam_parity(idx, queries, k, max_len=16):
+    """Assert pallas beam_topk_batch == jnp beam_topk_batch bit-for-bit
+    (scores, sids, exact); returns the (jnp) exact vector."""
+    from repro.core.alphabet import pad_queries
+
+    t, cfg = idx.device, idx.cfg
+    qs, qlens = pad_queries(queries, max_len)
+    loci, _ = eng.get_substrate("jnp").walk_batch(t, cfg, qs, qlens)
+    a = eng.get_substrate("pallas").beam_topk_batch(t, cfg, loci, k)
+    b = eng.get_substrate("jnp").beam_topk_batch(t, cfg, loci, k)
+    for x, y, nm in zip(a, b, ("scores", "sids", "exact")):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=nm)
+    return np.asarray(b[2])
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_beam_claims_all_kinds(paper_data, kind):
+    """Beam phase 2 is no longer a jnp-everywhere phase: the pallas
+    substrate probes capable at the default widths and its fused kernel
+    reproduces the reference priority search on every index kind."""
+    idx = _build(paper_data, kind)
+    sub = eng.get_substrate("pallas")
+    assert sub.can_beam_batch(idx.device, idx.cfg, 3)
+    _beam_parity(idx, QUERIES, 3)
+
+
+def test_fused_beam_probe_envelope_falls_back(paper_data):
+    """Configs outside the kernel's static envelope are refused by the
+    probe, and beam_topk_batch still answers (via the inherited vmapped
+    reference) with identical results."""
+    sub = eng.get_substrate("pallas")
+    idx = _build(paper_data, "et", gens=2 * sub._BEAM_MAX_GENS)
+    assert not sub.can_beam_batch(idx.device, idx.cfg, 3)
+    _beam_parity(idx, QUERIES[:4], 3)
+    # k is part of the probe too
+    small = _build(paper_data, "et")
+    assert sub.can_beam_batch(small.device, small.cfg, 3)
+    assert not sub.can_beam_batch(small.device, small.cfg,
+                                  sub._BEAM_MAX_K + 1)
+
+
+def test_fused_beam_retry_rounds_reprobe(paper_data):
+    """The host-side exactness retry widens the config 4x per round and
+    re-dispatches through the substrate: round 1 stays inside the kernel
+    envelope at default widths, later rounds fall back to jnp."""
+    from dataclasses import replace
+
+    idx = _build(paper_data, "tt")
+    sub = eng.get_substrate("pallas")
+    cfg1 = replace(idx.cfg, frontier=idx.cfg.frontier * 2,
+                   gens=idx.cfg.gens * 4, max_steps=idx.cfg.max_steps * 4,
+                   use_cache=False)
+    assert sub.can_beam_batch(idx.device, cfg1, 3)
+    cfg2 = replace(cfg1, frontier=cfg1.frontier * 2, gens=cfg1.gens * 4,
+                   max_steps=cfg1.max_steps * 4)
+    assert not sub.can_beam_batch(idx.device, cfg2, 3)
+
+
+# -- exactness: strict admissible bound on score ties -------------------------
+
+
+def test_beam_tie_drop_stays_exact():
+    """Regression (strict dropped_max bound): a pool drop whose bound
+    EQUALS the final k-th score ties at best — it must stay exact on both
+    substrates instead of triggering a spurious doubled-width retry."""
+    from repro.core.alphabet import pad_queries
+
+    strings = [f"a{chr(98 + i)}x" for i in range(10)]
+    idx = build_index(strings, [5] * 10, make_rules([]),
+                      IndexSpec(kind="plain", gens=2, expand=1, frontier=2,
+                                max_steps=64))
+    qs, qlens = pad_queries(["a"], 4)
+    for substrate in ("jnp", "pallas"):
+        sub = eng.get_substrate(substrate)
+        s, i, e = eng.complete_batch(idx.device, idx.cfg, qs, qlens, 2, sub)
+        assert np.asarray(s)[0].tolist() == [5, 5], substrate
+        # the starved (W=2, P=1) pool provably drops bound-5 candidates
+        # here; with a non-strict bound this flag flips to False
+        assert bool(np.asarray(e)[0]), substrate
+    # end-to-end: exactly one compiled executable — no widened retry
+    idx.set_substrate("pallas")
+    assert [s for s, _ in idx.complete(["a"], k=2)[0]] == [5, 5]
+    assert idx._compile_cache.misses == 1
+
+
 # -- persistence: rule-plane container migration ------------------------------
 
 

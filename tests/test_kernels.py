@@ -186,6 +186,105 @@ def test_locus_walk_sweep(kind, frontier, block_q, rng):
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
 
 
+def _beam_fixture(rng, kind="et", n=150, **spec_kw):
+    """Rule-bearing index + a locus batch for beam phase-2 kernel tests."""
+    from repro.api import IndexSpec, build_index
+    from repro.core.engine import get_substrate
+
+    words = ["st", "saint", "street", "ave", "avenue", "dr", "drive"]
+    strings = [f"{words[int(rng.integers(0, len(words)))]} "
+               f"{words[int(rng.integers(0, len(words)))]} {i % 23:02d}"
+               for i in range(n)]
+    idx = build_index(
+        strings, list(rng.integers(0, 1000, len(strings))),
+        make_rules([("st", "saint"), ("ave", "avenue")]),
+        IndexSpec(kind=kind, **spec_kw))
+    queries = [s[: int(rng.integers(1, 9))] for s in strings[:21]] + \
+        ["st", "zzz", ""]
+    qs, qlens = pad_queries(queries, 10)
+    loci, _ = get_substrate("jnp").walk_batch(
+        idx.device, idx.cfg, jnp.asarray(qs), jnp.asarray(qlens))
+    return idx, loci
+
+
+def _assert_beam_parity(idx, loci, k, block_b=8):
+    a = ops.beam_topk(idx.device, idx.cfg, loci, k, block_b=block_b)
+    b = ref.beam_topk_ref(idx.device, idx.cfg, loci, k)
+    for x, y, nm in zip(a, b, ("scores", "sids", "exact")):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=nm)
+    return np.asarray(b[2])
+
+
+@pytest.mark.parametrize("kind,gens,expand,frontier,k,block_b", [
+    ("plain", 8, 2, 4, 3, 4), ("tt", 16, 4, 8, 5, 8),
+    ("et", 48, 8, 32, 10, 8), ("ht", 4, 2, 4, 3, 4),
+])
+def test_beam_topk_sweep(kind, gens, expand, frontier, k, block_b, rng):
+    """Fused beam kernel vs the vmapped reference priority search across
+    index kinds and (W, P, k) shapes — scores, sids AND exact flags."""
+    idx, loci = _beam_fixture(rng, kind=kind, gens=gens, expand=expand,
+                              frontier=frontier, max_steps=64)
+    _assert_beam_parity(idx, loci, k, block_b=block_b)
+
+
+def test_beam_topk_starved_widths_inexact_parity(rng):
+    """Starved pool widths force drops above the k-th score; the kernel's
+    dropped_max tracking must reproduce the inexact flags exactly (they
+    gate the host-side doubled-width retry)."""
+    idx, loci = _beam_fixture(rng, kind="ht", gens=4, expand=2, frontier=4,
+                              max_steps=8)
+    exact = _assert_beam_parity(idx, loci, 5)
+    assert (~exact).any()   # the starved search must actually go inexact
+
+
+def test_beam_topk_single_generator(rng):
+    """W=1, P=1: pool of one generator, popped and re-armed in place."""
+    idx, loci = _beam_fixture(rng, kind="tt", gens=1, expand=1, frontier=1,
+                              max_steps=32)
+    _assert_beam_parity(idx, loci, 3, block_b=4)
+
+
+def test_beam_topk_max_steps_clamp(rng):
+    """max_steps=1 truncates the search mid-flight; the fixed-trip loop
+    must stop exactly where the reference while_loop stops (unfinished
+    queries flagged inexact)."""
+    idx, loci = _beam_fixture(rng, kind="et", max_steps=1)
+    exact = _assert_beam_parity(idx, loci, 5)
+    assert (~exact).any()
+
+
+def test_beam_topk_k_exceeds_live_emissions(rng):
+    """k larger than the total completion count pads the heap with -1."""
+    idx, loci = _beam_fixture(rng, kind="et", n=3)
+    exact = _assert_beam_parity(idx, loci, 10)
+    assert exact.all()
+    s, _, _ = ops.beam_topk(idx.device, idx.cfg, loci, 10)
+    assert (np.asarray(s) == -1).any()       # -1 padded tails
+
+
+@pytest.mark.parametrize("bsz", [1, 3, 13])
+def test_beam_topk_nonmultiple_batch_sizes(bsz, rng):
+    """Batch sizes off the block grid pad with all-(-1) locus rows (dead
+    pool, exact) and slice off cleanly."""
+    idx, loci = _beam_fixture(rng, kind="ht")
+    _assert_beam_parity(idx, loci[:bsz], 5)
+
+
+def test_beam_topk_empty_dictionary():
+    """The degenerate empty dictionary short-circuits like the reference:
+    all -1 results, exact everywhere."""
+    from repro.api import IndexSpec, build_index
+
+    idx = build_index([], [], make_rules([]), IndexSpec(kind="plain"))
+    loci = jnp.full((3, idx.cfg.frontier), -1, jnp.int32)
+    a = ops.beam_topk(idx.device, idx.cfg, loci, 4)
+    b = ref.beam_topk_ref(idx.device, idx.cfg, loci, 4)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert (np.asarray(a[0]) == -1).all() and np.asarray(a[2]).all()
+
+
 def test_pad_query_batch_invariant():
     """Padded rows carry qlen 0 AND chars -1 — each alone keeps the walk
     at the root, so the padded outputs are inert before slicing."""
