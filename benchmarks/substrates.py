@@ -13,7 +13,13 @@ structures are shared), across two axes:
   runs the generator-pool priority search, and the rule-free ``plain``
   row isolates it behind the trivial prefix walk.  Each row records
   whether the pallas substrate claimed the beam natively (``fused_beam``,
-  from the ``can_beam_batch`` probe).
+  from the ``can_beam_batch`` probe);
+- *DMA-streamed tier*: two pallas-only rows re-run the plain and ht beam
+  workloads under a VMEM budget that evicts the dictionary-sized tables,
+  so phase 1 and phase 2 go through the HBM-streaming kernels
+  (``streamed_walk``/``streamed_beam`` columns, from the
+  ``walk_variant``/``beam_variant`` probes).  Off-TPU these measure the
+  interpret-mode emulation of the DMA pipeline, not real overlap.
 
 On CPU the pallas column runs the kernels in interpret mode — that
 measures dispatch correctness and overhead, not kernel speed; the TPU run
@@ -37,19 +43,32 @@ from benchmarks.common import (SIZES, build_index, dataset, emit,
                                fixed_batches, time_batches)
 from repro.data.strings import make_workload
 
-# (label, index kind, build kwargs) — the two phase-2 engines benchmarked
-# in B7 on ET, the rule-bearing walk workloads for the fused locus-DP
-# kernel (tt = link store, ht = links + teleports), and a rule-free beam
-# row where phase 1 is the trivial prefix walk so the beam phase-2 kernel
-# dominates the measurement
+# (label, index kind, build kwargs, streamed) — the two phase-2 engines
+# benchmarked in B7 on ET, the rule-bearing walk workloads for the fused
+# locus-DP kernel (tt = link store, ht = links + teleports), a rule-free
+# beam row where phase 1 is the trivial prefix walk so the beam phase-2
+# kernel dominates the measurement, and two DMA-streamed-tier rows (the
+# same workloads under a VMEM budget that evicts every dictionary-sized
+# table, so the HBM streaming path is what gets timed)
 CASES = [
-    ("beam", "et", {}),
-    ("cached_k16", "et", {"cache_k": 16}),
-    ("beam", "tt", {}),
-    ("beam", "ht", {}),
-    ("beam", "plain", {}),
+    ("beam", "et", {}, False),
+    ("cached_k16", "et", {"cache_k": 16}, False),
+    ("beam", "tt", {}, False),
+    ("beam", "ht", {}, False),
+    ("beam", "plain", {}, False),
+    ("beam", "plain", {}, True),
+    ("beam", "ht", {}, True),
 ]
 SUBSTRATES = ("jnp", "pallas")
+
+
+def _streamed_budget(idx):
+    """A VMEM budget that forces the DMA-streamed tier: room for the
+    rule trie (the streamed locus kernel keeps it resident) but for none
+    of the dictionary-sized tables."""
+    from repro.core import engine as eng
+
+    return eng.get_substrate("pallas").min_streamed_budget(idx.device)
 
 
 def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
@@ -70,17 +89,20 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
     # with, or the fused_walk column could misreport the timed path
     from repro.api.compile_cache import bucket_size
     seq_len = bucket_size(max(len(q) for q in qs))
-    for engine, kind, kw in CASES:
+    for engine, kind, kw, streamed in CASES:
         idx = build_index(ds, kind, **kw)
-        for substrate in SUBSTRATES:
+        if streamed:
+            idx.set_memory_budget(_streamed_budget(idx))
+        # streamed rows only make sense on the pallas substrate (the jnp
+        # reference ignores the VMEM budget) — the resident cases keep
+        # the jnp twin as the reference column
+        for substrate in SUBSTRATES if not streamed else ("pallas",):
             idx.set_substrate(substrate)
             sub = eng.get_substrate(substrate)
-            fused = substrate == "pallas" and sub.can_walk_batch(
-                idx.device, idx.cfg, seq_len)
-            # beam rows route phase 2 through the fused beam kernel when
-            # the probe claims it (cached rows never touch the beam)
-            fused_beam = substrate == "pallas" and engine == "beam" \
-                and sub.can_beam_batch(idx.device, idx.cfg, k)
+            walk_v = sub.walk_variant(idx.device, idx.cfg, seq_len) \
+                if substrate == "pallas" else None
+            beam_v = sub.beam_variant(idx.device, idx.cfg, k) \
+                if substrate == "pallas" and engine == "beam" else None
             batches = fixed_batches(qs, batch)
             sec = time_batches(lambda b: idx.complete(b, k=k), batches)
             rows.append({
@@ -90,8 +112,11 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
                 "backend": jax.default_backend(),
                 "interpret_mode": jax.default_backend() != "tpu"
                 and substrate == "pallas",
-                "fused_walk": bool(fused),
-                "fused_beam": bool(fused_beam),
+                "fused_walk": walk_v is not None,
+                "fused_beam": beam_v is not None,
+                "streamed_walk": walk_v == "streamed",
+                "streamed_beam": beam_v == "streamed",
+                "memory_budget": idx.memory_budget,
                 "bytes_per_string": round(idx.stats.bytes_per_string, 1),
                 "us_per_q": round(sec * 1e6, 1),
             })

@@ -88,19 +88,23 @@ def append_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
 def _row_key(row: dict) -> tuple:
     """Workload identity of a smoke row (what us/query is comparable
     across runs): engine x kind x substrate on one backend, *including*
-    which fused paths the substrate claimed — when a PR lands a kernel
-    that changes what a row measures (e.g. the beam rows once the fused
-    beam kernel claims them), the row starts a fresh history instead of
-    being gated against timings of a different code path."""
+    which fused paths the substrate claimed and which execution tier
+    (VMEM-resident vs DMA-streamed) served them — when a PR lands a
+    kernel that changes what a row measures (e.g. the beam rows once the
+    fused beam kernel claims them, or a row moving to the streamed
+    tier), the row starts a fresh history instead of being gated against
+    timings of a different code path.  Rows predating a flag read it as
+    False, so their keys are stable across tool upgrades."""
     return (row.get("engine"), row.get("kind"), row.get("substrate"),
             row.get("backend"), bool(row.get("fused_walk")),
-            bool(row.get("fused_beam")))
+            bool(row.get("fused_beam")), bool(row.get("streamed_walk")),
+            bool(row.get("streamed_beam")))
 
 
 def _key_label(key: tuple) -> str:
-    engine, kind, substrate, _, fused_walk, fused_beam = key
-    fused = "+".join(n for n, f in (("fw", fused_walk), ("fb", fused_beam))
-                     if f)
+    engine, kind, substrate, _, fw, fb, sw, sb = key
+    fused = "+".join(n for n, f in (("fw", fw), ("fb", fb), ("sw", sw),
+                                    ("sb", sb)) if f)
     return f"{engine}/{kind}/{substrate}" + (f" [{fused}]" if fused else "")
 
 
@@ -136,11 +140,13 @@ def render_markdown(hist: list[dict], max_commits: int = 8) -> str:
         lines.append("")
         lines.append(f"_({len(hist)} runs total; newest {len(runs)} shown;"
                      f" pallas rows run in interpret mode off-TPU;"
-                     f" [fw]/[fb] = fused walk/beam kernel claimed)_")
+                     f" [fw]/[fb] = fused walk/beam claimed,"
+                     f" [sw]/[sb] = DMA-streamed tier)_")
     else:
         lines.append("")
         lines.append("_(pallas rows run in interpret mode off-TPU; "
-                     "[fw]/[fb] = fused walk/beam kernel claimed)_")
+                     "[fw]/[fb] = fused walk/beam claimed, "
+                     "[sw]/[sb] = DMA-streamed tier)_")
     return "\n".join(lines) + "\n"
 
 

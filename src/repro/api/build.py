@@ -130,6 +130,7 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
     if spec.cache_k > 0:
         tb.build_topk_cache(trie, spec.cache_k)
     tb.pack_rule_planes(trie, rule_trie)
+    tb.pack_stream_tiles(trie, rule_trie)
 
     has_rule_side = bool(active.any())
     cfg = eng.EngineConfig(
@@ -141,6 +142,9 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
         teleports=trie.max_syn_targets,
         tele_width=trie.tele_plane.shape[1],
         term_width=rule_trie.term_plane.shape[1],
+        walk_tile=trie.walk_tile, emit_tile=trie.emit_tile,
+        link_tile=trie.link_tile,
+        memory_budget=spec.memory_budget,
         use_cache=spec.cache_k > 0, cache_k=spec.cache_k,
         substrate=eng.resolve_substrate(spec.substrate),
     )
@@ -179,8 +183,50 @@ def validate_rule_planes(trie, rule_trie, cfg) -> None:
         raise ValueError(
             f"rule plane width mismatch: term_width={cfg.term_width} but "
             f"max_terms_per_node={cfg.max_terms_per_node}")
-    if int(trie.link_ptr[-1]) != len(trie.link_rule):
+    if int(trie.link_ptr[-1]) > len(trie.link_rule):
         raise ValueError("link_ptr does not cover the link store rows")
+    validate_stream_tiles(trie, cfg)
+
+
+def validate_stream_tiles(trie, cfg) -> None:
+    """Cross-check the tile-aligned stream layout against the static tile
+    widths the engine was configured with.  A window of ``tile`` elements
+    anchored at any row start must cover the whole row and stay in
+    bounds; a container violating either would make the DMA-streamed
+    kernels read out of bounds or truncate rows, so it fails loudly here
+    (at build time and again on load)."""
+    groups = [
+        ("walk_tile", cfg.walk_tile, trie.walk_tile,
+         [(trie.first_child, trie.edge_char), (trie.first_child,
+                                               trie.edge_child),
+          (trie.s_first_child, trie.s_edge_char),
+          (trie.s_first_child, trie.s_edge_child)]),
+        ("emit_tile", cfg.emit_tile, trie.emit_tile,
+         [(trie.emit_ptr, trie.emit_node), (trie.emit_ptr, trie.emit_score),
+          (trie.emit_ptr, trie.emit_is_leaf)]),
+        ("link_tile", cfg.link_tile, trie.link_tile,
+         [(trie.link_ptr, trie.link_rule), (trie.link_ptr,
+                                            trie.link_target)]),
+    ]
+    for name, want, got, pairs in groups:
+        if want != got:
+            raise ValueError(
+                f"stream tile mismatch: cfg.{name}={want} but the trie "
+                f"was packed with {got}; rebuild the index (or re-save "
+                "the container) with this version")
+        for ptr, arr in pairs:
+            real = int(ptr[-1])
+            if int(np.diff(ptr).max(initial=0)) > want:
+                raise ValueError(
+                    f"stream tile {name}={want} narrower than the longest "
+                    "CSR row; rebuild the index with this version")
+            expect = 0 if real == 0 else tb._tiled_len(real, want)
+            if len(arr) != expect:
+                raise ValueError(
+                    f"stream layout under {name} has flat length "
+                    f"{len(arr)}, expected {expect} for {real} rows; "
+                    "rebuild the index (or re-save the container) with "
+                    "this version")
 
 
 def _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,

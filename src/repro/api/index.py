@@ -89,6 +89,23 @@ class CompletionIndex:
         self.cfg = replace(self.cfg, substrate=resolved)
         return self
 
+    @property
+    def memory_budget(self) -> int:
+        """VMEM byte budget for table residency (0 = substrate default)."""
+        return self.cfg.memory_budget
+
+    def set_memory_budget(self, n: int) -> "CompletionIndex":
+        """Set the VMEM byte budget for table residency (0 = substrate
+        default).  Cheap, like :meth:`set_substrate`: the budget rides
+        ``EngineConfig`` (and thus every compile-cache key), so the next
+        lookup re-probes resident vs DMA-streamed kernel variants while
+        executables for the old budget stay cached.  Returns ``self``."""
+        if n < 0:
+            raise ValueError("memory_budget must be >= 0")
+        self.spec = self.spec.replace(memory_budget=n)
+        self.cfg = replace(self.cfg, memory_budget=n)
+        return self
+
     # -- construction ------------------------------------------------------
 
     @staticmethod

@@ -10,11 +10,17 @@ paying the multi-second rebuild.
 Format history:
 
 - v1 (PR 1): dict/rule-trie CSRs + metadata.
-- v2 (this version): adds the packed rule plane (``trie__tele_plane``,
+- v2 (PR 3): adds the packed rule plane (``trie__tele_plane``,
   ``trie__link_ptr``, ``rule_trie__term_plane``) and the static plane
   widths on the persisted EngineConfig.  v1 containers still load — the
   planes are rebuilt from the CSRs on the fly (a few ms of numpy) and the
   widths recomputed, so old on-disk indexes keep working unchanged.
+- v3 (this version): the flat CSR / emission / link tables are stored in
+  the tile-aligned stream layout (``trie_build.pack_stream_tiles``) with
+  the static tile widths in the metadata, so the DMA-streamed kernel
+  tier can window them without a re-layout on load.  v1/v2 containers
+  still load — the tiles are re-packed on the fly and the widths
+  recomputed (real lengths come from the CSR ptr totals).
 """
 
 from __future__ import annotations
@@ -29,8 +35,8 @@ from repro.api.spec import IndexSpec
 from repro.core import engine as eng
 from repro.core import trie_build as tb
 
-FORMAT_VERSION = 2
-_SUPPORTED_VERSIONS = (1, 2)
+FORMAT_VERSION = 3
+_SUPPORTED_VERSIONS = (1, 2, 3)
 _META_KEY = "__meta__"
 
 
@@ -75,6 +81,9 @@ def save_index(index, path: str) -> None:
         "stats": dataclasses.asdict(index.stats),
         "trie_scalars": {"max_depth": trie.max_depth,
                          "max_syn_targets": trie.max_syn_targets,
+                         "walk_tile": trie.walk_tile,
+                         "emit_tile": trie.emit_tile,
+                         "link_tile": trie.link_tile,
                          "has_cache": trie.topk_score is not None},
         "rule_trie_scalars": {
             "max_lhs_len": rule_trie.max_lhs_len,
@@ -114,10 +123,15 @@ def load_index_parts(path: str) -> dict:
             trie_arrays.pop("topk_sid", None)
         trie = tb.DictTrie(**trie_arrays,
                            max_depth=ts["max_depth"],
-                           max_syn_targets=ts["max_syn_targets"])
+                           max_syn_targets=ts["max_syn_targets"],
+                           walk_tile=ts.get("walk_tile", 0),
+                           emit_tile=ts.get("emit_tile", 0),
+                           link_tile=ts.get("link_tile", 0))
         rule_trie = tb.RuleTrie(**rt_arrays, **meta["rule_trie_scalars"])
         if version < 2:   # pre-rule-plane container: rebuild from the CSRs
             tb.pack_rule_planes(trie, rule_trie)
+        if version < 3:   # pre-stream-layout container: re-pack the tiles
+            tb.pack_stream_tiles(trie, rule_trie)
         strings = _unpack_bytes(z["strings__blob"], z["strings__offsets"])
         scores = z["scores"]
         rules = [tb.SynonymRule(lhs, rhs) for lhs, rhs in zip(
@@ -130,12 +144,15 @@ def load_index_parts(path: str) -> dict:
         **{k: v for k, v in meta["cfg"].items() if k in known})
     # the substrate is a property of the *host* we load on, not the one
     # that saved: re-resolve the spec's (possibly "auto") choice here.
-    # Plane widths come from the arrays themselves (v1 metadata predates
-    # them) and are cross-checked before anything reaches the device.
+    # Plane/tile widths come from the (possibly just re-packed) structures
+    # themselves (v1/v2 metadata predates them) and are cross-checked
+    # before anything reaches the device.
     cfg = dataclasses.replace(
         cfg, substrate=eng.resolve_substrate(spec.substrate),
         tele_width=trie.tele_plane.shape[1],
-        term_width=rule_trie.term_plane.shape[1])
+        term_width=rule_trie.term_plane.shape[1],
+        walk_tile=trie.walk_tile, emit_tile=trie.emit_tile,
+        link_tile=trie.link_tile)
     from repro.api.build import validate_rule_planes
     validate_rule_planes(trie, rule_trie, cfg)
     return {

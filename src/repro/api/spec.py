@@ -33,6 +33,10 @@ class IndexSpec:
         kernels; interpret mode off-TPU), or "auto" (pallas on TPU, jnp
         elsewhere).  Resolved at build/load time against the substrate
         registry in :mod:`repro.core.engine.substrate`.
+    memory_budget: VMEM bytes the pallas substrate may spend keeping
+        tables resident; tries whose tables exceed it run the
+        DMA-streamed kernel tier (HBM-resident tables) instead of
+        falling back to jnp.  0 = substrate default.
     """
 
     kind: str = "et"
@@ -43,6 +47,7 @@ class IndexSpec:
     expand: int = 8
     max_steps: int = 512
     substrate: str = "auto"
+    memory_budget: int = 0
 
     def validate(self) -> "IndexSpec":
         if self.kind not in _BUILDERS:
@@ -57,7 +62,7 @@ class IndexSpec:
             raise ValueError(
                 f"unknown substrate {self.substrate!r}; expected 'auto' or "
                 f"one of {available_substrates()}")
-        for name in ("cache_k",):
+        for name in ("cache_k", "memory_budget"):
             if getattr(self, name) < 0:
                 raise ValueError(f"{name} must be >= 0")
         for name in ("frontier", "gens", "expand", "max_steps"):

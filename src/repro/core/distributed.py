@@ -76,15 +76,33 @@ def stack_shards(indexes: list[CompletionIndex]):
     """
     devs = [ix.device for ix in indexes]
     fields = eng.DeviceTrie._fields
+    cfgs = [ix.cfg for ix in indexes]
+    # the merged stream-tile widths are maxima over the shards, so every
+    # streamable flat table keeps one merged tile of tail slack past the
+    # longest shard — a streamed-tier window anchored at any real row
+    # start stays in bounds on the stacked layout too (the same maxima
+    # become the merged EngineConfig widths below, so the two stay
+    # consistent by construction)
+    walk_tile = max(c.walk_tile for c in cfgs)
+    emit_tile = max(c.emit_tile for c in cfgs)
+    link_tile = max(c.link_tile for c in cfgs)
+    tile_slack = {
+        "edge_char": walk_tile, "edge_child": walk_tile,
+        "s_edge_char": walk_tile, "s_edge_child": walk_tile,
+        "emit_node": emit_tile, "emit_score": emit_tile,
+        "emit_is_leaf": emit_tile,
+        "link_rule": link_tile, "link_target": link_tile,
+    }
     stacked = {}
     for f in fields:
         arrs = [np.asarray(getattr(d, f)) for d in devs]
         tgt = tuple(max(a.shape[i] for a in arrs) for i in range(arrs[0].ndim))
         tgt = tuple(max(t, 1) for t in tgt)
+        if f in tile_slack and tgt[0] > 1:
+            tgt = (tgt[0] + tile_slack[f],) + tgt[1:]
         arrs = [_pad_to(a if a.size else np.zeros(tuple(1 for _ in tgt), a.dtype), tgt)
                 for a in arrs]
         stacked[f] = np.stack(arrs)
-    cfgs = [ix.cfg for ix in indexes]
     merged = eng.EngineConfig(
         frontier=max(c.frontier for c in cfgs),
         gens=max(c.gens for c in cfgs),
@@ -96,6 +114,8 @@ def stack_shards(indexes: list[CompletionIndex]):
         teleports=max(c.teleports for c in cfgs),
         tele_width=max(c.tele_width for c in cfgs),
         term_width=max(c.term_width for c in cfgs),
+        walk_tile=walk_tile, emit_tile=emit_tile, link_tile=link_tile,
+        memory_budget=max(c.memory_budget for c in cfgs),
         use_cache=all(c.use_cache for c in cfgs),
         cache_k=min(c.cache_k for c in cfgs),
         substrate=cfgs[0].substrate,   # shards share one IndexSpec

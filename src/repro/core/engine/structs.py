@@ -76,6 +76,19 @@ class EngineConfig:
     # build/load time — see api.build.validate_rule_planes)
     tele_width: int = 1
     term_width: int = 1
+    # static stream-tile widths of the tile-aligned table layout
+    # (trie_build.pack_stream_tiles): the DMA-streamed kernel tier slices
+    # fixed-width windows [start, start+tile) off the flat CSR / emission
+    # tables, so each tile must cover the longest row and the builder pads
+    # the flat arrays to a tile multiple.  Validated against the arrays at
+    # build/load time — see api.build.validate_rule_planes.
+    walk_tile: int = 8          # dict + synonym child-CSR window
+    emit_tile: int = 8          # emission-list window
+    link_tile: int = 8          # link-store (per-anchor) window
+    # VMEM byte budget for table residency: tables at or under the budget
+    # run the VMEM-resident kernels, larger ones stream from HBM via the
+    # DMA tier (0 = substrate default; see PallasSubstrate)
+    memory_budget: int = 0
     use_cache: bool = False     # phase-2 via materialized top-K
     cache_k: int = 0
     substrate: str = "jnp"      # execution substrate ("jnp" | "pallas")

@@ -26,9 +26,12 @@ substrate, so it rides every jit/compile-cache key;
 elsewhere (interpret-mode pallas is opt-in, not a default, off-TPU).
 
 With the fused beam kernel every hot phase — walk, beam, cached merge —
-is substrate-pluggable; remaining kernel work (DMA-streamed CSR for
-HBM-resident tries, dedup-compaction) lands as an additive substrate
-method override, not an engine rewrite.
+is substrate-pluggable.  Each fused kernel additionally runs in one of
+two *tiers*: VMEM-resident tables, or the DMA-streamed tier for tries
+whose tables outgrow the VMEM budget (``EngineConfig.memory_budget``) —
+the ``walk_variant``/``beam_variant`` probes pick resident vs streamed
+vs jnp-fallback per call.  Remaining kernel work (dedup-compaction)
+lands as an additive substrate method override, not an engine rewrite.
 """
 
 from __future__ import annotations
@@ -120,29 +123,43 @@ class PallasSubstrate(Substrate):
     run on the fallback path, where a pallas_call cannot be tiled.
 
     Phase 2a (beam) takes the fused generator-pool priority-search kernel
-    (``beam_topk``) whenever (W, P, k, max_steps, emission-table bytes)
-    fit the ``can_beam_batch`` envelope; outside it — including the later
-    rounds of the host-side doubled-width exactness retry, whose widths
-    grow 4x per round — the inherited vmapped reference answers with
-    identical results.
+    (``beam_topk``) whenever (W, P, k, max_steps) fit the
+    ``can_beam_batch`` envelope; outside it — including the later rounds
+    of the host-side doubled-width exactness retry, whose widths grow 4x
+    per round — the inherited vmapped reference answers with identical
+    results.
+
+    Each kernel runs in one of two *tiers* chosen by the VMEM byte
+    budget (``cfg.memory_budget``, default ``_DEFAULT_VMEM_BUDGET``):
+    tables at or under the budget stay whole in VMEM (*resident*);
+    larger tables stay in HBM and the *streamed* variants double-buffer
+    pointer pairs / row windows / plane rows in via ``make_async_copy``
+    (:mod:`repro.kernels.stream`) — so an oversized per-shard sub-trie
+    keeps its fused kernels instead of falling back to jnp.
+    ``walk_variant`` / ``beam_variant`` name the chosen tier.
     """
 
     name = "pallas"
 
-    # fused locus-DP static-shape envelope: beyond these the unrolled
+    # default VMEM byte budget for table residency, used when
+    # cfg.memory_budget == 0: tables at or under it run the resident
+    # kernels (which must also leave VMEM room for the per-block scratch),
+    # larger ones the DMA-streamed tier
+    _DEFAULT_VMEM_BUDGET = 8 << 20
+
+    # fused locus-DP static-shape envelope: beyond these the fused
     # sweep stops being a sensible single kernel (trace size / VMEM) and
-    # the jnp DP is the right tool.  The unrolled trip count grows as
-    # seq_len * max_lhs_len * max_terms_per_node, and the dedup width as
+    # the jnp DP is the right tool.  The per-step trip count grows as
+    # max_lhs_len * max_terms_per_node, and the dedup width as
     # frontier * tele_width, so every one of those dimensions is bounded.
-    # Table bytes must leave VMEM room for the (block_q, L+1, F) frontier
-    # scratch + query tile.
+    # The envelope is shared by the resident and streamed tiers (the
+    # sweep structure is identical; only table residency differs).
     _FUSE_MAX_SEQ = 64
     _FUSE_MAX_FRONTIER = 128
     _FUSE_MAX_RULE_MATCHES = 8
     _FUSE_MAX_LHS = 24
     _FUSE_MAX_TERMS = 4
     _FUSE_MAX_TELEPORTS = 16
-    _FUSE_MAX_TABLE_BYTES = 8 << 20
 
     # fused beam static-shape envelope: the selection network unrolls
     # W + P + k (argmax, mask) rounds per fixed-trip step, so the pool
@@ -154,7 +171,36 @@ class PallasSubstrate(Substrate):
     _BEAM_MAX_EXPAND = 32
     _BEAM_MAX_K = 64
     _BEAM_MAX_STEPS = 4096
-    _BEAM_MAX_TABLE_BYTES = 8 << 20
+
+    # table-byte accounting: the streamed locus-DP tier keeps the rule
+    # trie resident (sized by the rule set, not the dictionary) and
+    # streams everything dictionary-sized; the streamed beam tier
+    # streams all five emission-side tables
+    _WALK_STREAM_FIELDS = (
+        "first_child", "edge_char", "edge_child", "s_first_child",
+        "s_edge_char", "s_edge_child", "syn_mask", "tout", "tele_plane",
+        "link_ptr", "link_rule", "link_target")
+    _WALK_RESIDENT_FIELDS = (
+        "r_first_child", "r_edge_char", "r_edge_child", "r_term_plane")
+    _PREFIX_FIELDS = ("first_child", "edge_char", "edge_child")
+    _BEAM_FIELDS = ("emit_ptr", "emit_node", "emit_score", "emit_is_leaf",
+                    "leaf_sid")
+    _CACHE_FIELDS = ("topk_score", "topk_sid")
+
+    def _budget(self, cfg: EngineConfig) -> int:
+        return cfg.memory_budget or self._DEFAULT_VMEM_BUDGET
+
+    @staticmethod
+    def _table_bytes(t: DeviceTrie, fields) -> int:
+        return 4 * sum(math.prod(getattr(t, f).shape) for f in fields)
+
+    def min_streamed_budget(self, t: DeviceTrie) -> int:
+        """The smallest ``memory_budget`` that still admits the streamed
+        walk tier for this trie: room for the rule trie (which the
+        streamed locus kernel keeps VMEM-resident) and nothing else.
+        Test/benchmark harnesses use it to *force* the streamed tier —
+        every dictionary-sized table is over budget at this value."""
+        return max(self._table_bytes(t, self._WALK_RESIDENT_FIELDS), 1)
 
     @staticmethod
     def _rule_free(t: DeviceTrie, cfg: EngineConfig) -> bool:
@@ -164,70 +210,89 @@ class PallasSubstrate(Substrate):
         return (cfg.rule_matches == 0 and cfg.teleports == 0
                 and int(t.s_edge_child.shape[0]) == 0)
 
-    def _can_fuse_locus_dp(self, t: DeviceTrie, cfg: EngineConfig,
-                           seq_len: int) -> bool:
-        """Probe the fused locus-DP kernel's static envelope."""
-        if seq_len > self._FUSE_MAX_SEQ \
-                or cfg.frontier > self._FUSE_MAX_FRONTIER \
-                or cfg.rule_matches > self._FUSE_MAX_RULE_MATCHES \
-                or cfg.max_lhs_len > self._FUSE_MAX_LHS \
-                or cfg.max_terms_per_node > self._FUSE_MAX_TERMS \
-                or cfg.teleports > self._FUSE_MAX_TELEPORTS:
-            return False
-        table_elems = sum(
-            math.prod(getattr(t, f).shape) for f in (
-                "first_child", "edge_char", "edge_child", "s_first_child",
-                "s_edge_char", "s_edge_child", "syn_mask", "tout",
-                "tele_plane", "link_ptr", "link_rule", "link_target",
-                "r_first_child", "r_edge_char", "r_edge_child",
-                "r_term_plane"))
-        return table_elems * 4 <= self._FUSE_MAX_TABLE_BYTES
+    def _fuse_shapes_ok(self, cfg: EngineConfig, seq_len: int) -> bool:
+        """The fused locus-DP kernel's static shape envelope (both tiers)."""
+        return not (seq_len > self._FUSE_MAX_SEQ
+                    or cfg.frontier > self._FUSE_MAX_FRONTIER
+                    or cfg.rule_matches > self._FUSE_MAX_RULE_MATCHES
+                    or cfg.max_lhs_len > self._FUSE_MAX_LHS
+                    or cfg.max_terms_per_node > self._FUSE_MAX_TERMS
+                    or cfg.teleports > self._FUSE_MAX_TELEPORTS)
+
+    def walk_variant(self, t: DeviceTrie, cfg: EngineConfig,
+                     seq_len: int) -> str | None:
+        """Which native walk path serves this (trie, config, length):
+        ``"resident"`` (tables fit the VMEM budget), ``"streamed"``
+        (HBM tables behind the DMA tier), or ``None`` (jnp fallback —
+        static shapes outside the kernel envelope)."""
+        budget = self._budget(cfg)
+        if self._rule_free(t, cfg):
+            if self._table_bytes(t, self._PREFIX_FIELDS) <= budget:
+                return "resident"
+            return "streamed"
+        if not self._fuse_shapes_ok(cfg, seq_len):
+            return None
+        total = self._table_bytes(
+            t, self._WALK_STREAM_FIELDS + self._WALK_RESIDENT_FIELDS)
+        if total <= budget:
+            return "resident"
+        if self._table_bytes(t, self._WALK_RESIDENT_FIELDS) <= budget:
+            return "streamed"
+        return None
 
     def can_walk_batch(self, t, cfg, seq_len):
-        return self._rule_free(t, cfg) \
-            or self._can_fuse_locus_dp(t, cfg, seq_len)
+        return self.walk_variant(t, cfg, seq_len) is not None
 
     def walk_batch(self, t, cfg, qs, qlens):
         from repro.kernels import ops
 
+        variant = self.walk_variant(t, cfg, int(qs.shape[1]))
+        if variant is None:
+            return super().walk_batch(t, cfg, qs, qlens)
+        streamed = variant == "streamed"
         if self._rule_free(t, cfg):
             node, depth = ops.trie_walk(t.first_child, t.edge_char,
-                                        t.edge_child, qs, qlens)
+                                        t.edge_child, qs, qlens,
+                                        streamed=streamed,
+                                        walk_tile=cfg.walk_tile)
             B = int(qs.shape[0])
             hit = depth == qlens    # partial walks have no completions
             loci = jnp.full((B, cfg.frontier), NEG_ONE, jnp.int32)
             loci = loci.at[:, 0].set(jnp.where(hit, node, NEG_ONE))
             return loci, jnp.zeros((B,), jnp.int32)
-        if self._can_fuse_locus_dp(t, cfg, int(qs.shape[1])):
-            return ops.locus_walk(t, cfg, qs, qlens)
-        return super().walk_batch(t, cfg, qs, qlens)
+        return ops.locus_walk(t, cfg, qs, qlens, streamed=streamed)
 
-    def can_beam_batch(self, t, cfg, k):
-        """Probe the fused beam kernel's static envelope.
+    def beam_variant(self, t: DeviceTrie, cfg: EngineConfig,
+                     k: int) -> str | None:
+        """Which native beam path serves this (trie, config, k):
+        ``"resident"``, ``"streamed"``, or ``None`` (jnp fallback).
 
-        Mirrors ``can_walk_batch``: the kernel requires the pool to hold
-        the seed antichain (F <= W) and a pop no wider than the pool
-        (P <= W) — both preconditions of the reference too — plus bounded
-        selection-network widths and VMEM-resident emission tables."""
+        The kernel requires the pool to hold the seed antichain (F <= W)
+        and a pop no wider than the pool (P <= W) — both preconditions
+        of the reference too — plus bounded selection-network widths;
+        within that envelope the VMEM budget picks the tier."""
         if cfg.gens > self._BEAM_MAX_GENS \
                 or cfg.expand > self._BEAM_MAX_EXPAND \
                 or k > self._BEAM_MAX_K \
                 or cfg.max_steps > self._BEAM_MAX_STEPS \
                 or cfg.frontier > cfg.gens \
                 or cfg.expand > cfg.gens:
-            return False
-        table_elems = sum(
-            math.prod(getattr(t, f).shape) for f in (
-                "emit_ptr", "emit_node", "emit_score", "emit_is_leaf",
-                "leaf_sid"))
-        return table_elems * 4 <= self._BEAM_MAX_TABLE_BYTES
+            return None
+        if self._table_bytes(t, self._BEAM_FIELDS) <= self._budget(cfg):
+            return "resident"
+        return "streamed"
+
+    def can_beam_batch(self, t, cfg, k):
+        return self.beam_variant(t, cfg, k) is not None
 
     def beam_topk_batch(self, t, cfg, loci, k):
-        if not self.can_beam_batch(t, cfg, k):
+        variant = self.beam_variant(t, cfg, k)
+        if variant is None:
             return super().beam_topk_batch(t, cfg, loci, k)
         from repro.kernels import ops
 
-        return ops.beam_topk(t, cfg, loci, k)
+        return ops.beam_topk(t, cfg, loci, k,
+                             streamed=variant == "streamed")
 
     def topk_with_payload(self, scores, payload, k):
         from repro.kernels import ops
@@ -237,6 +302,12 @@ class PallasSubstrate(Substrate):
     def cached_topk_batch(self, t, cfg, loci, k):
         assert cfg.use_cache and k <= cfg.cache_k, \
             "cache disabled or k too large"
+        # the fused merge kernels hold the materialized (N, K) cache
+        # tables whole in VMEM; there is no streamed cached tier yet
+        # (ROADMAP follow-on), so caches over the budget answer through
+        # the jnp reference merge instead of an unfittable kernel
+        if self._table_bytes(t, self._CACHE_FIELDS) > self._budget(cfg):
+            return super().cached_topk_batch(t, cfg, loci, k)
         from repro.kernels import ops
 
         exact = jnp.ones(loci.shape[:-1], bool)

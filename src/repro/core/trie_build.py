@@ -106,6 +106,12 @@ class DictTrie:
     tele_plane: np.ndarray | None = None  # int32[N, Tw] teleports, -1 pad
     link_ptr: np.ndarray | None = None    # int32[N+1] anchor -> link rows
 
+    # tile-aligned stream layout (see pack_stream_tiles): static window
+    # widths for the DMA-streamed kernel tier; 0 until packed
+    walk_tile: int = 0
+    emit_tile: int = 0
+    link_tile: int = 0
+
     # optional materialized per-node top-K (dict leaves only)
     topk_score: np.ndarray | None = None  # int32[N, K]
     topk_sid: np.ndarray | None = None    # int32[N, K]
@@ -552,6 +558,86 @@ def pack_rule_planes(trie: DictTrie, rule_trie: RuleTrie) -> None:
     rule_trie.term_plane = _csr_to_plane(rule_trie.term_ptr,
                                          rule_trie.term_rule,
                                          rule_trie.max_terms_per_node)
+
+
+def _tile_width(max_row: int, minimum: int = 8) -> int:
+    """Smallest power-of-two window >= the longest CSR row (min 8): one
+    DMA of this width always covers a whole row."""
+    w = minimum
+    while w < max_row:
+        w *= 2
+    return w
+
+
+def _tiled_len(real: int, tile: int) -> int:
+    """Padded flat length for a ``real``-row table under ``tile``-wide
+    windows: a multiple of ``tile`` that is >= real + tile, so a window
+    starting at any in-range offset (including ``real`` itself, the empty
+    row at the very end) stays in bounds."""
+    return (real + 2 * tile - 1) // tile * tile
+
+
+def _pad_tiled(arr: np.ndarray, real: int, tile: int, fill) -> np.ndarray:
+    """Pad ``arr[:real]`` to ``_tiled_len(real, tile)`` with ``fill``.
+    Re-slicing from ``real`` (the CSR ptr total) makes re-packing
+    idempotent.  Empty tables stay empty: every ``shape[0] > 0``
+    feature probe in the engine keeps its meaning."""
+    if real == 0:
+        return arr[:0]
+    out = np.full(_tiled_len(real, tile), fill, dtype=arr.dtype)
+    out[:real] = arr[:real]
+    return out
+
+
+def pack_stream_tiles(trie: DictTrie, rule_trie: RuleTrie) -> None:
+    """Relayout the flat tables into the tile-aligned *stream layout*.
+
+    The DMA-streamed kernel tier (``kernels/stream.py``) reads CSR child
+    rows, emission rows and link-store rows with fixed-width windowed
+    ``make_async_copy`` slices ``[start, start + tile)`` instead of
+    holding the whole table in VMEM.  For those windows to be legal the
+    layout must guarantee two statics, both recorded on the trie (and in
+    ``EngineConfig`` at build time):
+
+    - a *tile width* per table family — a power of two covering the
+      longest row, so one window always spans a whole CSR row;
+    - a *tail pad* — each flat array grows to a tile multiple at least
+      one tile past its real length, so a window anchored at any row
+      start (even the empty row at the very end) stays in bounds.
+
+    Pad values are inert by construction (chars -1 never match a query
+    byte, scores -1 never beat a live emission, child/target ids 0 are
+    only read masked-off), and the real lengths stay recoverable from the
+    CSR ptr totals, which makes re-packing idempotent.  Empty tables are
+    left empty so ``shape[0] > 0`` feature probes keep working.  The
+    resident kernels and the jnp reference engine confine every search to
+    ``[ptr[n], ptr[n+1])`` and so return bit-identical results on the
+    padded layout.  Must run after ``pack_rule_planes`` (needs
+    ``link_ptr``) and any final ``rebuild_edges``.  Persisted as npz
+    format v3; older containers re-pack here on load.
+    """
+    assert trie.link_ptr is not None, \
+        "pack_stream_tiles requires pack_rule_planes to have run"
+    fanout = int(np.diff(trie.first_child).max(initial=0))
+    s_fanout = int(np.diff(trie.s_first_child).max(initial=0))
+    trie.walk_tile = _tile_width(max(fanout, s_fanout))
+    trie.emit_tile = _tile_width(int(np.diff(trie.emit_ptr).max(initial=0)))
+    trie.link_tile = _tile_width(int(np.diff(trie.link_ptr).max(initial=0)))
+
+    e = int(trie.first_child[-1])
+    trie.edge_char = _pad_tiled(trie.edge_char, e, trie.walk_tile, -1)
+    trie.edge_child = _pad_tiled(trie.edge_child, e, trie.walk_tile, 0)
+    es = int(trie.s_first_child[-1])
+    trie.s_edge_char = _pad_tiled(trie.s_edge_char, es, trie.walk_tile, -1)
+    trie.s_edge_child = _pad_tiled(trie.s_edge_child, es, trie.walk_tile, 0)
+    m = int(trie.emit_ptr[-1])
+    trie.emit_node = _pad_tiled(trie.emit_node, m, trie.emit_tile, 0)
+    trie.emit_score = _pad_tiled(trie.emit_score, m, trie.emit_tile, -1)
+    trie.emit_is_leaf = _pad_tiled(trie.emit_is_leaf, m, trie.emit_tile,
+                                   False)
+    lk = int(trie.link_ptr[-1])
+    trie.link_rule = _pad_tiled(trie.link_rule, lk, trie.link_tile, -1)
+    trie.link_target = _pad_tiled(trie.link_target, lk, trie.link_tile, 0)
 
 
 # ---------------------------------------------------------------------------

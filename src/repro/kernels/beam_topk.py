@@ -28,14 +28,27 @@ asc) pairs, which reproduces ``lax.top_k`` ordering exactly
 (score-descending, ties to the lower index) and lowers to a single
 bitonic network on the VPU instead of ``top_k``'s gather/scatter chain.
 
-The emission tables (``emit_ptr``/``emit_node``/``emit_score``/
-``emit_is_leaf``) and ``leaf_sid`` are VMEM-resident like the trie-walk
-kernel's CSRs; ``PallasSubstrate.can_beam_batch`` probes the static sizes
-(W, P, k, max_steps, table bytes) and falls back to the vmapped jnp
-reference outside the envelope.  Results — scores, string ids, AND the
-per-query ``exact`` flags — are bit-identical to
-``jax.vmap(engine.beam.beam_topk)``; the substrate parity suite enforces
-this in interpret mode on CPU.
+The search body is written once against a small emission-table accessor
+seam and runs in two tiers:
+
+- *resident* (``beam_topk_batch``): the emission tables (``emit_ptr`` /
+  ``emit_node`` / ``emit_score`` / ``emit_is_leaf``) and ``leaf_sid``
+  are VMEM-resident like the trie-walk kernel's CSRs;
+- *streamed* (``beam_topk_batch_streamed``): the tables stay in HBM and
+  each step's pointer pairs, emission-row windows and sid gathers are
+  double-buffered into VMEM scratch via ``make_async_copy``
+  (:mod:`repro.kernels.stream`).  The tile-aligned layout
+  (``trie_build.pack_stream_tiles``) guarantees one ``emit_tile`` window
+  covers any node's whole emission row, so reading the cursor slot off
+  the streamed row yields exactly the resident gather's value — both
+  tiers are bit-identical to ``jax.vmap(engine.beam.beam_topk)``
+  (scores, string ids AND the per-query ``exact`` flags); the substrate
+  parity suite enforces this in interpret mode on CPU.
+
+``PallasSubstrate.can_beam_batch`` probes the static sizes (W, P, k,
+max_steps) and picks the tier by comparing the emission-table bytes
+against the VMEM budget; shapes outside the envelope fall back to the
+vmapped jnp reference.
 """
 
 from __future__ import annotations
@@ -47,16 +60,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.stream import StreamTable, row_take
+
 # plain python int: jnp scalars would be captured as constants by the
 # pallas kernel tracer
 _NEG_ONE = -1
-
-
-def _row_take(mat, idx):
-    """mat [BQ, C], idx [BQ, X] row-local columns -> mat[row, idx[row]]."""
-    c = int(mat.shape[1])
-    rows = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 0)
-    return jnp.take(mat.reshape(-1), rows * c + idx)
 
 
 def _topk_sorted(vals, n: int, payloads):
@@ -82,26 +90,86 @@ def _topk_sorted(vals, n: int, payloads):
             [p[:, :n] for p in out[2:]], svals[:, n:])
 
 
-def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
-            loci_ref,
-            os_ref, oi_ref, oe_ref,
-            gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref, *,
-            gens: int, expand: int, k: int, max_steps: int, e_size: int):
-    eptr, enode = eptr_ref[...], enode_ref[...]
-    escore, eleaf, lsid = escore_ref[...], eleaf_ref[...], lsid_ref[...]
-    loci = loci_ref[...]                              # [BQ, F]
-    bq, f = loci.shape
-    W, P = gens, expand
+# ---------------------------------------------------------------------------
+# emission-table accessor seam: the search body is tier-agnostic
+# ---------------------------------------------------------------------------
 
-    def emit_bound(nodes, cursors):
+
+class _ResidentEmit:
+    """VMEM-resident emission-table reads (the original kernel's forms)."""
+
+    def __init__(self, eptr, enode, escore, eleaf, lsid):
+        self.eptr, self.enode = eptr, enode
+        self.escore, self.eleaf, self.lsid_arr = escore, eleaf, lsid
+        self.e_size = max(int(enode.shape[0]), 1)
+
+    def emit_bound(self, nodes, cursors):
         """Admissible bound of each generator's current emission; -1 when
         the node is dead or the cursor ran off its emission list."""
         valid = nodes >= 0
         n = jnp.where(valid, nodes, 0)
-        e = jnp.take(eptr, n) + cursors
-        ok = valid & (e < jnp.take(eptr, n + 1))
-        score = jnp.take(escore, jnp.clip(e, 0, e_size - 1))
+        e = jnp.take(self.eptr, n) + cursors
+        ok = valid & (e < jnp.take(self.eptr, n + 1))
+        score = jnp.take(self.escore, jnp.clip(e, 0, self.e_size - 1))
         return jnp.where(ok, score, _NEG_ONE)
+
+    def pop_emissions(self, nodes, cursors):
+        """(node, score, is_leaf) of each generator's current emission
+        (callers mask invalid lanes; a popped lane's cursor is in-row)."""
+        e = jnp.take(self.eptr, nodes) + cursors
+        e = jnp.clip(e, 0, self.e_size - 1)
+        return (jnp.take(self.enode, e), jnp.take(self.escore, e),
+                jnp.take(self.eleaf, e) != 0)
+
+    def lsid(self, nodes):
+        return jnp.take(self.lsid_arr, nodes)
+
+
+class _StreamedEmit:
+    """HBM-resident emission tables behind double-buffered windowed DMA.
+
+    Pointer pairs stream per lane; emission rows stream as whole
+    ``emit_tile`` windows (the tile covers the longest row) with the
+    cursor slot read row-locally — the same value the resident gather
+    reads at ``eptr[n] + cursor``.
+    """
+
+    def __init__(self, eptr_t, enode_t, escore_t, eleaf_t, lsid_t,
+                 tile: int):
+        self.eptr_t, self.enode_t = eptr_t, enode_t
+        self.escore_t, self.eleaf_t, self.lsid_t = escore_t, eleaf_t, lsid_t
+        self.tile = tile
+
+    def emit_bound(self, nodes, cursors):
+        valid = nodes >= 0
+        n = jnp.where(valid, nodes, 0)
+        lo, hi = self.eptr_t.pairs(n)
+        ok = valid & (lo + cursors < hi)
+        win = self.escore_t.windows(lo)
+        cur = jnp.clip(cursors, 0, self.tile - 1)
+        score = row_take(win, cur[..., None])[..., 0]
+        return jnp.where(ok, score, _NEG_ONE)
+
+    def pop_emissions(self, nodes, cursors):
+        lo, _ = self.eptr_t.pairs(nodes)
+        cur = jnp.clip(cursors, 0, self.tile - 1)
+        node = row_take(self.enode_t.windows(lo), cur[..., None])[..., 0]
+        score = row_take(self.escore_t.windows(lo), cur[..., None])[..., 0]
+        leaf = row_take(self.eleaf_t.windows(lo), cur[..., None])[..., 0]
+        return node, score, leaf != 0
+
+    def lsid(self, nodes):
+        return self.lsid_t.gather(nodes)
+
+
+def _search(tabs, loci,
+            os_ref, oi_ref, oe_ref,
+            gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref, *,
+            gens: int, expand: int, k: int, max_steps: int):
+    """The generator-pool priority search, written once against the
+    accessor seam; ``tabs`` is resident or streamed."""
+    bq, f = loci.shape
+    W, P = gens, expand
 
     # pool seeded with the locus antichain (reference: dynamic_update_slice
     # of loci into a -1-filled (W,) pool; the probe guarantees F <= W)
@@ -109,7 +177,7 @@ def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
         [loci, jnp.full((bq, W - f), _NEG_ONE, jnp.int32)], axis=1) \
         if W > f else loci[:, :W]
     gc = jnp.zeros((bq, W), jnp.int32)
-    gb = emit_bound(gn, gc)
+    gb = tabs.emit_bound(gn, gc)
     gn_ref[...] = jnp.where(gb >= 0, gn, _NEG_ONE)
     gc_ref[...] = gc
     gb_ref[...] = gb
@@ -130,20 +198,16 @@ def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
         # pop the best P emissions across all generators
         topb, topi, _, _ = _topk_sorted(gb, P, ())
         sel_valid = topb >= 0
-        sel_n = jnp.where(sel_valid, _row_take(gn, topi), 0)
-        e = jnp.take(eptr, sel_n) + _row_take(gc, topi)
-        e = jnp.clip(e, 0, e_size - 1)
-        em_node = jnp.take(enode, e)
-        em_score = jnp.take(escore, e)
-        em_leaf = jnp.take(eleaf, e) != 0
+        sel_n = jnp.where(sel_valid, row_take(gn, topi), 0)
+        em_node, em_score, em_leaf = tabs.pop_emissions(
+            sel_n, row_take(gc, topi))
 
         # leaves -> result heap (k-round merge of heap + new leaves; heap
         # entries sit at lower indices, so ties keep the incumbent)
         leaf_ok = sel_valid & em_leaf
         new_ls = jnp.where(leaf_ok, em_score, _NEG_ONE)
         new_li = jnp.where(
-            leaf_ok, jnp.take(lsid, jnp.where(leaf_ok, em_node, 0)),
-            _NEG_ONE)
+            leaf_ok, tabs.lsid(jnp.where(leaf_ok, em_node, 0)), _NEG_ONE)
         ls2, _, (li2,), _ = _topk_sorted(
             jnp.concatenate([ls, new_ls], axis=1), k,
             (jnp.concatenate([li, new_li], axis=1),))
@@ -152,7 +216,7 @@ def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
         int_ok = sel_valid & ~em_leaf
         new_n = jnp.where(int_ok, em_node, _NEG_ONE)
         new_c = jnp.zeros((bq, P), jnp.int32)
-        new_b = emit_bound(new_n, new_c)
+        new_b = tabs.emit_bound(new_n, new_c)
         new_n = jnp.where(new_b >= 0, new_n, _NEG_ONE)
 
         # advance popped generators (one-hot scatter: topi rows are
@@ -160,7 +224,7 @@ def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
         hit = (topi[:, :, None] == iota_w[:, None, :]) \
             & sel_valid[:, :, None]
         gc2 = gc + hit.sum(axis=1).astype(jnp.int32)
-        gb2 = emit_bound(gn, gc2)
+        gb2 = tabs.emit_bound(gn, gc2)
         gn2 = jnp.where(gb2 >= 0, gn, _NEG_ONE)
 
         # merge pools, keep top-W by bound; the sorted residue holds the
@@ -197,37 +261,41 @@ def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
     oe_ref[...] = exact.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "gens", "expand", "k", "max_steps", "block_b", "interpret"))
-def beam_topk_batch(emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid,
-                    loci, *, gens: int, expand: int, k: int, max_steps: int,
-                    block_b: int = 8, interpret: bool = True):
-    """Fused beam phase 2 over a locus batch.
+def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
+            loci_ref,
+            os_ref, oi_ref, oe_ref,
+            gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref, **statics):
+    tabs = _ResidentEmit(eptr_ref[...], enode_ref[...], escore_ref[...],
+                         eleaf_ref[...], lsid_ref[...])
+    _search(tabs, loci_ref[...], os_ref, oi_ref, oe_ref,
+            gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref, **statics)
 
-    loci int32[B, F] (-1 padded locus antichains, B divisible by block_b;
-    the wrapper in ops.py pads — all-(-1) rows yield -1 results with
-    exact=1).  Tables are the DeviceTrie emission arrays (``emit_is_leaf``
-    as int32) and ``leaf_sid``; ``emit_node`` must be non-empty (the
-    degenerate empty dictionary short-circuits in ops.py, mirroring the
-    reference).  Returns (scores[B, k], sids[B, k], exact[B] int32 0/1) —
-    bit-identical to ``jax.vmap(engine.beam.beam_topk)`` on the jnp
-    substrate.
-    """
+
+def _kernel_streamed(eptr_hbm, enode_hbm, escore_hbm, eleaf_hbm, lsid_hbm,
+                     loci_ref,
+                     os_ref, oi_ref, oe_ref,
+                     gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref,
+                     pair_buf, row_buf, word_buf, sem_p, sem_r, sem_w, *,
+                     emit_tile: int, **statics):
+    tabs = _StreamedEmit(
+        StreamTable(eptr_hbm, pair_buf, sem_p, 2),
+        StreamTable(enode_hbm, row_buf, sem_r, emit_tile),
+        StreamTable(escore_hbm, row_buf, sem_r, emit_tile),
+        StreamTable(eleaf_hbm, row_buf, sem_r, emit_tile),
+        StreamTable(lsid_hbm, word_buf, sem_w, 1),
+        emit_tile)
+    _search(tabs, loci_ref[...], os_ref, oi_ref, oe_ref,
+            gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref, **statics)
+
+
+def _call(kernel, tables, table_specs, loci, scratch, *, k: int,
+          gens: int, block_b: int, interpret: bool):
     bsz, f = loci.shape
-    e_size = max(int(emit_node.shape[0]), 1)
     grid = (bsz // block_b,)
-
-    def full(a):
-        shape = tuple(int(s) for s in a.shape)
-        return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
-
-    kernel = functools.partial(_kernel, gens=gens, expand=expand, k=k,
-                               max_steps=max_steps, e_size=e_size)
-    tables = [emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid]
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[full(a) for a in tables] + [
+        in_specs=table_specs + [
             pl.BlockSpec((block_b, f), lambda i: (i, 0)),
         ],
         out_specs=[
@@ -247,6 +315,62 @@ def beam_topk_batch(emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid,
             pltpu.VMEM((block_b, k), jnp.int32),      # ls: result scores
             pltpu.VMEM((block_b, k), jnp.int32),      # li: result sids
             pltpu.VMEM((block_b,), jnp.int32),        # dropped_max tracker
-        ],
+        ] + scratch,
         interpret=interpret,
     )(*tables, loci)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gens", "expand", "k", "max_steps", "block_b", "interpret"))
+def beam_topk_batch(emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid,
+                    loci, *, gens: int, expand: int, k: int, max_steps: int,
+                    block_b: int = 8, interpret: bool = True):
+    """Fused beam phase 2 over a locus batch (VMEM-resident tables).
+
+    loci int32[B, F] (-1 padded locus antichains, B divisible by block_b;
+    the wrapper in ops.py pads — all-(-1) rows yield -1 results with
+    exact=1).  Tables are the DeviceTrie emission arrays (``emit_is_leaf``
+    as int32) and ``leaf_sid``; ``emit_node`` must be non-empty (the
+    degenerate empty dictionary short-circuits in ops.py, mirroring the
+    reference).  Returns (scores[B, k], sids[B, k], exact[B] int32 0/1) —
+    bit-identical to ``jax.vmap(engine.beam.beam_topk)`` on the jnp
+    substrate.
+    """
+    def full(a):
+        shape = tuple(int(s) for s in a.shape)
+        return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
+
+    kernel = functools.partial(_kernel, gens=gens, expand=expand, k=k,
+                               max_steps=max_steps)
+    tables = [emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid]
+    return _call(kernel, tables, [full(a) for a in tables], loci, [],
+                 k=k, gens=gens, block_b=block_b, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gens", "expand", "k", "max_steps", "emit_tile", "block_b", "interpret"))
+def beam_topk_batch_streamed(emit_ptr, emit_node, emit_score, emit_is_leaf,
+                             leaf_sid, loci, *, gens: int, expand: int,
+                             k: int, max_steps: int, emit_tile: int,
+                             block_b: int = 4, interpret: bool = True):
+    """HBM-resident variant of :func:`beam_topk_batch`: same contract,
+    same results, but the emission tables stay in HBM and every step's
+    pointer pairs / emission-row windows / sid gathers are
+    double-buffered windowed DMAs.  ``emit_tile`` is the static window
+    width from the tile-aligned layout (``EngineConfig.emit_tile``)."""
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
+    kernel = functools.partial(_kernel_streamed, gens=gens, expand=expand,
+                               k=k, max_steps=max_steps,
+                               emit_tile=emit_tile)
+    tables = [emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid]
+    lanes = block_b * gens
+    scratch = [
+        pltpu.VMEM((lanes, 2), jnp.int32),            # pointer-pair stage
+        pltpu.VMEM((lanes, emit_tile), jnp.int32),    # emission-row windows
+        pltpu.VMEM((lanes, 1), jnp.int32),            # sid gathers
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    return _call(kernel, tables, [hbm] * 5, loci, scratch,
+                 k=k, gens=gens, block_b=block_b, interpret=interpret)

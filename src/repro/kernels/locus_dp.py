@@ -5,9 +5,9 @@ p[:pos] under some rewriting — fused into one kernel per query block.
 The pure-jnp path (`engine/locus.py`) runs the same sweep as a vmap of a
 per-query `fori_loop` whose every inner step (CSR child lookup, teleport
 gather, link-store search, dedup-compaction) is a separate XLA op; this
-kernel keeps the whole (L+1, F) frontier buffer resident in VMEM scratch
-and executes the sweep as masked fixed-trip loops over the packed rule
-plane (`trie_build.pack_rule_planes`):
+kernel carries the whole (L+1, F) frontier buffer on-chip through one
+block-wide position loop and executes the sweep as masked fixed-trip
+loops over the packed rule plane (`trie_build.pack_rule_planes`):
 
 - literal char step: binary-searched CSR child lookup over the dict and
   synonym-branch edge sets;
@@ -28,9 +28,25 @@ the VPU executes the whole sweep without divergence.  Results (loci and
 overflow counts) are bit-identical to the jnp reference engine; the
 substrate parity suite enforces this in interpret mode on CPU.
 
-The CSR tables and the rule plane are VMEM-resident like the trie-walk
-kernel's; `PallasSubstrate.can_walk_batch` probes the static sizes and
-falls back to the jnp DP when a configuration outgrows the kernel.
+The sweep body is written once against a small table-accessor seam and
+runs in two tiers:
+
+- *resident* (``locus_dp_walk``): every table and the rule plane live
+  whole in VMEM, like the trie-walk kernel's CSRs;
+- *streamed* (``locus_dp_walk_streamed``): the dictionary-sized tables
+  (dict/synonym CSRs, ``syn_mask``/``tout``, teleport-plane rows and the
+  link store) stay in HBM and each access double-buffers pointer pairs /
+  row windows / plane rows into VMEM scratch via ``make_async_copy``
+  (:mod:`repro.kernels.stream`); only the rule trie — sized by the rule
+  set, thousands of entries, not the dictionary — stays VMEM-resident.
+  The tile-aligned layout (``trie_build.pack_stream_tiles``) guarantees
+  one window covers any CSR row, so the in-window searches probe exactly
+  what the resident forms probe: both tiers are bit-identical to the
+  reference DP.
+
+`PallasSubstrate.can_walk_batch` probes the static shape envelope and
+picks the tier by comparing table bytes against the VMEM budget; shapes
+outside the envelope fall back to the jnp DP.
 """
 
 from __future__ import annotations
@@ -42,6 +58,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.stream import (StreamTable, row_take, stream_csr_children,
+                                  window_lower_bound)
 
 # plain python ints: jnp scalars would be captured as constants by the
 # pallas kernel tracer
@@ -112,15 +131,6 @@ def _plane_rows(plane, nodes):
     return jnp.take(plane.reshape(-1), idx)
 
 
-def _tele_expand(tele_plane, row, width: int):
-    """Frontier row [BQ, F] -> row plus teleport targets, dedup'd back."""
-    bq, f = row.shape
-    valid = row >= 0
-    nn = jnp.where(valid, row, 0)
-    tgt = jnp.where(valid[:, :, None], _plane_rows(tele_plane, nn), _NEG_ONE)
-    return _dedup(jnp.concatenate([row, tgt.reshape(bq, -1)], axis=1), width)
-
-
 def _link_lookup(link_ptr, link_rule, link_target, anchors, rid):
     """(anchor, rule) -> target or -1.  anchors [BQ, F], rid [BQ]."""
     n_link = int(link_rule.shape[0])
@@ -134,94 +144,204 @@ def _link_lookup(link_ptr, link_rule, link_target, anchors, rid):
     return jnp.where(found, jnp.take(link_target, posc), _NEG_ONE)
 
 
-def _kernel(fc_ref, ec_ref, echild_ref,
-            sfc_ref, sec_ref, sechild_ref,
-            syn_mask_ref, tout_ref, tele_ref,
-            lptr_ref, lrule_ref, ltgt_ref,
-            rfc_ref, rec_ref, rechild_ref, rterm_ref,
-            q_ref, qlen_ref,
-            loci_ref, ov_ref,
-            buf_ref, *,
-            frontier: int, rule_matches: int, max_lhs_len: int,
-            max_terms: int, has_syn: bool, has_tele: bool, has_links: bool,
-            seq_len: int):
-    fc, ec, echild = fc_ref[...], ec_ref[...], echild_ref[...]
-    syn_mask, tout = syn_mask_ref[...], tout_ref[...]
-    q = q_ref[...]                                   # [BQ, L]
-    qlen = qlen_ref[...]
+# ---------------------------------------------------------------------------
+# table-accessor seam: the sweep body is tier-agnostic
+# ---------------------------------------------------------------------------
+
+
+class _ResidentTables:
+    """VMEM-resident table reads (the original fused kernel's forms)."""
+
+    def __init__(self, fc, ec, echild, sfc, sec, sechild, syn_mask, tout,
+                 tele_plane, lptr, lrule, ltgt):
+        self.fc, self.ec, self.echild = fc, ec, echild
+        self.sfc, self.sec, self.sechild = sfc, sec, sechild
+        self.syn_mask, self.tout_arr = syn_mask, tout
+        self.tele_plane = tele_plane
+        self.lptr, self.lrule, self.ltgt = lptr, lrule, ltgt
+
+    def dict_children(self, nodes, ch):
+        return _csr_children(self.fc, self.ec, self.echild, nodes, ch)
+
+    def syn_children(self, nodes, ch):
+        return _csr_children(self.sfc, self.sec, self.sechild, nodes, ch)
+
+    def tele_rows(self, nodes):
+        return _plane_rows(self.tele_plane, nodes)
+
+    def syn_mask_of(self, nodes):
+        return jnp.take(self.syn_mask, nodes)
+
+    def tout_of(self, nodes):
+        return jnp.take(self.tout_arr, nodes)
+
+    def link_lookup(self, anchors, rid):
+        return _link_lookup(self.lptr, self.lrule, self.ltgt, anchors, rid)
+
+
+class _StreamedTables:
+    """HBM-resident tables behind double-buffered windowed DMA.
+
+    Every lookup streams the pointer pairs / row windows / plane rows it
+    touches into the shared staging buffers and computes the same values
+    the resident forms compute — the window always covers the whole row,
+    so the in-window searches are bit-identical.
+    """
+
+    def __init__(self, fc_t, ec_t, ek_t, sfc_t, sec_t, sek_t, mask_t,
+                 tout_t, tele_t, lptr_t, lrule_t, ltgt_t,
+                 walk_iters: int, link_iters: int):
+        self.fc_t, self.ec_t, self.ek_t = fc_t, ec_t, ek_t
+        self.sfc_t, self.sec_t, self.sek_t = sfc_t, sec_t, sek_t
+        self.mask_t, self.tout_t, self.tele_t = mask_t, tout_t, tele_t
+        self.lptr_t, self.lrule_t, self.ltgt_t = lptr_t, lrule_t, ltgt_t
+        self.walk_iters, self.link_iters = walk_iters, link_iters
+
+    def dict_children(self, nodes, ch):
+        return stream_csr_children(self.fc_t, self.ec_t, self.ek_t,
+                                   nodes, ch, self.walk_iters)
+
+    def syn_children(self, nodes, ch):
+        return stream_csr_children(self.sfc_t, self.sec_t, self.sek_t,
+                                   nodes, ch, self.walk_iters)
+
+    def tele_rows(self, nodes):
+        return self.tele_t.windows(nodes)
+
+    def syn_mask_of(self, nodes):
+        return self.mask_t.gather(nodes)
+
+    def tout_of(self, nodes):
+        return self.tout_t.gather(nodes)
+
+    def link_lookup(self, anchors, rid):
+        valid = anchors >= 0
+        ridb = jnp.broadcast_to(rid[:, None], anchors.shape)
+        a = jnp.where(valid, anchors, 0)
+        lo, hi = self.lptr_t.pairs(a)
+        span = hi - lo
+        wr = self.lrule_t.windows(lo)
+        w = int(wr.shape[-1])
+        pos = window_lower_bound(wr, span, ridb, self.link_iters)
+        posc = jnp.clip(pos, 0, w - 1)
+        found = (pos < span) & \
+            (row_take(wr, posc[..., None])[..., 0] == ridb) & valid
+        tgt = row_take(self.ltgt_t.windows(lo), posc[..., None])[..., 0]
+        return jnp.where(found, tgt, _NEG_ONE)
+
+
+def _tele_expand(tabs, row, width: int):
+    """Frontier row [BQ, F] -> row plus teleport targets, dedup'd back."""
+    bq, f = row.shape
+    valid = row >= 0
+    nn = jnp.where(valid, row, 0)
+    tgt = jnp.where(valid[:, :, None], tabs.tele_rows(nn), _NEG_ONE)
+    return _dedup(jnp.concatenate([row, tgt.reshape(bq, -1)], axis=1), width)
+
+
+def _sweep(tabs, rfc, rec, rechild, rterm, q, qlen,
+           loci_ref, ov_ref, *,
+           frontier: int, rule_matches: int, max_lhs_len: int,
+           max_terms: int, has_syn: bool, has_tele: bool, has_links: bool,
+           seq_len: int):
+    """The fused frontier sweep, written once against the accessor seam;
+    ``tabs`` is resident or streamed, the rule trie (rfc/rec/rechild/
+    rterm) is always VMEM-resident.
+
+    The position loop is a ``fori_loop`` with the (BQ, L+1, F) frontier
+    buffer as carried state (XLA keeps it on-chip), so the traced step
+    body — and with it every DMA pipeline of the streamed tier — appears
+    once instead of L times; inside the step the rule-trie descent and
+    term fan-out stay unrolled over their static widths with masked
+    out-of-range lanes, exactly the reference DP's shape.
+    """
     bq = q.shape[0]
     F, L, M = frontier, seq_len, rule_matches
 
-    # frontier buffer: reach[pos] for every position, resident in scratch
-    buf_ref[...] = jnp.full(
-        (bq, L + 1, F), _NEG_ONE, jnp.int32).at[:, 0, 0].set(0)
-    overflow = jnp.zeros((bq,), jnp.int32)
+    buf0 = jnp.full((bq, L + 1, F), _NEG_ONE, jnp.int32).at[:, 0, 0].set(0)
+    # query extended with -1s so the rule descent can probe past the end
+    # of short suffixes (a -1 char kills the walk, like the reference's)
+    qx = jnp.concatenate(
+        [q, jnp.full((bq, max(max_lhs_len, 1)), _NEG_ONE, jnp.int32)],
+        axis=1)
 
-    for i in range(L):
-        row = buf_ref[:, i, :]
+    def at_col(mat, i):
+        return jax.lax.dynamic_slice(mat, (0, i), (bq, 1))[:, 0]
+
+    def buf_row(buf, i):
+        return jax.lax.dynamic_slice(buf, (0, i, 0), (bq, 1, F))[:, 0, :]
+
+    def buf_put(buf, i, row):
+        return jax.lax.dynamic_update_slice(buf, row[:, None, :], (0, i, 0))
+
+    def step(i, carry):
+        buf, overflow = carry
+        row = buf_row(buf, i)
         if has_tele:
-            row, drop = _tele_expand(tele_ref[...], row, F)
+            row, drop = _tele_expand(tabs, row, F)
             overflow += drop
-        c = q[:, i]
+        c = at_col(q, i)
 
         # literal char step: dict children + synonym-branch children
-        parts = [_csr_children(fc, ec, echild, row, c[:, None])]
+        parts = [tabs.dict_children(row, c[:, None])]
         if has_syn:
-            parts.append(_csr_children(sfc_ref[...], sec_ref[...],
-                                       sechild_ref[...], row, c[:, None]))
+            parts.append(tabs.syn_children(row, c[:, None]))
         merged, drop = _dedup(
-            jnp.concatenate([buf_ref[:, i + 1, :]] + parts, axis=1), F)
+            jnp.concatenate([buf_row(buf, i + 1)] + parts, axis=1), F)
         overflow += drop
-        buf_ref[:, i + 1, :] = merged
+        buf = buf_put(buf, i + 1, merged)
 
         # rule steps: inline rule-trie descent from position i; a full-lhs
-        # match at depth j lands at the static frontier row i + j + 1
+        # match at depth j lands at the frontier row i + j + 1 (descents
+        # running past the query end read the -1 extension and die)
         if M > 0:
             amask = (row >= 0) & \
-                (jnp.take(syn_mask, jnp.where(row >= 0, row, 0)) == 0)
+                (tabs.syn_mask_of(jnp.where(row >= 0, row, 0)) == 0)
             anchors = jnp.where(amask, row, _NEG_ONE)
             node = jnp.zeros((bq,), jnp.int32)       # rule-trie root
             cnt = jnp.zeros((bq,), jnp.int32)
-            for j in range(min(max_lhs_len, L - i)):
-                node = _csr_children(rfc_ref[...], rec_ref[...],
-                                     rechild_ref[...], node, q[:, i + j])
+            for j in range(max_lhs_len):
+                node = _csr_children(rfc, rec, rechild, node,
+                                     at_col(qx, i + j))
                 ok = node >= 0
-                terms = _plane_rows(rterm_ref[...],
+                terms = _plane_rows(rterm,
                                     jnp.where(ok, node, 0))  # [BQ, Tw]
-                end = i + j + 1
+                end = jnp.clip(i + j + 1, 0, L)
                 for j2 in range(max_terms):
                     rid = terms[:, j2]
                     has = ok & (rid >= 0) & (cnt < M)
                     cnt = jnp.where(has, cnt + 1, cnt)
                     if has_links:
-                        tgt = _link_lookup(lptr_ref[...], lrule_ref[...],
-                                           ltgt_ref[...], anchors, rid)
+                        tgt = tabs.link_lookup(anchors, rid)
                         tgt = jnp.where(has[:, None], tgt, _NEG_ONE)
                     else:
                         tgt = jnp.full((bq, F), _NEG_ONE, jnp.int32)
-                    dst = buf_ref[:, end, :]
+                    dst = buf_row(buf, end)
                     merged, drop = _dedup(
                         jnp.concatenate([dst, tgt], axis=1), F)
                     any_tgt = (tgt >= 0).any(axis=1)
                     merged = jnp.where(any_tgt[:, None], merged, dst)
                     overflow += jnp.where(any_tgt, drop, 0)
-                    buf_ref[:, end, :] = merged
+                    buf = buf_put(buf, end, merged)
+        return buf, overflow
+
+    buf, overflow = jax.lax.fori_loop(
+        0, L, step, (buf0, jnp.zeros((bq,), jnp.int32)))
 
     # final frontier: the row at each query's own length
-    buf = buf_ref[...]
     sel = jnp.broadcast_to(jnp.clip(qlen, 0, L)[:, None, None], (bq, 1, F))
     row = jnp.take_along_axis(buf, sel, axis=1)[:, 0, :]
     if has_tele:
-        row, drop = _tele_expand(tele_ref[...], row, F)
+        row, drop = _tele_expand(tabs, row, F)
         overflow += drop
 
     # finalize: strict semantics drop mid-variant (synonym) loci, then
     # antichain reduction over preorder intervals [id, tout)
-    is_syn = jnp.take(syn_mask, jnp.where(row >= 0, row, 0))
+    is_syn = tabs.syn_mask_of(jnp.where(row >= 0, row, 0))
     row = jnp.where((row >= 0) & (is_syn == 0), row, _NEG_ONE)
     row, _ = _dedup(row, F)
     tin = jnp.where(row >= 0, row, _NEG_ONE)
-    to = jnp.take(tout, jnp.where(row >= 0, row, 0))
+    to = tabs.tout_of(jnp.where(row >= 0, row, 0))
     tin_i, tin_j = tin[:, :, None], tin[:, None, :]
     ii = jax.lax.broadcasted_iota(jnp.int32, (bq, F, F), 1)
     jj = jax.lax.broadcasted_iota(jnp.int32, (bq, F, F), 2)
@@ -229,6 +349,77 @@ def _kernel(fc_ref, ec_ref, echild_ref,
                & (tin_j >= 0) & (tin_i >= 0)).any(axis=2)
     loci_ref[...] = jnp.where(covered, _NEG_ONE, row)
     ov_ref[...] = overflow
+
+
+def _kernel(fc_ref, ec_ref, echild_ref,
+            sfc_ref, sec_ref, sechild_ref,
+            syn_mask_ref, tout_ref, tele_ref,
+            lptr_ref, lrule_ref, ltgt_ref,
+            rfc_ref, rec_ref, rechild_ref, rterm_ref,
+            q_ref, qlen_ref,
+            loci_ref, ov_ref, **statics):
+    tabs = _ResidentTables(
+        fc_ref[...], ec_ref[...], echild_ref[...],
+        sfc_ref[...], sec_ref[...], sechild_ref[...],
+        syn_mask_ref[...], tout_ref[...], tele_ref[...],
+        lptr_ref[...], lrule_ref[...], ltgt_ref[...])
+    _sweep(tabs, rfc_ref[...], rec_ref[...], rechild_ref[...], rterm_ref[...],
+           q_ref[...], qlen_ref[...], loci_ref, ov_ref, **statics)
+
+
+def _kernel_streamed(fc_hbm, ec_hbm, echild_hbm,
+                     sfc_hbm, sec_hbm, sechild_hbm,
+                     syn_mask_hbm, tout_hbm, tele_hbm,
+                     lptr_hbm, lrule_hbm, ltgt_hbm,
+                     rfc_ref, rec_ref, rechild_ref, rterm_ref,
+                     q_ref, qlen_ref,
+                     loci_ref, ov_ref,
+                     pair_buf, word_buf, w1_buf, w2_buf, tele_buf,
+                     sem_p, sem_w, sem_1, sem_2, sem_t, *,
+                     walk_tile: int, link_tile: int, **statics):
+    walk_iters = max(1, walk_tile.bit_length())
+    link_iters = max(1, link_tile.bit_length())
+    tw = int(tele_buf.shape[-1])
+    tabs = _StreamedTables(
+        StreamTable(fc_hbm, pair_buf, sem_p, 2),
+        StreamTable(ec_hbm, w1_buf, sem_1, walk_tile),
+        StreamTable(echild_hbm, w2_buf, sem_2, walk_tile),
+        StreamTable(sfc_hbm, pair_buf, sem_p, 2),
+        StreamTable(sec_hbm, w1_buf, sem_1, walk_tile),
+        StreamTable(sechild_hbm, w2_buf, sem_2, walk_tile),
+        StreamTable(syn_mask_hbm, word_buf, sem_w, 1),
+        StreamTable(tout_hbm, word_buf, sem_w, 1),
+        StreamTable(tele_hbm, tele_buf, sem_t, tw),
+        StreamTable(lptr_hbm, pair_buf, sem_p, 2),
+        StreamTable(lrule_hbm, w1_buf, sem_1, link_tile),
+        StreamTable(ltgt_hbm, w2_buf, sem_2, link_tile),
+        walk_iters, link_iters)
+    _sweep(tabs, rfc_ref[...], rec_ref[...], rechild_ref[...], rterm_ref[...],
+           q_ref[...], qlen_ref[...], loci_ref, ov_ref, **statics)
+
+
+def _call(kernel, tables, table_specs, queries, qlens, scratch, *,
+          frontier: int, block_q: int, interpret: bool):
+    bsz, seq_len = queries.shape
+    grid = (bsz // block_q,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=table_specs + [
+            pl.BlockSpec((block_q, seq_len), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, frontier), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, frontier), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*tables, queries, qlens)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -243,7 +434,7 @@ def locus_dp_walk(first_child, edge_char, edge_child,
                   frontier: int, rule_matches: int, max_lhs_len: int,
                   max_terms: int, has_syn: bool, has_tele: bool,
                   has_links: bool, block_q: int = 8, interpret: bool = True):
-    """Fused locus DP over a query batch.
+    """Fused locus DP over a query batch (VMEM-resident tables).
 
     queries int32[B, L] (-1 padded, B divisible by block_q; the wrapper in
     ops.py pads), qlens int32[B].  Tables are the DeviceTrie arrays with
@@ -251,40 +442,75 @@ def locus_dp_walk(first_child, edge_char, edge_child,
     Returns (loci[B, F] finalized antichains, overflow[B]) — bit-identical
     to ``jax.vmap(engine.locus.locus_dp)`` on the jnp substrate.
     """
-    bsz, seq_len = queries.shape
-    F = frontier
-    grid = (bsz // block_q,)
-
     def full(a):
         shape = tuple(int(s) for s in a.shape)
         return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
 
     kernel = functools.partial(
-        _kernel, frontier=F, rule_matches=rule_matches,
+        _kernel, frontier=frontier, rule_matches=rule_matches,
         max_lhs_len=max_lhs_len, max_terms=max_terms, has_syn=has_syn,
-        has_tele=has_tele, has_links=has_links, seq_len=seq_len)
+        has_tele=has_tele, has_links=has_links,
+        seq_len=int(queries.shape[1]))
     tables = [first_child, edge_char, edge_child,
               s_first_child, s_edge_char, s_edge_child,
               syn_mask, tout, tele_plane,
               link_ptr, link_rule, link_target,
               r_first_child, r_edge_char, r_edge_child, r_term_plane]
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[full(a) for a in tables] + [
-            pl.BlockSpec((block_q, seq_len), lambda i: (i, 0)),
-            pl.BlockSpec((block_q,), lambda i: (i,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_q, F), lambda i: (i, 0)),
-            pl.BlockSpec((block_q,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz, F), jnp.int32),
-            jax.ShapeDtypeStruct((bsz,), jnp.int32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, seq_len + 1, F), jnp.int32),
-        ],
-        interpret=interpret,
-    )(*tables, queries, qlens)
+    return _call(kernel, tables, [full(a) for a in tables], queries, qlens,
+                 [], frontier=frontier, block_q=block_q, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "frontier", "rule_matches", "max_lhs_len", "max_terms", "has_syn",
+    "has_tele", "has_links", "walk_tile", "link_tile", "block_q",
+    "interpret"))
+def locus_dp_walk_streamed(first_child, edge_char, edge_child,
+                           s_first_child, s_edge_char, s_edge_child,
+                           syn_mask, tout, tele_plane,
+                           link_ptr, link_rule, link_target,
+                           r_first_child, r_edge_char, r_edge_child,
+                           r_term_plane,
+                           queries, qlens, *,
+                           frontier: int, rule_matches: int,
+                           max_lhs_len: int, max_terms: int, has_syn: bool,
+                           has_tele: bool, has_links: bool, walk_tile: int,
+                           link_tile: int, block_q: int = 4,
+                           interpret: bool = True):
+    """HBM-resident variant of :func:`locus_dp_walk`: same contract, same
+    results, but the dictionary-sized tables stay in HBM and every access
+    is a double-buffered windowed DMA.  ``walk_tile``/``link_tile`` are
+    the static window widths from the tile-aligned layout
+    (``EngineConfig``); the rule trie stays VMEM-resident (it is sized by
+    the rule set, not the dictionary)."""
+    def full(a):
+        shape = tuple(int(s) for s in a.shape)
+        return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
+
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
+    kernel = functools.partial(
+        _kernel_streamed, frontier=frontier, rule_matches=rule_matches,
+        max_lhs_len=max_lhs_len, max_terms=max_terms, has_syn=has_syn,
+        has_tele=has_tele, has_links=has_links, walk_tile=walk_tile,
+        link_tile=link_tile, seq_len=int(queries.shape[1]))
+    tables = [first_child, edge_char, edge_child,
+              s_first_child, s_edge_char, s_edge_child,
+              syn_mask, tout, tele_plane,
+              link_ptr, link_rule, link_target,
+              r_first_child, r_edge_char, r_edge_child, r_term_plane]
+    specs = [hbm] * 12 + [full(a) for a in tables[12:]]
+    lanes = block_q * frontier
+    wmax = max(walk_tile, link_tile)
+    scratch = [
+        pltpu.VMEM((lanes, 2), jnp.int32),            # pointer-pair stage
+        pltpu.VMEM((lanes, 1), jnp.int32),            # scalar gathers
+        pltpu.VMEM((lanes, wmax), jnp.int32),         # char/rule windows
+        pltpu.VMEM((lanes, wmax), jnp.int32),         # child/target windows
+        pltpu.VMEM((lanes, int(tele_plane.shape[1])), jnp.int32),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    return _call(kernel, tables, specs, queries, qlens, scratch,
+                 frontier=frontier, block_q=block_q, interpret=interpret)

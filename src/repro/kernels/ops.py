@@ -59,12 +59,33 @@ def _pad_query_batch(queries, qlens, mult):
 
 
 def trie_walk(first_child, edge_char, edge_child, queries, qlens,
-              block_q: int = 128):
-    """Batched longest-prefix walk; see kernels/trie_walk.py."""
+              block_q: int = 128, streamed: bool = False,
+              walk_tile: int | None = None):
+    """Batched longest-prefix walk; see kernels/trie_walk.py.
+
+    ``streamed=True`` runs the HBM-resident DMA-streamed variant (same
+    results; it uses a smaller default block — each query row streams
+    its own windows) and then requires ``walk_tile``, the tile-aligned
+    layout's static window width (``EngineConfig.walk_tile``) — a
+    narrower window would silently truncate long CSR rows, so there is
+    no default.
+    """
+    if streamed:
+        if walk_tile is None:
+            raise ValueError(
+                "streamed trie_walk requires walk_tile (the layout's "
+                "static window width, EngineConfig.walk_tile)")
+        block_q = min(8, block_q)
     block_q = min(block_q, max(int(queries.shape[0]), 1))
     q, ql, b = _pad_query_batch(queries, qlens, block_q)
-    node, depth = _trie_walk(first_child, edge_char, edge_child, q, ql,
-                             block_q=block_q, interpret=_interpret())
+    if streamed and int(edge_char.shape[0]) > 0:
+        from repro.kernels.trie_walk import trie_walk_streamed
+        node, depth = trie_walk_streamed(
+            first_child, edge_char, edge_child, q, ql, tile=walk_tile,
+            block_q=block_q, interpret=_interpret())
+    else:
+        node, depth = _trie_walk(first_child, edge_char, edge_child, q, ql,
+                                 block_q=block_q, interpret=_interpret())
     return node[:b], depth[:b]
 
 
@@ -76,36 +97,49 @@ def _nonempty(a, fill=-1):
     return jnp.full((1,) + tuple(a.shape[1:]), fill, a.dtype)
 
 
-def locus_walk(t, cfg, queries, qlens, block_q: int = 8):
+def locus_walk(t, cfg, queries, qlens, block_q: int = 8,
+               streamed: bool = False):
     """Fused synonym-aware locus DP; see kernels/locus_dp.py.
 
     t: engine DeviceTrie (duck-typed — only the array fields are read);
     cfg: EngineConfig.  queries int32[B, L] (-1 padded), qlens int32[B].
     Returns (loci[B, F], overflow[B]) matching the jnp reference DP
-    bit-for-bit.
+    bit-for-bit.  ``streamed=True`` keeps the dictionary-sized tables in
+    HBM and streams windows per access (same results, smaller block).
     """
     from repro.kernels.locus_dp import locus_dp_walk as _locus_dp
+    from repro.kernels.locus_dp import \
+        locus_dp_walk_streamed as _locus_dp_streamed
 
+    if streamed:
+        block_q = min(4, block_q)
     block_q = min(block_q, max(int(queries.shape[0]), 1))
     q, ql, b = _pad_query_batch(queries, qlens, block_q)
-    loci, overflow = _locus_dp(
+    tables = (
         t.first_child, t.edge_char, t.edge_child,
         t.s_first_child, _nonempty(t.s_edge_char), _nonempty(t.s_edge_child),
         t.syn_mask.astype(jnp.int32), t.tout, t.tele_plane,
         t.link_ptr, _nonempty(t.link_rule), _nonempty(t.link_target),
         t.r_first_child, _nonempty(t.r_edge_char), _nonempty(t.r_edge_child),
-        t.r_term_plane,
-        q, ql,
+        t.r_term_plane)
+    statics = dict(
         frontier=cfg.frontier, rule_matches=cfg.rule_matches,
         max_lhs_len=cfg.max_lhs_len, max_terms=cfg.max_terms_per_node,
         has_syn=int(t.s_edge_char.shape[0]) > 0,
         has_tele=cfg.teleports > 0,
         has_links=int(t.link_rule.shape[0]) > 0,
         block_q=block_q, interpret=_interpret())
+    if streamed:
+        loci, overflow = _locus_dp_streamed(
+            *tables, q, ql, walk_tile=cfg.walk_tile,
+            link_tile=cfg.link_tile, **statics)
+    else:
+        loci, overflow = _locus_dp(*tables, q, ql, **statics)
     return loci[:b], overflow[:b]
 
 
-def beam_topk(t, cfg, loci, k: int, block_b: int = 8):
+def beam_topk(t, cfg, loci, k: int, block_b: int = 8,
+              streamed: bool = False):
     """Fused beam phase 2; see kernels/beam_topk.py.
 
     t: engine DeviceTrie (duck-typed — only the emission arrays and
@@ -113,9 +147,13 @@ def beam_topk(t, cfg, loci, k: int, block_b: int = 8):
     ``max_steps`` become the kernel's static trip counts).
     loci int32[B, F] (-1 padded locus antichains).
     Returns (scores[B, k], sids[B, k], exact[B] bool) matching
-    ``jax.vmap(engine.beam.beam_topk)`` bit-for-bit.
+    ``jax.vmap(engine.beam.beam_topk)`` bit-for-bit.  ``streamed=True``
+    keeps the emission tables in HBM and streams row windows per step
+    (same results, smaller block).
     """
     from repro.kernels.beam_topk import beam_topk_batch as _beam_topk
+    from repro.kernels.beam_topk import \
+        beam_topk_batch_streamed as _beam_topk_streamed
 
     B = int(loci.shape[0])
     if int(t.emit_node.shape[0]) == 0:
@@ -123,14 +161,23 @@ def beam_topk(t, cfg, loci, k: int, block_b: int = 8):
         return (jnp.full((B, k), -1, jnp.int32),
                 jnp.full((B, k), -1, jnp.int32),
                 jnp.ones((B,), bool))
+    if streamed:
+        block_b = min(4, block_b)
     block_b = min(block_b, max(B, 1))
     # padded rows are all -1 loci => dead pool, -1 results, exact; sliced off
     l, b = _pad_rows(loci, block_b, -1)
-    s, i, e = _beam_topk(
-        t.emit_ptr, t.emit_node, t.emit_score,
-        t.emit_is_leaf.astype(jnp.int32), t.leaf_sid, l,
-        gens=cfg.gens, expand=cfg.expand, k=k, max_steps=cfg.max_steps,
-        block_b=block_b, interpret=_interpret())
+    tables = (t.emit_ptr, t.emit_node, t.emit_score,
+              t.emit_is_leaf.astype(jnp.int32), t.leaf_sid)
+    if streamed:
+        s, i, e = _beam_topk_streamed(
+            *tables, l, gens=cfg.gens, expand=cfg.expand, k=k,
+            max_steps=cfg.max_steps, emit_tile=cfg.emit_tile,
+            block_b=block_b, interpret=_interpret())
+    else:
+        s, i, e = _beam_topk(
+            *tables, l, gens=cfg.gens, expand=cfg.expand, k=k,
+            max_steps=cfg.max_steps, block_b=block_b,
+            interpret=_interpret())
     return s[:b], i[:b], e[:b].astype(bool)
 
 

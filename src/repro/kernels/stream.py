@@ -1,0 +1,183 @@
+"""HBM -> VMEM DMA streaming helpers for the streamed kernel tier.
+
+The resident Pallas kernels (`trie_walk`, `locus_dp`, `beam_topk`) hold
+every table whole in VMEM, which caps per-shard sub-trie size well below
+the paper's million-string scale.  The streamed variants keep the tables
+in HBM (``memory_space=pltpu.ANY``) and move only what each step touches
+into VMEM scratch with double-buffered :func:`pltpu.make_async_copy`:
+
+- :func:`pipelined_dma` — the 2-deep pipeline driver: stage ``j + 1``'s
+  copies are started (on the other semaphore slot) before stage ``j`` is
+  waited on, so the next transfer is in flight while the current one is
+  consumed;
+- :class:`StreamTable` — one HBM-resident flat table plus its staging
+  buffer; ``windows(starts)`` DMAs the fixed-width slices
+  ``[start, start + width)`` for a whole index batch through the
+  pipeline and returns them as one VMEM value.
+
+Window legality (every slice in bounds, one window covering a whole CSR
+row) is a property of the tile-aligned table layout the builder emits
+(``trie_build.pack_stream_tiles``); the static tile widths ride
+``EngineConfig``.  On CPU the interpreter emulates the DMAs as copies —
+that is the correctness story CI gates on; the overlap only pays off on
+real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def pipelined_dma(n: int, make_dmas) -> None:
+    """Run ``n`` DMA stages through a 2-deep double-buffered pipeline.
+
+    ``make_dmas(j, slot)`` returns the list of async copies for stage
+    ``j`` parked on semaphore slot ``slot`` (0/1).  Stage ``j + 1`` is
+    started on the opposite slot before stage ``j`` is waited on, so at
+    any moment one stage is landing while the next is in flight.  Stages
+    must write disjoint destinations (each stage owns its staging rows);
+    the descriptor is recreated for the wait, which is the documented
+    start/wait pattern.  ``n`` must be static.
+    """
+    if n <= 0:
+        return
+
+    def start(j, slot):
+        for dma in make_dmas(j, slot):
+            dma.start()
+
+    def body(j, _):
+        @pl.when(j + 1 < n)
+        def _():
+            start(j + 1, (j + 1) % 2)
+
+        for dma in make_dmas(j, j % 2):
+            dma.wait()
+        return 0
+
+    start(0, 0)
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+class StreamTable:
+    """One HBM-resident table behind windowed double-buffered DMA.
+
+    hbm_ref: the ``memory_space=ANY`` kernel ref of a flat (1-D) or
+    row-plane (2-D) table.  buf_ref: VMEM staging scratch with one row
+    per pipeline stage — ``[n_stages, width]``; a wider shared buffer may
+    be passed, only the leading ``width`` columns of each row are used.
+    sem_ref: a ``pltpu.SemaphoreType.DMA((2,))`` slot pair owned by this
+    table.  width: the static window width — for CSR tables the stream
+    tile from the tile-aligned layout, for row planes the row length.
+    """
+
+    def __init__(self, hbm_ref, buf_ref, sem_ref, width: int):
+        self.hbm = hbm_ref
+        self.buf = buf_ref
+        self.sem = sem_ref
+        self.width = int(width)
+
+    def _dma(self, j, slot, start):
+        if len(self.hbm.shape) == 2:              # row plane: whole row
+            src = self.hbm.at[start]
+        else:
+            src = self.hbm.at[pl.ds(start, self.width)]
+        return pltpu.make_async_copy(
+            src, self.buf.at[j, pl.ds(0, self.width)], self.sem.at[slot])
+
+    def windows(self, starts):
+        """Stream the windows ``[starts[i], starts[i] + width)`` (or the
+        plane rows ``starts[i]``) into VMEM; returns their values with
+        shape ``starts.shape + (width,)``.  Starts must be in bounds —
+        callers mask invalid lanes to a safe row (0), exactly as the
+        resident gathers do."""
+        flat = starts.reshape(-1)
+        n = int(flat.shape[0])
+
+        def make(j, slot):
+            start = jax.lax.dynamic_index_in_dim(flat, j, keepdims=False)
+            return [self._dma(j, slot, start)]
+
+        pipelined_dma(n, make)
+        vals = self.buf[...][:n, : self.width]
+        return vals.reshape(tuple(starts.shape) + (self.width,))
+
+    def gather(self, idx):
+        """Element gather ``table[idx]`` via width-1 windows (the 2-D
+        row-plane form returns whole rows; use ``windows`` for that)."""
+        return self.windows(idx)[..., 0]
+
+    def pairs(self, idx):
+        """CSR pointer pairs ``(table[idx], table[idx + 1])`` via one
+        width-2 window per lane — the (lo, hi) row bounds of a CSR
+        lookup."""
+        out = self.windows(idx)
+        return out[..., 0], out[..., 1]
+
+
+# ---------------------------------------------------------------------------
+# in-window vector helpers (shared by the streamed kernel bodies)
+# ---------------------------------------------------------------------------
+
+
+def row_take(mat, idx):
+    """mat [..., C], idx [..., X] row-local columns -> mat[lane, idx[lane]]
+    (a per-lane gather; lane = every leading axis of ``mat``)."""
+    c = int(mat.shape[-1])
+    flat_m = mat.reshape((-1, c))
+    flat_i = idx.reshape((flat_m.shape[0], -1))
+    r = jax.lax.broadcasted_iota(jnp.int32, flat_i.shape, 0)
+    out = jnp.take(flat_m.reshape(-1), r * c + flat_i)
+    return out.reshape(idx.shape)
+
+
+def stream_csr_children(ptr_tab: StreamTable, char_tab: StreamTable,
+                        child_tab: StreamTable, nodes, ch, iters: int):
+    """Streamed CSR child lookup: ``children[nodes]`` labelled ``ch``
+    (-1 propagated/absent), with the row bounds and row content DMA'd
+    from HBM instead of read from VMEM-resident tables.
+
+    ``ptr_tab`` streams the (lo, hi) pointer pairs, ``char_tab`` /
+    ``child_tab`` the ``[lo, lo + tile)`` row windows — the tile-aligned
+    layout guarantees one window covers the whole row, so the in-window
+    lower bound probes exactly the content a global binary search over
+    ``[lo, hi)`` would, making the result bit-identical to
+    ``primitives.csr_child_lookup`` and the resident kernels' forms.
+    ``ch`` broadcasts against ``nodes``.
+    """
+    valid = nodes >= 0
+    chb = jnp.broadcast_to(ch, nodes.shape)
+    nn = jnp.where(valid, nodes, 0)
+    lo, hi = ptr_tab.pairs(nn)
+    span = hi - lo
+    wc = char_tab.windows(lo)
+    wk = child_tab.windows(lo)
+    w = int(wc.shape[-1])
+    pos = window_lower_bound(wc, span, chb, iters)
+    posc = jnp.clip(pos, 0, w - 1)
+    found = (pos < span) & \
+        (row_take(wc, posc[..., None])[..., 0] == chb) & valid & (chb >= 0)
+    child = row_take(wk, posc[..., None])[..., 0]
+    return jnp.where(found, child, -1)
+
+
+def window_lower_bound(win, count, x, iters: int):
+    """Row-local lower bound: first column ``p`` in ``[0, count)`` with
+    ``win[..., p] >= x`` (fixed ``iters`` trips).  ``win`` [..., W] holds
+    a sorted CSR row per lane; ``count``/``x`` broadcast against the lane
+    shape.  Identical to a global lower bound over ``[lo, lo + count)``
+    of the backing table — the probed content is the same row."""
+    w = int(win.shape[-1])
+    lo = jnp.zeros_like(count)
+    hi = count
+    for _ in range(iters):
+        cont = lo < hi
+        mid = (lo + hi) >> 1
+        v = row_take(win, jnp.clip(mid, 0, w - 1)[..., None])[..., 0]
+        go_right = v < x
+        lo = jnp.where(cont & go_right, mid + 1, lo)
+        hi = jnp.where(cont & ~go_right, mid, hi)
+    return lo

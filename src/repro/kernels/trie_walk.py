@@ -10,9 +10,23 @@ no data-dependent control flow).
 
 TPU adaptation notes: on a CPU/GPU this is pointer chasing; here it is a
 fixed-depth loop of vector gathers (dynamic VMEM loads), which the VPU
-executes without divergence. HBM-resident tables would instead stream CSR
-rows via double-buffered DMA; we keep the VMEM variant since per-shard
-tries are sized to fit (sharding handles growth).
+executes without divergence.
+
+Two tiers share the walk semantics:
+
+- the *resident* kernel (``trie_walk``) holds the CSR tables whole in
+  VMEM — fastest when the per-shard sub-trie fits the budget;
+- the *streamed* kernel (``trie_walk_streamed``) keeps the tables in HBM
+  and, per step, double-buffers each query's pointer pair and child-row
+  window into VMEM scratch via ``make_async_copy``
+  (:mod:`repro.kernels.stream`), so shard size is no longer VMEM-bound.
+  The tile-aligned layout (``trie_build.pack_stream_tiles``) guarantees
+  one window covers any node's whole child row, which makes the
+  in-window binary search probe exactly what the resident kernel's
+  global search probes — results are bit-identical.
+
+``PallasSubstrate.can_walk_batch`` picks the tier by comparing the table
+bytes against the configured VMEM budget.
 """
 
 from __future__ import annotations
@@ -22,6 +36,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.stream import StreamTable, stream_csr_children
 
 
 def _kernel(fc_ref, ec_ref, echild_ref, q_ref, qlen_ref, node_ref, depth_ref,
@@ -93,6 +110,78 @@ def trie_walk(first_child, edge_char, edge_child, queries, qlens,
         out_shape=[
             jax.ShapeDtypeStruct((bsz,), jnp.int32),
             jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(first_child, edge_char, edge_child, queries, qlens)
+
+
+def _stream_kernel(fc_hbm, ec_hbm, echild_hbm, q_ref, qlen_ref,
+                   node_ref, depth_ref,
+                   pair_buf, wc_buf, wk_buf, sem_p, sem_c, sem_k, *,
+                   tile: int, iters: int, seq_len: int):
+    q = q_ref[...]
+    qlen = qlen_ref[...]
+    bq = q.shape[0]
+    fc_t = StreamTable(fc_hbm, pair_buf, sem_p, 2)
+    ec_t = StreamTable(ec_hbm, wc_buf, sem_c, tile)
+    ek_t = StreamTable(echild_hbm, wk_buf, sem_k, tile)
+
+    def step(i, carry):
+        node, matched = carry
+        c = q[:, i]
+        # nodes are always live (the walk starts at the root and only
+        # ever descends), so the child lookup needs no -1 masking; the
+        # ch >= 0 guard inside matches the resident kernel's `active`
+        child = stream_csr_children(fc_t, ec_t, ek_t, node, c, iters)
+        take = (child >= 0) & (matched == i) & (i < qlen)
+        node = jnp.where(take, child, node)
+        matched = jnp.where(take, matched + 1, matched)
+        return node, matched
+
+    node0 = jnp.zeros((bq,), jnp.int32)
+    node, matched = jax.lax.fori_loop(0, seq_len, step, (node0, node0))
+    node_ref[...] = node
+    depth_ref[...] = matched
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "block_q", "interpret"))
+def trie_walk_streamed(first_child, edge_char, edge_child, queries, qlens,
+                       *, tile: int, block_q: int = 8,
+                       interpret: bool = True):
+    """HBM-resident variant of :func:`trie_walk`: same contract, same
+    results, but the CSR tables stay in HBM and each step's pointer pairs
+    and child-row windows are DMA-streamed into VMEM scratch.  ``tile``
+    is the static window width from the tile-aligned layout
+    (``EngineConfig.walk_tile``)."""
+    bsz, seq_len = queries.shape
+    if edge_char.shape[0] == 0:
+        return jnp.zeros((bsz,), jnp.int32), jnp.zeros((bsz,), jnp.int32)
+    iters = max(1, tile.bit_length())
+    grid = (bsz // block_q,)
+    kernel = functools.partial(_stream_kernel, tile=tile, iters=iters,
+                               seq_len=seq_len)
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[hbm, hbm, hbm,
+                  pl.BlockSpec((block_q, seq_len), lambda i: (i, 0)),
+                  pl.BlockSpec((block_q,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 2), jnp.int32),     # pointer-pair stage
+            pltpu.VMEM((block_q, tile), jnp.int32),  # char-row windows
+            pltpu.VMEM((block_q, tile), jnp.int32),  # child-row windows
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
     )(first_child, edge_char, edge_child, queries, qlens)

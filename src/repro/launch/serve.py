@@ -41,11 +41,14 @@ def _make_index(spec, args):
         idx = CompletionIndex.load(args.load_index)
         if args.substrate is not None:
             idx.set_substrate(args.substrate)
+        if args.memory_budget is not None:
+            idx.set_memory_budget(args.memory_budget)
     else:
         idx = build_index(
             ds.strings, ds.scores, make_rules(ds.rules),
             IndexSpec(kind=args.index_kind, cache_k=args.cache_k,
-                      substrate=args.substrate or "auto"))
+                      substrate=args.substrate or "auto",
+                      memory_budget=args.memory_budget or 0))
     build_s = time.perf_counter() - t0
     if args.save_index:
         idx.save(args.save_index)
@@ -68,6 +71,7 @@ def serve_autocomplete(spec, args):
     out = {
         "arch": spec.arch_id, "kind": idx.kind,
         "substrate": idx.substrate,
+        "memory_budget": idx.memory_budget,
         "workload": "batch",
         "n_strings": idx.stats.n_strings,
         "bytes_per_string": round(idx.stats.bytes_per_string, 1),
@@ -98,6 +102,7 @@ def serve_keystroke(spec, args):
     out = {
         "arch": spec.arch_id, "kind": idx.kind,
         "substrate": idx.substrate,
+        "memory_budget": idx.memory_budget,
         "workload": "keystroke",
         "n_strings": idx.stats.n_strings,
         "build_seconds": round(build_s, 2),
@@ -151,6 +156,12 @@ def main():
                          "elsewhere (interpret-mode pallas is opt-in). "
                          "Default: auto when building, the saved choice "
                          "when --load-index")
+    ap.add_argument("--memory-budget", type=int, default=None,
+                    help="VMEM bytes the pallas substrate may spend "
+                         "keeping tables resident; larger tables stream "
+                         "from HBM (0/unset = substrate default). Applies "
+                         "to built and --load-index'd indexes, batch and "
+                         "keystroke workloads alike")
     ap.add_argument("--workload", default="batch",
                     choices=["batch", "keystroke"])
     ap.add_argument("--save-index", default=None,

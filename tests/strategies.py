@@ -1,0 +1,85 @@
+"""Shared hypothesis strategies for the property suites.
+
+Promoted out of ``test_core_oracle.py`` so the oracle property tests and
+the cross-substrate differential harness (``test_differential.py``) draw
+from one vocabulary of random dictionaries, rule sets and query streams.
+
+hypothesis is an optional dev dependency (requirements-dev.txt): when it
+is absent every strategy name is ``None`` and ``HAVE_HYPOTHESIS`` is
+False — test modules guard with ``needs_hypothesis`` so the gap surfaces
+as explicit skips, not collection errors.
+
+The ``differential`` settings profile is **derandomized**: hypothesis
+draws the same examples on every run, so a CI failure reproduces locally
+with nothing but the test id.  ``DIFF_MAX_EXAMPLES`` bounds the example
+count per property (interpret-mode kernel compiles dominate the cost).
+"""
+
+from __future__ import annotations
+
+import os
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic tests still run without hypothesis
+    given = settings = st = None
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="hypothesis not installed (requirements-dev.txt)")
+
+#: every registered index kind (the differential harness parametrizes
+#: over these explicitly so coverage does not depend on random draws)
+ALL_KINDS = ["plain", "tt", "et", "ht"]
+#: the rule-bearing kinds (the oracle property tests sample these)
+RULE_KINDS = ["tt", "et", "ht"]
+
+
+def max_examples(default: int) -> int:
+    """Per-property example budget; ``DIFF_MAX_EXAMPLES`` overrides (CI
+    pins it so the differential suite has a known cost)."""
+    return int(os.environ.get("DIFF_MAX_EXAMPLES", default))
+
+
+if HAVE_HYPOTHESIS:
+    #: dictionary entries: short words over a tiny alphabet, so random
+    #: dictionaries collide on prefixes often (the interesting regime)
+    words = st.text(alphabet="abcd", min_size=1, max_size=8)
+
+    #: a random dictionary (unique strings; scores are drawn separately)
+    dictionaries = st.lists(words, min_size=1, max_size=25, unique=True)
+
+    #: random (lhs, rhs) rule pairs; lhs may use chars outside the
+    #: dictionary alphabet so some rules never anchor
+    rule_sets = st.lists(
+        st.tuples(st.text(alphabet="abcdxy", min_size=1, max_size=3),
+                  st.text(alphabet="abcd", min_size=1, max_size=3)),
+        max_size=5)
+
+    #: random query streams, again over the widened alphabet so queries
+    #: miss, hit literally, and hit only through rules
+    query_streams = st.lists(
+        st.text(alphabet="abcdxy", min_size=1, max_size=6),
+        min_size=1, max_size=5)
+
+    #: top-k depths worth exercising (k < |dict|, k ~ |dict|, k >)
+    topk_values = st.sampled_from([1, 3, 10])
+
+    score_seeds = st.integers(0, 2**31 - 1)
+
+    settings.register_profile(
+        "differential", derandomize=True, deadline=None,
+        print_blob=True)
+else:
+    words = dictionaries = rule_sets = query_streams = None
+    topk_values = score_seeds = None
+
+
+def clean_rules(pairs):
+    """Drop degenerate lhs == rhs pairs (the builders reject identity
+    rewrites by construction elsewhere)."""
+    return [(l, r) for l, r in pairs if l != r]

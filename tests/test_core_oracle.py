@@ -10,12 +10,10 @@ import pytest
 
 from repro.core import CompletionIndex, OracleIndex, make_rules
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # deterministic tests still run without hypothesis
-    given = settings = st = None
+import strategies as strat
+from strategies import given, settings, st
 
-KINDS = ["tt", "et", "ht"]
+KINDS = strat.RULE_KINDS
 
 
 def build_all(strings, scores, rules, **kw):
@@ -126,28 +124,22 @@ def test_space_ordering_tt_le_ht_le_et():
     assert idx["tt"].stats.n_syn_nodes == 0
 
 
-# -- hypothesis property tests ----------------------------------------------
+# -- hypothesis property tests (shared strategies: tests/strategies.py) ------
 
 if st is not None:
-    _word = st.text(alphabet="abcd", min_size=1, max_size=8)
-
     @settings(max_examples=40, deadline=None)
     @given(
-        strings=st.lists(_word, min_size=1, max_size=25, unique=True),
-        scores_seed=st.integers(0, 2**31 - 1),
-        rules=st.lists(
-            st.tuples(st.text(alphabet="abcdxy", min_size=1, max_size=3),
-                      st.text(alphabet="abcd", min_size=1, max_size=3)),
-            max_size=5),
-        queries=st.lists(st.text(alphabet="abcdxy", min_size=1, max_size=6),
-                         min_size=1, max_size=5),
-        k=st.sampled_from([1, 3, 10]),
+        strings=strat.dictionaries,
+        scores_seed=strat.score_seeds,
+        rules=strat.rule_sets,
+        queries=strat.query_streams,
+        k=strat.topk_values,
         kind=st.sampled_from(KINDS),
         cache=st.booleans(),
     )
     def test_property_matches_oracle(strings, scores_seed, rules, queries, k,
                                      kind, cache):
-        rules = [(l, r) for l, r in rules if l != r]
+        rules = strat.clean_rules(rules)
         rng = np.random.default_rng(scores_seed)
         scores = rng.integers(1, 1000, len(strings)).tolist()
         oracle = OracleIndex(strings, scores, make_rules(rules))
@@ -165,7 +157,7 @@ if st is not None:
 
     @settings(max_examples=15, deadline=None)
     @given(
-        strings=st.lists(_word, min_size=2, max_size=15, unique=True),
+        strings=st.lists(strat.words, min_size=2, max_size=15, unique=True),
         rules=st.lists(
             st.tuples(st.text(alphabet="abcd", min_size=1, max_size=2),
                       st.text(alphabet="abcd", min_size=1, max_size=2)),
@@ -174,7 +166,7 @@ if st is not None:
     )
     def test_property_ht_equals_et_results(strings, rules, alpha):
         """HT must return identical results to ET for any alpha."""
-        rules = make_rules([(l, r) for l, r in rules if l != r])
+        rules = make_rules(strat.clean_rules(rules))
         scores = list(range(1, len(strings) + 1))
         et = CompletionIndex.build(strings, scores, rules, kind="et")
         ht = CompletionIndex.build(strings, scores, rules, kind="ht",
@@ -182,10 +174,10 @@ if st is not None:
         queries = [s[:2] for s in strings[:5]]
         assert et.complete(queries, 5) == ht.complete(queries, 5)
 else:  # hypothesis absent: surface the gap as explicit skips, not an error
-    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    @strat.needs_hypothesis
     def test_property_matches_oracle():
         pass
 
-    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    @strat.needs_hypothesis
     def test_property_ht_equals_et_results():
         pass

@@ -1,0 +1,124 @@
+"""Cross-substrate differential harness.
+
+Random dictionaries x rule sets x query streams flow through every
+execution path the engine has for the same lookup — the host-side Python
+oracle, the jnp reference substrate, and the pallas substrate in both of
+its tiers (VMEM-resident kernels and the DMA-streamed HBM tier) — and
+the device paths must agree **bit-identically** (scores, sids AND exact
+flags), while the end-to-end retry path must agree with the oracle's
+top-k score multiset.
+
+The hypothesis profile is derandomized (tests/strategies.py): CI and
+local runs draw identical examples, so a red run reproduces from the
+test id alone.  ``DIFF_MAX_EXAMPLES`` bounds the per-property example
+count — interpret-mode kernel compiles dominate the cost, so CI pins a
+small value.  Index kinds are covered by parametrization, not by random
+draws, so all four kinds run on both substrates every time.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import strategies as strat
+from strategies import given, settings, st
+
+from repro.api import IndexSpec, build_index
+from repro.core import engine as eng
+from repro.core import make_rules
+from repro.core.alphabet import pad_queries
+from repro.core.oracle import OracleIndex
+
+pytestmark = [pytest.mark.streamed, strat.needs_hypothesis]
+
+# small static widths so the kernels' fixed-trip loops stay cheap in
+# interpret mode; wide enough that most examples stay exact (the retry
+# path has its own deterministic coverage)
+SPEC = dict(frontier=8, gens=8, expand=2, max_steps=48)
+SEQ_LEN = 8
+K = 3
+
+
+def _force_streamed_budget(idx):
+    """A VMEM budget that evicts every dictionary-sized table (forcing
+    the streamed tier) while keeping the rule trie resident — the
+    streamed locus kernel's only residency requirement."""
+    return eng.get_substrate("pallas").min_streamed_budget(idx.device)
+
+
+def _run(idx, cfg, sub_name, qs, qlens):
+    sub = eng.get_substrate(sub_name)
+    s, i, e = eng.complete_batch(idx.device, cfg, qs, qlens, K, sub)
+    return np.asarray(s), np.asarray(i), np.asarray(e)
+
+
+if strat.HAVE_HYPOTHESIS:
+    diff_settings = settings(
+        settings.get_profile("differential"),
+        max_examples=strat.max_examples(6))
+
+    @pytest.mark.parametrize("kind", strat.ALL_KINDS)
+    @diff_settings
+    @given(strings=strat.dictionaries, scores_seed=strat.score_seeds,
+           rules=strat.rule_sets, queries=strat.query_streams)
+    def test_differential_engine_paths(kind, strings, scores_seed, rules,
+                                       queries):
+        """jnp == pallas-resident == pallas-streamed, bit for bit."""
+        from dataclasses import replace
+
+        rules = make_rules(strat.clean_rules(rules))
+        rng = np.random.default_rng(scores_seed)
+        scores = rng.integers(1, 1000, len(strings)).tolist()
+        idx = build_index(strings, scores, rules,
+                          IndexSpec(kind=kind, **SPEC))
+        qs, qlens = pad_queries(queries, SEQ_LEN)
+        qs, qlens = jnp.asarray(qs), jnp.asarray(qlens)
+
+        sub = eng.get_substrate("pallas")
+        cfg_res = idx.cfg
+        cfg_str = replace(idx.cfg, memory_budget=_force_streamed_budget(idx))
+        # the probe must actually claim the paths this test says it covers
+        assert sub.walk_variant(idx.device, cfg_res, SEQ_LEN) == "resident"
+        assert sub.beam_variant(idx.device, cfg_res, K) == "resident"
+        assert sub.walk_variant(idx.device, cfg_str, SEQ_LEN) == "streamed"
+
+        ref = _run(idx, cfg_res, "jnp", qs, qlens)
+        for label, cfg in (("resident", cfg_res), ("streamed", cfg_str)):
+            got = _run(idx, cfg, "pallas", qs, qlens)
+            for a, b, nm in zip(got, ref, ("scores", "sids", "exact")):
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"{kind}/{label}/{nm}")
+
+    @pytest.mark.parametrize("kind", strat.ALL_KINDS)
+    @diff_settings
+    @given(strings=strat.dictionaries, scores_seed=strat.score_seeds,
+           rules=strat.rule_sets, queries=strat.query_streams)
+    def test_differential_oracle_end_to_end(kind, strings, scores_seed,
+                                            rules, queries):
+        """The full lookup (exactness retry included) on the streamed
+        tier returns the oracle's top-k score multiset."""
+        rules = make_rules(strat.clean_rules(rules))
+        rng = np.random.default_rng(scores_seed)
+        scores = rng.integers(1, 1000, len(strings)).tolist()
+        oracle = OracleIndex(strings, scores,
+                             rules if kind != "plain" else [])
+        idx = build_index(strings, scores, rules,
+                          IndexSpec(kind=kind, **SPEC))
+        idx.set_memory_budget(_force_streamed_budget(idx))
+        idx.set_substrate("pallas")
+        got = idx.complete(queries, k=K)
+        for q, row in zip(queries, got):
+            assert [s for s, _ in row] == oracle.topk_scores(q, K), \
+                (q, kind)
+            valid = oracle.matches(q)
+            for _, s in row:
+                assert s.encode() in valid, (q, s, kind)
+else:  # hypothesis absent: explicit skips, not collection errors
+    @strat.needs_hypothesis
+    def test_differential_engine_paths():
+        pass
+
+    @strat.needs_hypothesis
+    def test_differential_oracle_end_to_end():
+        pass

@@ -203,7 +203,7 @@ def test_fused_walk_claims_rule_bearing_kinds(paper_data, kind):
     sub = eng.get_substrate("pallas")
     assert not sub._rule_free(t, cfg)
     assert sub.can_walk_batch(t, cfg, 16)
-    assert sub._can_fuse_locus_dp(t, cfg, 16)
+    assert sub.walk_variant(t, cfg, 16) == "resident"
     _walk_parity(idx, QUERIES, 16)
 
 

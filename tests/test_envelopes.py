@@ -1,0 +1,261 @@
+"""Envelope-boundary regressions for the resident/streamed/jnp probes.
+
+The ``walk_variant`` / ``beam_variant`` probes pick an execution tier
+per call: VMEM-resident kernels inside the byte budget, the DMA-streamed
+tier above it, and the jnp fallback outside the static shape envelope.
+These tests sit parametrized cases *exactly on* the byte-budget and
+W/P/k/F edges and assert (a) the probe picks the expected tier on each
+side, and (b) results agree bit-for-bit across every boundary — a probe
+that flips tiers must never flip answers.  The PR 4 host-side
+doubled-width retry re-probes per round; its behavior under a streamed
+budget is covered too.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import IndexSpec, Session, build_index
+from repro.core import engine as eng
+from repro.core import make_rules
+from repro.core.alphabet import pad_queries
+
+QUERIES = ["andy pa", "andrew pa", "bil", "a", "w", "andrew pavlo", "xyz",
+           ""]
+
+
+@pytest.fixture(scope="module")
+def paper_data():
+    strings = ["andrew pavlo", "andrew parker", "andrew packard",
+               "william smith", "bill of rights"]
+    scores = [50, 40, 30, 20, 10]
+    rules = make_rules([("andy", "andrew"), ("bill", "william")])
+    return strings, scores, rules
+
+
+def _build(paper_data, kind, **kw):
+    strings, scores, rules = paper_data
+    return build_index(strings, scores, rules, IndexSpec(kind=kind, **kw))
+
+
+def _sub():
+    return eng.get_substrate("pallas")
+
+
+def _complete_parity(idx, budgets, k=3):
+    """The same index must answer identically under every budget (i.e.
+    across whatever tier each budget lands on), on both substrates."""
+    expect = idx.set_substrate("jnp").complete(QUERIES, k=k)
+    idx.set_substrate("pallas")
+    for b in budgets:
+        assert idx.set_memory_budget(b).complete(QUERIES, k=k) == expect, b
+    return expect
+
+
+# -- byte-budget edges --------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["plain", "tt", "et", "ht"])
+def test_walk_budget_edge_resident_vs_streamed(paper_data, kind):
+    """A budget exactly equal to the walk tables' bytes keeps the
+    resident tier; one byte less tips into the streamed tier; results
+    agree on both sides of the edge."""
+    sub = _sub()
+    idx = _build(paper_data, kind)
+    t, cfg = idx.device, idx.cfg
+    if sub._rule_free(t, cfg):
+        edge = sub._table_bytes(t, sub._PREFIX_FIELDS)
+    else:
+        edge = sub._table_bytes(
+            t, sub._WALK_STREAM_FIELDS + sub._WALK_RESIDENT_FIELDS)
+    from dataclasses import replace
+    at = replace(cfg, memory_budget=edge)
+    below = replace(cfg, memory_budget=edge - 1)
+    assert sub.walk_variant(t, at, 16) == "resident"
+    assert sub.walk_variant(t, below, 16) == "streamed"
+    _complete_parity(idx, [edge, edge - 1])
+
+
+def test_walk_streamed_requires_resident_rule_trie(paper_data):
+    """The streamed locus tier keeps the rule trie in VMEM: a budget too
+    small even for that refuses the kernel (jnp fallback), and the
+    fallback still answers identically."""
+    sub = _sub()
+    idx = _build(paper_data, "ht")
+    t, cfg = idx.device, idx.cfg
+    rule_bytes = sub._table_bytes(t, sub._WALK_RESIDENT_FIELDS)
+    from dataclasses import replace
+    at = replace(cfg, memory_budget=rule_bytes)
+    below = replace(cfg, memory_budget=rule_bytes - 1)
+    assert sub.walk_variant(t, at, 16) == "streamed"
+    assert sub.walk_variant(t, below, 16) is None
+    assert not sub.can_walk_batch(t, below, 16)
+    _complete_parity(idx, [rule_bytes, rule_bytes - 1])
+
+
+def test_beam_budget_edge_resident_vs_streamed(paper_data):
+    sub = _sub()
+    idx = _build(paper_data, "et")
+    t, cfg = idx.device, idx.cfg
+    edge = sub._table_bytes(t, sub._BEAM_FIELDS)
+    from dataclasses import replace
+    assert sub.beam_variant(t, replace(cfg, memory_budget=edge), 3) \
+        == "resident"
+    assert sub.beam_variant(t, replace(cfg, memory_budget=edge - 1), 3) \
+        == "streamed"
+    _complete_parity(idx, [edge, edge - 1])
+
+
+def test_default_budget_used_when_unset(paper_data):
+    """memory_budget=0 means the substrate default: small tries stay
+    resident (today's behavior, unchanged)."""
+    sub = _sub()
+    idx = _build(paper_data, "ht")
+    assert idx.cfg.memory_budget == 0
+    assert sub._budget(idx.cfg) == sub._DEFAULT_VMEM_BUDGET
+    assert sub.walk_variant(idx.device, idx.cfg, 16) == "resident"
+    assert sub.beam_variant(idx.device, idx.cfg, 3) == "resident"
+
+
+# -- W/P/k/F shape edges ------------------------------------------------------
+
+
+def test_beam_k_edge(paper_data):
+    sub = _sub()
+    idx = _build(paper_data, "et")
+    t, cfg = idx.device, idx.cfg
+    assert sub.beam_variant(t, cfg, sub._BEAM_MAX_K) == "resident"
+    assert sub.beam_variant(t, cfg, sub._BEAM_MAX_K + 1) is None
+
+
+def test_beam_gens_expand_edges(paper_data):
+    sub = _sub()
+    t = _build(paper_data, "et").device
+    at = _build(paper_data, "et", gens=sub._BEAM_MAX_GENS)
+    over = _build(paper_data, "et", gens=sub._BEAM_MAX_GENS + 1)
+    assert sub.beam_variant(at.device, at.cfg, 3) is not None
+    assert sub.beam_variant(over.device, over.cfg, 3) is None
+    # P <= W precondition: expand == gens is the last admissible width;
+    # past it the probe must refuse (P > W cannot even pop the
+    # reference's pool, so refusal is the contract, not a fallback)
+    eq = _build(paper_data, "et", frontier=8, gens=8, expand=8)
+    from dataclasses import replace
+    assert sub.beam_variant(eq.device, eq.cfg, 3) is not None
+    assert sub.beam_variant(eq.device, replace(eq.cfg, expand=9), 3) is None
+    assert eq.set_substrate("pallas").complete(QUERIES, k=3) == \
+        eq.set_substrate("jnp").complete(QUERIES, k=3)
+
+
+def test_beam_frontier_pool_edge(paper_data):
+    """F <= W: the pool must hold the seed antichain.  frontier == gens
+    is the last admissible width; one past it the probe must refuse
+    (F > W cannot even seed the reference's pool, so there is no
+    fallback parity to check — refusing is the whole contract)."""
+    sub = _sub()
+    fit = _build(paper_data, "et", frontier=8, gens=8)
+    over = _build(paper_data, "et", frontier=9, gens=9)
+    from dataclasses import replace
+    over_cfg = replace(over.cfg, gens=8)
+    assert sub.beam_variant(fit.device, fit.cfg, 3) is not None
+    assert sub.beam_variant(over.device, over_cfg, 3) is None
+    assert fit.set_substrate("pallas").complete(QUERIES, k=3) == \
+        fit.set_substrate("jnp").complete(QUERIES, k=3)
+
+
+def test_walk_frontier_edge(paper_data):
+    sub = _sub()
+    at = _build(paper_data, "ht", frontier=sub._FUSE_MAX_FRONTIER,
+                gens=2 * sub._FUSE_MAX_FRONTIER)
+    over = _build(paper_data, "ht", frontier=sub._FUSE_MAX_FRONTIER + 1,
+                  gens=2 * sub._FUSE_MAX_FRONTIER)
+    assert sub.walk_variant(at.device, at.cfg, 16) == "resident"
+    assert sub.walk_variant(over.device, over.cfg, 16) is None
+    from repro.core.alphabet import pad_queries as pq
+    qs, qlens = pq(QUERIES[:4], 16)
+    qs, qlens = jnp.asarray(qs), jnp.asarray(qlens)
+    for idx in (at, over):
+        a = sub.walk_batch(idx.device, idx.cfg, qs, qlens)
+        b = eng.get_substrate("jnp").walk_batch(idx.device, idx.cfg, qs,
+                                                qlens)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_walk_seq_len_edge(paper_data):
+    """The padded query length is part of the walk envelope: one past
+    _FUSE_MAX_SEQ refuses the kernel on rule-bearing tries regardless of
+    budget."""
+    sub = _sub()
+    idx = _build(paper_data, "tt")
+    t, cfg = idx.device, idx.cfg
+    assert sub.walk_variant(t, cfg, sub._FUSE_MAX_SEQ) == "resident"
+    assert sub.walk_variant(t, cfg, sub._FUSE_MAX_SEQ + 1) is None
+
+
+# -- retry-reprobe under a streamed budget ------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["tt", "ht"])
+def test_retry_reprobe_streamed_budget(paper_data, kind):
+    """Starved widths force the host-side doubled-width retry; under a
+    budget that keeps the index on the streamed tier, every retry round
+    re-probes (streamed round 1, jnp fallback later) and converges to
+    the wide reference answers."""
+    sub = _sub()
+    wide = _build(paper_data, kind)
+    expect = wide.complete(QUERIES, k=3)
+    tiny = _build(paper_data, kind, frontier=2, gens=2, expand=2,
+                  max_steps=4)
+    budget = sub._table_bytes(tiny.device, sub._WALK_RESIDENT_FIELDS)
+    tiny.set_memory_budget(budget)
+    assert sub.walk_variant(tiny.device, tiny.cfg, 16) == "streamed"
+    assert sub.beam_variant(tiny.device, tiny.cfg, 3) == "streamed"
+    # round 1 of the retry (F x2, W x4) must still be claimed streamed
+    from dataclasses import replace
+    cfg1 = replace(tiny.cfg, frontier=tiny.cfg.frontier * 2,
+                   gens=tiny.cfg.gens * 4,
+                   max_steps=tiny.cfg.max_steps * 4, use_cache=False)
+    assert sub.beam_variant(tiny.device, cfg1, 3) == "streamed"
+    for substrate in ("jnp", "pallas"):
+        assert tiny.set_substrate(substrate).complete(QUERIES, k=3) \
+            == expect
+    # session fallback routes through the same retry machinery
+    sess = Session(tiny.set_substrate("pallas"), k=3)
+    assert sess.type("andy pa") == expect[0]
+
+
+def test_cached_merge_over_budget_falls_back_to_jnp(paper_data):
+    """The fused cached-top-K merge kernels hold the (N, K) cache tables
+    whole in VMEM (no streamed cached tier yet): caches over the budget
+    must answer through the jnp reference merge, identically, instead of
+    routing to an unfittable kernel."""
+    sub = _sub()
+    idx = _build(paper_data, "et", cache_k=8)
+    t = idx.device
+    cache_bytes = sub._table_bytes(t, sub._CACHE_FIELDS)
+    forcing = sub.min_streamed_budget(t)
+    # kernel at the edge, jnp fallback one byte under, and the forcing
+    # budget where the walk streams while the cached merge steps down
+    expect = _complete_parity(idx, [cache_bytes, cache_bytes - 1, forcing])
+    from dataclasses import replace
+    assert sub.walk_variant(t, replace(idx.cfg, memory_budget=forcing),
+                            16) == "streamed"
+    assert expect[0]    # the cached path actually answered
+
+
+def test_memory_budget_rides_compile_cache_key(paper_data):
+    """Flipping the budget at runtime re-probes without rebuilding:
+    executables for both tiers coexist in the compile cache."""
+    sub = _sub()
+    idx = _build(paper_data, "et").set_substrate("pallas")
+    streamed_budget = sub._table_bytes(idx.device,
+                                       sub._WALK_RESIDENT_FIELDS)
+    r1 = idx.complete(["andy pa"], k=3)
+    misses0 = idx._compile_cache.misses
+    idx.set_memory_budget(streamed_budget)
+    assert idx.complete(["andy pa"], k=3) == r1
+    assert idx._compile_cache.misses == misses0 + 1
+    idx.set_memory_budget(0)
+    assert idx.complete(["andy pa"], k=3) == r1   # resident exe still cached
+    assert idx._compile_cache.misses == misses0 + 1

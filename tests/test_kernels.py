@@ -141,24 +141,42 @@ def test_cached_topk_merge_k_saturates_union(rng):
     assert (np.asarray(s)[0][2:] == -1).all()
 
 
+@pytest.mark.parametrize("streamed", [False, True])
 @pytest.mark.parametrize("bsz", [1, 3, 13, 130])
-def test_trie_walk_nonmultiple_batch_sizes(bsz, rng):
+def test_trie_walk_nonmultiple_batch_sizes(bsz, streamed, rng):
     """Regression (ops.py padding invariant): batch sizes off the block
-    grid must pad with rows that walk to the root and slice off cleanly."""
+    grid must pad with rows that walk to the root and slice off cleanly —
+    on the resident kernel AND the DMA-streamed variant (which shares
+    ``_pad_query_batch`` but runs its own pallas_call)."""
     strings = [f"key {i:04d} tail" for i in range(300)]
     idx = CompletionIndex.build(strings, list(range(300)), make_rules([]),
                                 kind="plain")
-    t = idx.device
+    t, cfg = idx.device, idx.cfg
     queries = [strings[int(rng.integers(0, 300))][: int(rng.integers(0, 9))]
                for _ in range(bsz)]
     qs, qlens = pad_queries(queries, 12)
     a = ops.trie_walk(t.first_child, t.edge_char, t.edge_child,
-                      jnp.asarray(qs), jnp.asarray(qlens), block_q=8)
+                      jnp.asarray(qs), jnp.asarray(qlens), block_q=8,
+                      streamed=streamed, walk_tile=cfg.walk_tile)
     b = ref.trie_walk_ref(t.first_child, t.edge_char, t.edge_child,
                           jnp.asarray(qs), jnp.asarray(qlens))
     assert a[0].shape == (bsz,)
     np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@pytest.mark.parametrize("streamed", [False, True])
+def test_trie_walk_empty_dictionary_short_circuit(streamed):
+    """Zero-edge tries short-circuit before any pallas_call (there is no
+    CSR row to stream): every query walks to the root with depth 0."""
+    idx = CompletionIndex.build([], [], make_rules([]), kind="plain")
+    t, cfg = idx.device, idx.cfg
+    assert int(t.edge_char.shape[0]) == 0
+    qs, qlens = pad_queries(["abc", ""], 4)
+    node, depth = ops.trie_walk(t.first_child, t.edge_char, t.edge_child,
+                                jnp.asarray(qs), jnp.asarray(qlens),
+                                streamed=streamed, walk_tile=cfg.walk_tile)
+    assert (np.asarray(node) == 0).all() and (np.asarray(depth) == 0).all()
 
 
 @pytest.mark.parametrize("kind,frontier,block_q", [
@@ -182,6 +200,54 @@ def test_locus_walk_sweep(kind, frontier, block_q, rng):
     a = ops.locus_walk(t, cfg, jnp.asarray(qs), jnp.asarray(qlens),
                        block_q=block_q)
     b = ref.locus_walk_ref(t, cfg, jnp.asarray(qs), jnp.asarray(qlens))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@pytest.mark.streamed
+@pytest.mark.parametrize("kind,frontier", [("tt", 8), ("et", 8), ("ht", 4)])
+def test_locus_walk_streamed_sweep(kind, frontier, rng):
+    """DMA-streamed locus-DP tier vs the reference DP: link store (tt),
+    teleports (et) and both (ht), incl. starved-frontier overflow — loci
+    AND overflow counts bit-identical with HBM-resident tables."""
+    words = ["st", "saint", "street", "ave", "avenue", "dr", "drive"]
+    strings = [f"{words[int(rng.integers(0, len(words)))]} "
+               f"{words[int(rng.integers(0, len(words)))]} {i % 23:02d}"
+               for i in range(120)]
+    idx = CompletionIndex.build(
+        strings, list(rng.integers(0, 1000, len(strings))),
+        make_rules([("st", "saint"), ("st", "street"), ("ave", "avenue")]),
+        kind=kind, frontier=frontier)
+    t, cfg = idx.device, idx.cfg
+    queries = [s[: int(rng.integers(1, 11))] for s in strings[:9]] + \
+        ["st st", "zzz", ""]
+    qs, qlens = pad_queries(queries, 12)
+    a = ops.locus_walk(t, cfg, jnp.asarray(qs), jnp.asarray(qlens),
+                       streamed=True)
+    b = ref.locus_walk_ref(t, cfg, jnp.asarray(qs), jnp.asarray(qlens))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@pytest.mark.streamed
+@pytest.mark.parametrize("bsz", [1, 3, 13])
+def test_locus_walk_streamed_nonmultiple_batch_sizes(bsz, rng):
+    """The streamed locus tier shares ``_pad_query_batch``: off-grid
+    batches pad with root-walking rows and slice off cleanly."""
+    words = ["st", "saint", "ave", "avenue"]
+    strings = [f"{words[int(rng.integers(0, 4))]} {i % 13:02d}"
+               for i in range(60)]
+    idx = CompletionIndex.build(
+        strings, list(rng.integers(0, 100, len(strings))),
+        make_rules([("st", "saint"), ("ave", "avenue")]), kind="ht",
+        frontier=4)
+    t, cfg = idx.device, idx.cfg
+    queries = (["st 0", "ave", "zzz", "", "saint 1"] * 3)[:bsz]
+    qs, qlens = pad_queries(queries, 8)
+    a = ops.locus_walk(t, cfg, jnp.asarray(qs), jnp.asarray(qlens),
+                       streamed=True)
+    b = ref.locus_walk_ref(t, cfg, jnp.asarray(qs), jnp.asarray(qlens))
+    assert a[0].shape == (bsz, cfg.frontier)
     np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
 
@@ -263,26 +329,52 @@ def test_beam_topk_k_exceeds_live_emissions(rng):
     assert (np.asarray(s) == -1).any()       # -1 padded tails
 
 
+@pytest.mark.parametrize("streamed", [False, True])
 @pytest.mark.parametrize("bsz", [1, 3, 13])
-def test_beam_topk_nonmultiple_batch_sizes(bsz, rng):
+def test_beam_topk_nonmultiple_batch_sizes(bsz, streamed, rng):
     """Batch sizes off the block grid pad with all-(-1) locus rows (dead
-    pool, exact) and slice off cleanly."""
-    idx, loci = _beam_fixture(rng, kind="ht")
-    _assert_beam_parity(idx, loci[:bsz], 5)
+    pool, exact) and slice off cleanly — on the resident kernel AND the
+    DMA-streamed variant (shared ``_pad_rows``, separate pallas_call)."""
+    idx, loci = _beam_fixture(rng, kind="ht", gens=8, expand=2, frontier=8,
+                              max_steps=48)
+    a = ops.beam_topk(idx.device, idx.cfg, loci[:bsz], 5, streamed=streamed)
+    b = ref.beam_topk_ref(idx.device, idx.cfg, loci[:bsz], 5)
+    for x, y, nm in zip(a, b, ("scores", "sids", "exact")):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=nm)
 
 
-def test_beam_topk_empty_dictionary():
-    """The degenerate empty dictionary short-circuits like the reference:
-    all -1 results, exact everywhere."""
+@pytest.mark.parametrize("streamed", [False, True])
+def test_beam_topk_empty_dictionary(streamed):
+    """The degenerate empty dictionary short-circuits like the reference
+    (before any pallas_call — there is no emission row to stream): all
+    -1 results, exact everywhere."""
     from repro.api import IndexSpec, build_index
 
     idx = build_index([], [], make_rules([]), IndexSpec(kind="plain"))
     loci = jnp.full((3, idx.cfg.frontier), -1, jnp.int32)
-    a = ops.beam_topk(idx.device, idx.cfg, loci, 4)
+    a = ops.beam_topk(idx.device, idx.cfg, loci, 4, streamed=streamed)
     b = ref.beam_topk_ref(idx.device, idx.cfg, loci, 4)
     for x, y in zip(a, b):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
     assert (np.asarray(a[0]) == -1).all() and np.asarray(a[2]).all()
+
+
+@pytest.mark.streamed
+@pytest.mark.parametrize("kind,gens,expand,frontier,k", [
+    ("plain", 8, 2, 4, 3), ("tt", 8, 4, 8, 5), ("ht", 4, 2, 4, 3),
+])
+def test_beam_topk_streamed_sweep(kind, gens, expand, frontier, k, rng):
+    """DMA-streamed beam tier vs the vmapped reference priority search —
+    scores, sids AND exact flags bit-identical with HBM-resident
+    emission tables (incl. the starved ht shape that goes inexact)."""
+    idx, loci = _beam_fixture(rng, kind=kind, gens=gens, expand=expand,
+                              frontier=frontier, max_steps=48)
+    a = ops.beam_topk(idx.device, idx.cfg, loci, k, streamed=True)
+    b = ref.beam_topk_ref(idx.device, idx.cfg, loci, k)
+    for x, y, nm in zip(a, b, ("scores", "sids", "exact")):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=nm)
 
 
 def test_pad_query_batch_invariant():

@@ -1,0 +1,176 @@
+"""Unit tests for benchmarks/trajectory.py --check / append / render.
+
+The perf-trajectory gate has only ever been exercised implicitly by CI;
+these tests pin its semantics directly: the median-gate math, the
+warn-only treatment of jnp reference rows, the fresh-history-on-
+path-change rule (a row whose fused/streamed flags change starts a new
+history instead of being gated against a different code path), and the
+single-sample warm-up rule.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import trajectory as tj
+
+
+def _row(engine="beam", kind="et", substrate="pallas", us=100.0, **flags):
+    row = {"engine": engine, "kind": kind, "substrate": substrate,
+           "backend": "cpu", "us_per_q": us,
+           "fused_walk": True, "fused_beam": True,
+           "streamed_walk": False, "streamed_beam": False}
+    row.update(flags)
+    return row
+
+
+def _write_history(path, entries):
+    path.write_text(json.dumps(entries))
+
+
+def _write_smoke(path, rows):
+    path.write_text(json.dumps({"benchmark": "substrates", "backend": "cpu",
+                                "smoke": True, "rows": rows}))
+
+
+def _hist_entry(commit, rows, ts=0.0):
+    return {"timestamp": ts, "commit": commit, "backend": "cpu",
+            "smoke": True, "rows": rows}
+
+
+def _check(tmp_path, hist_rows_by_commit, smoke_rows, threshold=1.5):
+    hist = tmp_path / "hist.json"
+    smoke = tmp_path / "smoke.json"
+    _write_history(hist, [_hist_entry(c, rows)
+                          for c, rows in hist_rows_by_commit])
+    _write_smoke(smoke, smoke_rows)
+    return tj.check_run(str(smoke), str(hist), commit="fresh",
+                        threshold=threshold)
+
+
+# -- median-gate math ---------------------------------------------------------
+
+
+def test_check_fails_pallas_row_beyond_threshold(tmp_path):
+    hist = [("c1", [_row(us=100.0)]), ("c2", [_row(us=120.0)])]
+    fails, warns = _check(tmp_path, hist, [_row(us=180.0)])   # median 110
+    assert len(fails) == 1 and not warns
+    assert "1.64x" in fails[0]
+    fails, warns = _check(tmp_path, hist, [_row(us=160.0)])   # 1.45x: ok
+    assert not fails and not warns
+
+
+def test_check_threshold_is_exclusive(tmp_path):
+    """us == threshold * median passes; the gate fires strictly above."""
+    hist = [("c1", [_row(us=100.0)]), ("c2", [_row(us=100.0)])]
+    fails, warns = _check(tmp_path, hist, [_row(us=150.0)])
+    assert not fails and not warns
+    fails, _ = _check(tmp_path, hist, [_row(us=150.1)])
+    assert len(fails) == 1
+
+
+def test_check_median_not_mean(tmp_path):
+    """One outlier run must not drag the baseline: gate on the median."""
+    hist = [("c1", [_row(us=100.0)]), ("c2", [_row(us=100.0)]),
+            ("c3", [_row(us=10_000.0)])]
+    fails, warns = _check(tmp_path, hist, [_row(us=140.0)])  # median 100
+    assert not fails and not warns
+    fails, _ = _check(tmp_path, hist, [_row(us=151.0)])
+    assert len(fails) == 1
+
+
+def test_check_excludes_own_commit_history(tmp_path):
+    """The current commit's (just-appended) entry must not gate itself."""
+    hist = tmp_path / "hist.json"
+    smoke = tmp_path / "smoke.json"
+    _write_history(hist, [_hist_entry("c1", [_row(us=100.0)]),
+                          _hist_entry("c2", [_row(us=100.0)]),
+                          _hist_entry("fresh", [_row(us=500.0)])])
+    _write_smoke(smoke, [_row(us=500.0)])
+    fails, _ = tj.check_run(str(smoke), str(hist), commit="fresh")
+    assert len(fails) == 1           # gated vs c1/c2 only, not itself
+
+
+# -- warn-only jnp rows -------------------------------------------------------
+
+
+def test_check_jnp_rows_warn_only(tmp_path):
+    hist = [("c1", [_row(substrate="jnp", us=100.0, fused_walk=False,
+                         fused_beam=False)]),
+            ("c2", [_row(substrate="jnp", us=100.0, fused_walk=False,
+                         fused_beam=False)])]
+    fails, warns = _check(tmp_path, hist, [
+        _row(substrate="jnp", us=400.0, fused_walk=False,
+             fused_beam=False)])
+    assert not fails and len(warns) == 1
+
+
+# -- fresh history on path change ---------------------------------------------
+
+
+@pytest.mark.parametrize("flag", ["fused_walk", "fused_beam",
+                                  "streamed_walk", "streamed_beam"])
+def test_check_path_change_starts_fresh_history(tmp_path, flag):
+    """A row whose claimed kernel path changes (a kernel landing, or the
+    budget moving it to the DMA-streamed tier) measures different code —
+    it must not be gated against the old path's timings."""
+    old = _row(us=100.0)
+    new = _row(us=10_000.0)
+    new[flag] = not new[flag]
+    hist = [("c1", [old]), ("c2", [old])]
+    fails, warns = _check(tmp_path, hist, [new])
+    assert not fails and not warns
+
+
+def test_check_rows_predating_streamed_flags_keep_their_key(tmp_path):
+    """History rows written before the streamed columns existed read the
+    missing flags as False — a fresh non-streamed row still gates
+    against them."""
+    old = {k: v for k, v in _row(us=100.0).items()
+           if k not in ("streamed_walk", "streamed_beam")}
+    hist = [("c1", [old]), ("c2", [old])]
+    fails, _ = _check(tmp_path, hist, [_row(us=200.0)])
+    assert len(fails) == 1
+
+
+# -- single-sample histories --------------------------------------------------
+
+
+def test_check_single_sample_warns_instead_of_failing(tmp_path):
+    hist = [("c1", [_row(us=100.0)])]
+    fails, warns = _check(tmp_path, hist, [_row(us=1000.0)])
+    assert not fails and len(warns) == 1
+    # second sample arms the gate
+    hist = [("c1", [_row(us=100.0)]), ("c2", [_row(us=100.0)])]
+    fails, warns = _check(tmp_path, hist, [_row(us=1000.0)])
+    assert len(fails) == 1 and not warns
+
+
+def test_check_no_history_no_gate(tmp_path):
+    fails, warns = _check(tmp_path, [], [_row(us=10_000.0)])
+    assert not fails and not warns
+
+
+# -- append / render ----------------------------------------------------------
+
+
+def test_append_run_dedups_by_commit(tmp_path):
+    hist = tmp_path / "hist.json"
+    smoke = tmp_path / "smoke.json"
+    _write_smoke(smoke, [_row(us=100.0)])
+    tj.append_run(str(smoke), str(hist), commit="c1", timestamp=1.0)
+    _write_smoke(smoke, [_row(us=120.0)])
+    out = tj.append_run(str(smoke), str(hist), commit="c1", timestamp=2.0)
+    assert len(out) == 1 and out[0]["rows"][0]["us_per_q"] == 120.0
+    out = tj.append_run(str(smoke), str(hist), commit="c2", timestamp=3.0)
+    assert [e["commit"] for e in out] == ["c1", "c2"]
+
+
+def test_render_labels_streamed_rows(tmp_path):
+    hist = [_hist_entry("c1", [
+        _row(us=100.0),
+        _row(us=900.0, streamed_walk=True, streamed_beam=True)])]
+    md = tj.render_markdown(hist)
+    assert "beam/et/pallas [fw+fb]" in md
+    assert "beam/et/pallas [fw+fb+sw+sb]" in md
+    assert "900" in md and "100" in md
