@@ -1,0 +1,41 @@
+"""Kernel sanitizer: static analysis for the invariants the kernel and
+substrate layers enforce by convention.
+
+The fused Pallas kernels and their capability probes rest on
+hand-maintained invariants — every started ``make_async_copy`` is waited
+before its destination is read, every ``EngineConfig`` field that reaches
+traced code rides the compile-cache key, every ``can_*``/``*_variant``
+probe claims exactly the envelope its kernel can honor, and kernel bodies
+never branch in Python on tracer values.  Nothing at runtime checks any
+of this: a missed wait or a stale cache key is a silent wrong-results
+bug.  This package verifies the invariants mechanically, over the AST,
+without importing (let alone executing) the checked code.
+
+Four rule families (see the rule modules for the per-rule contracts):
+
+- :mod:`repro.analysis.dma`      — ``DMA001``-``DMA004``: DMA discipline
+  in the streamed kernel tier (start/wait pairing, destination reads,
+  double-buffer slot rotation);
+- :mod:`repro.analysis.cachekey` — ``KEY001``-``KEY003``: compile-cache
+  key completeness (config fields read under jit vs fields in the key,
+  config hashability, config-derived statics at kernel call sites);
+- :mod:`repro.analysis.envelope` — ``ENV001``-``ENV004``: probe/envelope
+  consistency (byte-accounting field coverage, bounded scratch symbols,
+  scratch bytes at the envelope maximum, structural pool guards);
+- :mod:`repro.analysis.hygiene`  — ``TRC001``-``TRC002``: traced-code
+  hygiene inside kernel bodies (no data-dependent Python ``if``/``while``,
+  no dynamic trip counts).
+
+Run it as ``python -m repro.analysis`` (add ``--fail-on-findings`` for
+the CI gate).  A finding on a line carrying — or directly below — a
+waiver comment ``# sanitizer: waive[RULE-ID] <reason>`` is suppressed;
+the reason is mandatory and the waiver covers exactly one rule id (or
+``*``).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import Finding, Waiver, scan_waivers
+from repro.analysis.runner import run_all
+
+__all__ = ["Finding", "Waiver", "run_all", "scan_waivers"]

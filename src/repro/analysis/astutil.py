@@ -1,0 +1,226 @@
+"""Shared AST machinery for the sanitizer rules.
+
+Every rule works on parsed source (``ast``) — the checked modules are
+never imported, so the sanitizer runs identically with or without jax
+present and cannot be fooled by import-time behavior.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator
+
+
+@dataclass
+class SourceFile:
+    """One parsed source file (path relative to the scan root)."""
+
+    path: Path
+    rel: str
+    source: str
+    tree: ast.Module
+
+
+def load_tree(root: Path) -> list[SourceFile]:
+    """Parse every ``.py`` file under ``root`` (or the file itself)."""
+    paths = [root] if root.is_file() else sorted(root.rglob("*.py"))
+    base = root.parent if root.is_file() else root
+    out: list[SourceFile] = []
+    for p in paths:
+        src = p.read_text()
+        out.append(SourceFile(path=p, rel=str(p.relative_to(base)),
+                              source=src, tree=ast.parse(src)))
+    return out
+
+
+def dotted_name(node: ast.expr) -> str | None:
+    """``a.b.c`` -> "a.b.c"; None for anything not a pure name chain."""
+    parts: list[str] = []
+    cur: ast.expr = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_callee(node: ast.Call) -> str | None:
+    """The dotted callee name of a call, if it is a plain name chain."""
+    return dotted_name(node.func)
+
+
+def iter_functions(tree: ast.Module) -> Iterator[
+        tuple[str, ast.FunctionDef | ast.AsyncFunctionDef]]:
+    """Yield (qualname, node) for every function/method, including
+    nested ones (qualnames are dotted: ``Class.method``,
+    ``outer.<locals>.inner``)."""
+
+    def walk(node: ast.AST, prefix: str) -> Iterator[
+            tuple[str, ast.FunctionDef | ast.AsyncFunctionDef]]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield q, child
+                yield from walk(child, f"{q}.<locals>.")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def top_level_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """Module-level ``def``s by name (no methods, no nested defs)."""
+    return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def class_defs(tree: ast.Module) -> dict[str, ast.ClassDef]:
+    return {n.name: n for n in tree.body if isinstance(n, ast.ClassDef)}
+
+
+def methods_of(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body if isinstance(n, ast.FunctionDef)}
+
+
+def class_int_constants(cls: ast.ClassDef) -> dict[str, int]:
+    """Integer class attributes (``_BEAM_MAX_GENS = 256`` and
+    ``_X = 8 << 20`` forms)."""
+    out: dict[str, int] = {}
+    for n in cls.body:
+        if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                and isinstance(n.targets[0], ast.Name):
+            v = eval_const_int(n.value)
+            if v is not None:
+                out[n.targets[0].id] = v
+    return out
+
+
+def class_str_tuples(cls: ast.ClassDef) -> dict[str, tuple[str, ...]]:
+    """String-tuple class attributes (the probe field lists)."""
+    out: dict[str, tuple[str, ...]] = {}
+    for n in cls.body:
+        if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                and isinstance(n.targets[0], ast.Name) \
+                and isinstance(n.value, (ast.Tuple, ast.List)):
+            elts = n.value.elts
+            if elts and all(isinstance(e, ast.Constant)
+                            and isinstance(e.value, str) for e in elts):
+                out[n.targets[0].id] = tuple(
+                    e.value for e in elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str))
+    return out
+
+
+def eval_const_int(node: ast.expr) -> int | None:
+    """Evaluate a constant integer expression (literals, + - * // % << >>
+    and unary minus); None when not constant."""
+    return eval_int(node, {})
+
+
+def eval_int(node: ast.expr, env: dict[str, int]) -> int | None:
+    """Evaluate an integer expression over an environment binding plain
+    and dotted names to ints.  Supports arithmetic, ``max``/``min``/
+    ``int`` calls, and conditional expressions whose test is decidable.
+    Returns None when any leaf is unbound."""
+    if isinstance(node, ast.Constant):
+        return node.value if isinstance(node.value, int) else None
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        name = dotted_name(node)
+        if name is None:
+            return None
+        if name in env:
+            return env[name]
+        tail = name.rsplit(".", 1)[-1]
+        return env.get(tail)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = eval_int(node.operand, env)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        lhs = eval_int(node.left, env)
+        rhs = eval_int(node.right, env)
+        if lhs is None or rhs is None:
+            return None
+        op = node.op
+        if isinstance(op, ast.Add):
+            return lhs + rhs
+        if isinstance(op, ast.Sub):
+            return lhs - rhs
+        if isinstance(op, ast.Mult):
+            return lhs * rhs
+        if isinstance(op, ast.FloorDiv):
+            return lhs // rhs if rhs else None
+        if isinstance(op, ast.Mod):
+            return lhs % rhs if rhs else None
+        if isinstance(op, ast.LShift):
+            return lhs << rhs
+        if isinstance(op, ast.RShift):
+            return lhs >> rhs
+        return None
+    if isinstance(node, ast.Call):
+        callee = call_callee(node)
+        args = [eval_int(a, env) for a in node.args]
+        if any(a is None for a in args):
+            return None
+        vals = [a for a in args if a is not None]
+        if callee == "max" and vals:
+            return max(vals)
+        if callee == "min" and vals:
+            return min(vals)
+        if callee == "int" and len(vals) == 1:
+            return vals[0]
+        return None
+    return None
+
+
+def import_map(tree: ast.Module) -> dict[str, tuple[str, str]]:
+    """``from pkg.mod import name as alias`` bindings (module- and
+    function-local): alias -> (pkg.mod, name)."""
+    out: dict[str, tuple[str, str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = (node.module, a.name)
+    return out
+
+
+def decorator_static_argnames(fn: ast.FunctionDef) -> set[str] | None:
+    """The ``static_argnames`` of a ``functools.partial(jax.jit, ...)``
+    (or bare ``jax.jit(..., static_argnames=...)``) decorator; None when
+    the function is not jit-decorated."""
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        callee = call_callee(dec)
+        is_partial_jit = callee is not None \
+            and callee.endswith("partial") and dec.args \
+            and dotted_name(dec.args[0]) in ("jax.jit", "jit")
+        is_direct_jit = callee in ("jax.jit", "jit")
+        if not (is_partial_jit or is_direct_jit):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames" \
+                    and isinstance(kw.value, (ast.Tuple, ast.List)):
+                return {e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+        return set()
+    return None
+
+
+def contains_call(tree: ast.AST, suffixes: tuple[str, ...]) -> bool:
+    """True when any call in ``tree`` has a callee ending in one of the
+    dotted ``suffixes``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            callee = call_callee(node)
+            if callee is not None and any(
+                    callee == s or callee.endswith("." + s)
+                    for s in suffixes):
+                return True
+    return False

@@ -1,0 +1,246 @@
+"""Rule family KEY: compile-cache-key completeness.
+
+The engine's compile cache (``api/compile_cache.py``) memoizes jitted
+executables under key tuples the call sites assemble by hand, and the
+kernel wrappers pass ``EngineConfig`` fields to jit-decorated builders as
+keyword statics.  A config field that changes traced behavior but not
+the key silently serves stale executables.
+
+- ``KEY001`` *field missing from a cache key*: an ``EngineConfig`` field
+  is read on a jitted/kernel-building code path (``core/engine/``,
+  ``kernels/``) but the key tuple passed to ``*_compile_cache.get``
+  neither contains the whole config object nor that field.
+- ``KEY002`` *config not hashable-by-value*: ``EngineConfig`` is not a
+  ``@dataclass(frozen=True)`` — an unfrozen config hashes by identity
+  (or not at all), so equal configs stop sharing cache entries.
+- ``KEY003`` *config-derived static not in static_argnames*: a call
+  passes ``cfg.<field>`` (directly or through a ``dict(...)`` splat) as
+  a keyword to a jit-decorated function whose ``static_argnames`` does
+  not list that keyword — the field arrives as a traced value and stops
+  specializing the executable.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (SourceFile, call_callee, class_defs,
+                                    decorator_static_argnames, dotted_name,
+                                    import_map, iter_functions,
+                                    top_level_functions)
+from repro.analysis.findings import Finding
+
+_CONFIG_CLASS = "EngineConfig"
+
+
+def config_fields(files: list[SourceFile]) -> tuple[SourceFile | None,
+                                                    ast.ClassDef | None,
+                                                    set[str]]:
+    """Locate the ``EngineConfig`` dataclass and its field names."""
+    for sf in files:
+        cls = class_defs(sf.tree).get(_CONFIG_CLASS)
+        if cls is not None:
+            fields = {n.target.id for n in cls.body
+                      if isinstance(n, ast.AnnAssign)
+                      and isinstance(n.target, ast.Name)}
+            return sf, cls, fields
+    return None, None, set()
+
+
+def resolve_callee(sf: SourceFile, files: list[SourceFile],
+                   callee: str) -> ast.FunctionDef | None:
+    """Resolve a dotted callee through the file's imports to a top-level
+    function in the scanned tree (same file first)."""
+    parts = callee.split(".")
+    local = top_level_functions(sf.tree).get(parts[0])
+    if local is not None and len(parts) == 1:
+        return local
+    imports = import_map(sf.tree)
+    by_mod: dict[str, SourceFile] = {}
+    for f in files:
+        mod = f.rel[:-3].replace("/", ".")
+        by_mod[mod] = f
+        by_mod["repro." + mod] = f
+    if parts[0] in imports:
+        mod, orig = imports[parts[0]]
+        if len(parts) == 1:
+            target = by_mod.get(mod)
+            return (top_level_functions(target.tree).get(orig)
+                    if target is not None else None)
+        target = by_mod.get(f"{mod}.{orig}")
+        return (top_level_functions(target.tree).get(parts[1])
+                if target is not None else None)
+    return None
+
+
+def _is_frozen_dataclass(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        if isinstance(dec, ast.Call) and (call_callee(dec) or "") \
+                .split(".")[-1] == "dataclass":
+            for kw in dec.keywords:
+                if kw.arg == "frozen" \
+                        and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value is True:
+                    return True
+    return False
+
+
+def _cfg_field_reads(tree: ast.AST, fields: set[str]) -> dict[str, int]:
+    """``cfg.<field>`` reads (base named ``cfg`` / ``*.cfg``) -> first
+    line."""
+    out: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr in fields:
+            base = dotted_name(node.value)
+            if base is not None and (base == "cfg"
+                                     or base.endswith(".cfg")):
+                out.setdefault(node.attr, node.lineno)
+    return out
+
+
+def _jit_scope_files(files: list[SourceFile]) -> list[SourceFile]:
+    """The jitted/kernel-building scope whose config reads must be keyed:
+    ``core/engine/`` and ``kernels/`` when present, else the whole tree
+    (fixture corpora are flat)."""
+    scoped = [sf for sf in files
+              if sf.rel.startswith(("core/engine", "kernels"))]
+    return scoped or files
+
+
+def _key_sites(sf: SourceFile) -> list[tuple[ast.expr, int]]:
+    """(key expression, line) of every ``*compile_cache*.get(key, ...)``
+    call, with ``key`` resolved through a local assignment."""
+    out: list[tuple[ast.expr, int]] = []
+    for _, fn in iter_functions(sf.tree):
+        assigns: dict[str, ast.expr] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                assigns[node.targets[0].id] = node.value
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call) and node.args):
+                continue
+            callee = call_callee(node)
+            if callee is None or not callee.endswith(".get") \
+                    or "compile_cache" not in callee:
+                continue
+            key = node.args[0]
+            if isinstance(key, ast.Name):
+                key = assigns.get(key.id, key)
+            out.append((key, key.lineno if hasattr(key, "lineno")
+                        else node.lineno))
+    return out
+
+
+def _key_coverage(key: ast.expr, fields: set[str]) -> tuple[bool, set[str]]:
+    """(covers whole config, explicitly covered field names)."""
+    covers_all = False
+    covered: set[str] = set()
+    # a "cfg" appearing only as the base of a field access (cfg.walk_tile)
+    # puts that *field* in the key, not the whole object
+    bases = {id(node.value) for node in ast.walk(key)
+             if isinstance(node, ast.Attribute)}
+    for node in ast.walk(key):
+        if isinstance(node, ast.Attribute) and node.attr in fields:
+            covered.add(node.attr)
+        if id(node) in bases:
+            continue
+        name = dotted_name(node) if isinstance(
+            node, (ast.Name, ast.Attribute)) else None
+        if name is not None and (name == "cfg" or name.endswith(".cfg")):
+            covers_all = True
+    return covers_all, covered
+
+
+def _cfg_derived_kwargs(call: ast.Call, fn: ast.FunctionDef,
+                        fields: set[str]) -> list[tuple[str, str, int]]:
+    """(kwarg name, config field, line) for every keyword of ``call``
+    whose value reads ``cfg.<field>``, expanding ``**d`` splats through a
+    local ``d = dict(...)`` assignment."""
+    out: list[tuple[str, str, int]] = []
+
+    def value_fields(expr: ast.expr) -> dict[str, int]:
+        return _cfg_field_reads(expr, fields)
+
+    dict_assigns: dict[str, ast.Call] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and call_callee(node.value) == "dict":
+            dict_assigns[node.targets[0].id] = node.value
+
+    for kw in call.keywords:
+        if kw.arg is not None:
+            for field, line in value_fields(kw.value).items():
+                out.append((kw.arg, field, line))
+        elif isinstance(kw.value, ast.Name) \
+                and kw.value.id in dict_assigns:
+            for inner in dict_assigns[kw.value.id].keywords:
+                if inner.arg is None:
+                    continue
+                for field, line in value_fields(inner.value).items():
+                    out.append((inner.arg, field, line))
+    return out
+
+
+def check(files: list[SourceFile]) -> list[Finding]:
+    cfg_sf, cfg_cls, fields = config_fields(files)
+    if cfg_cls is None or cfg_sf is None:
+        return []
+    out: list[Finding] = []
+
+    if not _is_frozen_dataclass(cfg_cls):
+        out.append(Finding(
+            "KEY002", cfg_sf.rel, cfg_cls.lineno,
+            f"{_CONFIG_CLASS} is not a frozen dataclass — it must hash "
+            "by value to serve as a jit/compile-cache key component"))
+
+    # KEY001: every field read on the jitted scope vs every key site
+    reads: dict[str, tuple[str, int]] = {}
+    for sf in _jit_scope_files(files):
+        for field, line in _cfg_field_reads(sf.tree, fields).items():
+            reads.setdefault(field, (sf.rel, line))
+    for sf in files:
+        for key, line in _key_sites(sf):
+            covers_all, covered = _key_coverage(key, fields)
+            if covers_all:
+                continue
+            for field in sorted(set(reads) - covered):
+                rf, rl = reads[field]
+                out.append(Finding(
+                    "KEY001", sf.rel, line,
+                    f"compile-cache key omits EngineConfig.{field}, "
+                    f"which is read on a jitted path ({rf}:{rl}) — "
+                    "changing it would reuse a stale executable"))
+
+    # KEY003: cfg-derived keyword statics at jitted call sites
+    for sf in files:
+        for _, fn in iter_functions(sf.tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                derived = _cfg_derived_kwargs(node, fn, fields)
+                if not derived:
+                    continue
+                callee = call_callee(node)
+                if callee is None:
+                    continue
+                target = resolve_callee(sf, files, callee)
+                if target is None:
+                    continue
+                statics = decorator_static_argnames(target)
+                if statics is None:
+                    continue        # not jit-decorated: nothing to ride
+                for kwarg, field, line in derived:
+                    if kwarg not in statics:
+                        out.append(Finding(
+                            "KEY003", sf.rel, line,
+                            f"EngineConfig.{field} is passed as keyword "
+                            f"{kwarg!r} to jitted {target.name!r} but "
+                            f"{kwarg!r} is not in its static_argnames — "
+                            "the field arrives traced and stops "
+                            "specializing the executable"))
+    return out

@@ -1,0 +1,330 @@
+"""Rule family DMA: async-copy discipline in the streamed kernel tier.
+
+Scope: every function in a module that uses ``make_async_copy`` (the
+streamed kernels and :mod:`repro.kernels.stream` itself).  The analysis
+is an AST-level dataflow pass per top-level function (nested defs are
+analyzed as part of their parent — the pipeline driver splits starts and
+waits across closures):
+
+- ``DMA001`` *unwaited start*: a copy descriptor is ``.start()``-ed but
+  no matching ``.wait()`` exists in the function.  Descriptors match by
+  identity key: the normalized (src, dst) argument pair of an explicit
+  ``make_async_copy`` call (the semaphore slot is deliberately ignored —
+  re-creating the descriptor for the wait is the documented pattern), or
+  the producer callable for descriptors obtained by calling/iterating a
+  maker (``for dma in make_dmas(...)``).
+- ``DMA002`` *wait without start*: the inverse — a wait whose descriptor
+  was never started; it would block forever (or mask a missing
+  transfer).
+- ``DMA003`` *destination read before wait*: between a start and its
+  wait (in source order), the destination ref of the in-flight copy is
+  read — the read races the DMA.  Tracked for explicit descriptors whose
+  destination is a named ref.
+- ``DMA004`` *slot-rotation collision*: inside one loop body, a start
+  and a wait on the same descriptor key resolve to the same semaphore
+  slot for every trip parity — the double buffer degenerates to a single
+  slot and the "next" transfer overwrites the one being consumed.  Slot
+  expressions are taken from the last argument of maker calls (the
+  ``make_dmas(j, slot)`` convention), from starter-helper call sites,
+  or from the ``sem.at[slot]`` index of explicit descriptors, and are
+  evaluated at both trip parities.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+from repro.analysis.astutil import (SourceFile, call_callee, dotted_name,
+                                    eval_int, iter_functions)
+from repro.analysis.findings import Finding
+
+_MAKER = "make_async_copy"
+
+
+@dataclass
+class _Event:
+    kind: str              # "start" | "wait"
+    key: str               # descriptor identity
+    line: int
+    slot: ast.expr | None  # semaphore slot expression, when recoverable
+    dst: str | None        # destination base name (explicit descriptors)
+
+
+def _norm(node: ast.expr) -> str:
+    return ast.dump(node)
+
+
+def _desc_key(call: ast.Call) -> tuple[str, str | None]:
+    """Identity key + destination base name of an explicit
+    ``make_async_copy(src, dst, sem)`` call (slot-independent)."""
+    src = _norm(call.args[0]) if len(call.args) > 0 else ""
+    dst = _norm(call.args[1]) if len(call.args) > 1 else ""
+    dst_base: str | None = None
+    if len(call.args) > 1:
+        base: ast.expr = call.args[1]
+        while isinstance(base, (ast.Attribute, ast.Subscript)):
+            if isinstance(base, ast.Attribute) and base.attr == "at":
+                base = base.value
+                break
+            base = base.value
+        dst_base = dotted_name(base)
+    return f"desc:{src}|{dst}", dst_base
+
+
+def _desc_slot(call: ast.Call) -> ast.expr | None:
+    """The ``sem.at[slot]`` index of an explicit descriptor."""
+    if len(call.args) > 2:
+        sem = call.args[2]
+        if isinstance(sem, ast.Subscript):
+            return sem.slice
+    return None
+
+
+def _is_maker(call: ast.Call) -> bool:
+    callee = call_callee(call)
+    return callee is not None and callee.split(".")[-1] == _MAKER
+
+
+def _producer_key(call: ast.Call) -> str:
+    callee = call_callee(call) or "<dynamic>"
+    return f"prod:{callee.split('.')[-1]}"
+
+
+class _Region:
+    """Start/wait events of one top-level function (incl. nested defs)."""
+
+    def __init__(self, fn: ast.FunctionDef) -> None:
+        self.fn = fn
+        self.assigns: dict[str, ast.expr] = {}
+        self.loop_iters: dict[str, ast.expr] = {}
+        self.events: list[_Event] = []
+        self._collect(fn)
+        self._inline_helpers()
+
+    # -- event collection --------------------------------------------------
+
+    def _collect(self, root: ast.AST) -> None:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                self.assigns[node.targets[0].id] = node.value
+            elif isinstance(node, ast.For) \
+                    and isinstance(node.target, ast.Name):
+                self.loop_iters[node.target.id] = node.iter
+        for node in ast.walk(root):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("start", "wait"):
+                ev = self._event_for(node.func.attr, node.func.value,
+                                     node.lineno)
+                if ev is not None:
+                    self.events.append(ev)
+        self.events.sort(key=lambda e: e.line)
+
+    def _event_for(self, kind: str, target: ast.expr,
+                   line: int) -> _Event | None:
+        """Resolve ``<target>.start()`` / ``.wait()`` to a descriptor."""
+        if isinstance(target, ast.Call):
+            return self._event_from_call(kind, target, line)
+        if isinstance(target, ast.Name):
+            expr = self.assigns.get(target.id)
+            if isinstance(expr, ast.Call):
+                return self._event_from_call(kind, expr, line)
+            it = self.loop_iters.get(target.id)
+            if isinstance(it, ast.Call):
+                if _is_maker(it):
+                    key, dst = _desc_key(it)
+                    return _Event(kind, key, line, _desc_slot(it), dst)
+                slot = it.args[-1] if it.args else None
+                return _Event(kind, _producer_key(it), line, slot, None)
+        return None
+
+    def _event_from_call(self, kind: str, call: ast.Call,
+                         line: int) -> _Event:
+        if _is_maker(call):
+            key, dst = _desc_key(call)
+            return _Event(kind, key, line, _desc_slot(call), dst)
+        slot = call.args[-1] if call.args else None
+        return _Event(kind, _producer_key(call), line, slot, None)
+
+    # -- starter-helper inlining (for slot rotation) -----------------------
+
+    def _inline_helpers(self) -> None:
+        """A nested def that only *starts* descriptors (e.g. the pipeline
+        prologue helper) makes its call sites start events, with the slot
+        argument mapped through the helper's slot parameter."""
+        helpers: dict[str, tuple[str, int]] = {}
+        for child in ast.walk(self.fn):
+            if not isinstance(child, ast.FunctionDef) or child is self.fn:
+                continue
+            sub = _collect_events_only(child, self)
+            starts = [e for e in sub if e.kind == "start"]
+            waits = [e for e in sub if e.kind == "wait"]
+            if not starts or waits:
+                continue
+            params = [a.arg for a in child.args.args]
+            slot_idx = -1
+            for e in starts:
+                if isinstance(e.slot, ast.Name) and e.slot.id in params:
+                    slot_idx = params.index(e.slot.id)
+            helpers[child.name] = (starts[0].key, slot_idx)
+        if not helpers:
+            return
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id in helpers:
+                key, slot_idx = helpers[node.func.id]
+                slot = node.args[slot_idx] \
+                    if 0 <= slot_idx < len(node.args) else None
+                self.events.append(
+                    _Event("start", key, node.lineno, slot, None))
+        self.events.sort(key=lambda e: e.line)
+
+
+def _collect_events_only(fn: ast.FunctionDef, parent: _Region) -> list[_Event]:
+    """Events of a nested def, resolved against the parent's bindings."""
+    out: list[_Event] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("start", "wait"):
+            ev = parent._event_for(node.func.attr, node.func.value,
+                                   node.lineno)
+            if ev is not None:
+                out.append(ev)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+
+def _pairing_findings(sf: SourceFile, region: _Region) -> list[Finding]:
+    out: list[Finding] = []
+    started = {e.key for e in region.events if e.kind == "start"}
+    waited = {e.key for e in region.events if e.kind == "wait"}
+    for e in region.events:
+        if e.kind == "start" and e.key not in waited:
+            out.append(Finding(
+                "DMA001", sf.rel, e.line,
+                "async copy started but never waited in this function — "
+                "the destination may be read while the DMA is in flight"))
+        if e.kind == "wait" and e.key not in started:
+            out.append(Finding(
+                "DMA002", sf.rel, e.line,
+                "async-copy wait without a matching start — the wait "
+                "blocks on a transfer that was never issued"))
+    return out
+
+
+def _read_before_wait(sf: SourceFile, region: _Region) -> list[Finding]:
+    out: list[Finding] = []
+    waits = [e for e in region.events if e.kind == "wait"]
+    for s in region.events:
+        if s.kind != "start" or s.dst is None:
+            continue
+        w_lines = [w.line for w in waits if w.key == s.key
+                   and w.line > s.line]
+        if not w_lines:
+            continue                    # DMA001 reports the missing wait
+        first_wait = min(w_lines)
+        for node in ast.walk(region.fn):
+            if isinstance(node, ast.Subscript) \
+                    and isinstance(node.ctx, ast.Load) \
+                    and s.line < node.lineno < first_wait \
+                    and dotted_name(node.value) == s.dst:
+                out.append(Finding(
+                    "DMA003", sf.rel, node.lineno,
+                    f"destination ref {s.dst!r} of the copy started at "
+                    f"line {s.line} is read before its wait at line "
+                    f"{first_wait} — the read races the DMA"))
+    return out
+
+
+def _slot_rotation(sf: SourceFile, region: _Region) -> list[Finding]:
+    out: list[Finding] = []
+    for ctx in ast.walk(region.fn):
+        if not isinstance(ctx, (ast.FunctionDef, ast.For, ast.While)):
+            continue
+        if ctx is region.fn:
+            # the top-level function itself is not a trip context —
+            # straight-line start-then-wait on one slot is the legal
+            # sequential pattern; rotation only matters inside loop
+            # bodies (ast loops and the nested fori-body closures)
+            continue
+        lines = {n.lineno for n in ast.walk(ctx)
+                 if hasattr(n, "lineno")}
+        evs = [e for e in region.events if e.line in lines]
+        starts = [e for e in evs if e.kind == "start" and e.slot is not None]
+        waits = [e for e in evs if e.kind == "wait" and e.slot is not None]
+        loop_vars = _loop_vars(ctx)
+        for s in starts:
+            for w in waits:
+                if s.key != w.key or s.line == w.line:
+                    continue
+                if _always_same_parity(s.slot, w.slot, loop_vars):
+                    out.append(Finding(
+                        "DMA004", sf.rel, s.line,
+                        "double-buffer slot rotation broken: the start at "
+                        f"line {s.line} and the wait at line {w.line} "
+                        "resolve to the same semaphore slot at every trip "
+                        "parity — the in-flight transfer overwrites the "
+                        "one being consumed"))
+    return _dedup(out)
+
+
+def _loop_vars(ctx: ast.AST) -> list[str]:
+    if isinstance(ctx, ast.FunctionDef) and ctx.args.args:
+        return [ctx.args.args[0].arg]
+    if isinstance(ctx, ast.For) and isinstance(ctx.target, ast.Name):
+        return [ctx.target.id]
+    return []
+
+
+def _always_same_parity(a: ast.expr | None, b: ast.expr | None,
+                        loop_vars: list[str]) -> bool:
+    if a is None or b is None:
+        return False
+    for trip in (0, 1):
+        env = {v: trip for v in loop_vars}
+        va, vb = eval_int(a, env), eval_int(b, env)
+        if va is None or vb is None or (va % 2) != (vb % 2):
+            return False
+    return True
+
+
+def _dedup(findings: list[Finding]) -> list[Finding]:
+    seen: set[tuple[str, str, int]] = set()
+    out: list[Finding] = []
+    for f in findings:
+        k = (f.rule, f.file, f.line)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out
+
+
+def check(files: list[SourceFile]) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in files:
+        if _MAKER not in sf.source:
+            continue
+        seen_fns: set[int] = set()
+        for qual, fn in iter_functions(sf.tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            if "<locals>" in qual:
+                continue                # analyzed as part of the parent
+            if id(fn) in seen_fns:
+                continue
+            seen_fns.add(id(fn))
+            region = _Region(fn)
+            if not region.events:
+                continue
+            out += _pairing_findings(sf, region)
+            out += _read_before_wait(sf, region)
+            out += _slot_rotation(sf, region)
+    return _dedup(out)

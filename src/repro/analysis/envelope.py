@@ -1,0 +1,537 @@
+"""Rule family ENV: probe/envelope consistency.
+
+Each ``PallasSubstrate`` capability probe (``walk_variant`` /
+``beam_variant`` / the ``cached_topk_batch`` budget check) promises that
+the shapes it admits fit the kernel it dispatches to.  The analyzer
+reconstructs both sides statically — the probe's claimed envelope from
+its byte-accounting field tuples (``_*_FIELDS``) and comparison guards,
+the kernel's demand from the ``DeviceTrie`` fields it reads and the
+``pltpu.VMEM`` scratch it allocates — and verifies claim ⊇ demand:
+
+- ``ENV001`` *byte accounting misses a table*: the dispatch path reads a
+  ``DeviceTrie`` field that no ``_*_FIELDS`` tuple referenced by the
+  probe family accounts for — the probe under-counts VMEM demand and
+  admits tries that do not fit.
+- ``ENV002`` *unbounded scratch symbol*: a config-derived symbol sizes a
+  ``pltpu.VMEM`` scratch shape but no probe comparison bounds it — a
+  caller can legally configure scratch past any budget.
+- ``ENV003`` *scratch exceeds VMEM at the envelope maximum*: the total
+  scratch bytes of one kernel builder, evaluated with every symbol at
+  its probe bound, exceed physical VMEM (``_VMEM_BYTES``, 16 MiB
+  default) — the envelope admits shapes the hardware cannot host.
+- ``ENV004`` *missing structural guard*: a kernel shape subtracts one
+  config symbol from another (``W - f``: the pool must hold the seed
+  antichain), but the family's probe has no comparison relating those
+  two fields — out-of-order configs reach the kernel with a negative
+  dimension.
+
+Convention glue (kept here, in one place): dispatch methods read the
+trie as ``t.<field>``; whole-``t`` calls are resolved one level into the
+scanned tree; kernel parameters map to config fields by name plus
+``_PARAM_ALIASES``; array-shape dims map via ``_SHAPE_ALIASES``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (SourceFile, call_callee, class_defs,
+                                    class_int_constants, class_str_tuples,
+                                    dotted_name, eval_int, import_map,
+                                    methods_of, top_level_functions)
+from repro.analysis.cachekey import config_fields, resolve_callee
+from repro.analysis.findings import Finding
+
+_DEFAULT_VMEM_BYTES = 16 << 20
+
+# kernel parameter name -> EngineConfig field it carries
+_PARAM_ALIASES = {
+    "max_terms": "max_terms_per_node",
+    "tile": "walk_tile",
+}
+
+# (array parameter, axis) -> EngineConfig field that sets the dim
+_SHAPE_ALIASES = {
+    ("tele_plane", 1): "tele_width",
+    ("r_term_plane", 1): "term_width",
+    ("loci", 1): "frontier",
+}
+
+_DTYPE_BYTES = {"int8": 1, "uint8": 1, "int16": 2, "bfloat16": 2,
+                "float16": 2, "int32": 4, "uint32": 4, "float32": 4,
+                "int64": 8, "float64": 8}
+
+
+def _trie_fields(files: list[SourceFile]) -> set[str]:
+    for sf in files:
+        cls = class_defs(sf.tree).get("DeviceTrie")
+        if cls is not None:
+            return {n.target.id for n in cls.body
+                    if isinstance(n, ast.AnnAssign)
+                    and isinstance(n.target, ast.Name)}
+    return set()
+
+
+def _substrate_classes(files: list[SourceFile]) -> list[
+        tuple[SourceFile, ast.ClassDef]]:
+    out: list[tuple[SourceFile, ast.ClassDef]] = []
+    for sf in files:
+        for cls in class_defs(sf.tree).values():
+            names = set(methods_of(cls))
+            if any(n.endswith("_variant") for n in names) \
+                    or any("_table_bytes" in ast.dump(m)
+                           for m in methods_of(cls).values()):
+                out.append((sf, cls))
+    return out
+
+
+def _probe_bounds(classes: list[tuple[SourceFile, ast.ClassDef]],
+                  cfg_fields: set[str]) -> dict[str, int]:
+    """Config symbols bounded by a probe comparison against a constant
+    limit.  Both probe styles count: the reject form ``sym > LIMIT``
+    (and ``LIMIT < sym``) and the accept form ``sym <= LIMIT`` (and
+    ``LIMIT >= sym``) — either way the symbol never exceeds LIMIT on a
+    kernel path, which is what the scratch-size evaluation needs."""
+    bounds: dict[str, int] = {}
+    for _, cls in classes:
+        env = class_int_constants(cls)
+        for m in methods_of(cls).values():
+            for node in ast.walk(m):
+                if not (isinstance(node, ast.Compare)
+                        and len(node.ops) == 1
+                        and isinstance(node.ops[0],
+                                       (ast.Lt, ast.LtE, ast.Gt, ast.GtE))):
+                    continue
+                for sym_side, lim_side in (
+                        (node.left, node.comparators[0]),
+                        (node.comparators[0], node.left)):
+                    sym = _config_sym(sym_side, cfg_fields)
+                    limit = eval_int(lim_side, env)
+                    if sym is not None and limit is not None:
+                        bounds[sym] = max(bounds.get(sym, 0), limit)
+                        break
+    return bounds
+
+
+def _config_sym(node: ast.expr, cfg_fields: set[str]) -> str | None:
+    """``cfg.frontier`` / bare ``seq_len`` / ``k`` -> the config symbol."""
+    if isinstance(node, ast.Attribute) and node.attr in cfg_fields:
+        return node.attr
+    if isinstance(node, ast.Name):
+        sym = _PARAM_ALIASES.get(node.id, node.id)
+        if sym in cfg_fields or node.id in ("k", "seq_len"):
+            return sym if sym in cfg_fields else node.id
+    return None
+
+
+# ---------------------------------------------------------------------------
+# ENV001: byte-accounting field coverage per probe family
+# ---------------------------------------------------------------------------
+
+
+def _families(cls: ast.ClassDef) -> dict[str, list[ast.FunctionDef]]:
+    """Probe family -> its methods.  ``X_variant`` seeds family ``X``
+    (probe + ``can_X_batch`` + the ``X*_batch`` dispatch); a dispatch
+    that does its own ``_table_bytes`` check (``cached_topk_batch``) is
+    its own family."""
+    meths = methods_of(cls)
+    fams: dict[str, list[ast.FunctionDef]] = {}
+    for name, m in meths.items():
+        if name.endswith("_variant"):
+            fam = name[: -len("_variant")]
+            members = [m]
+            for other, om in meths.items():
+                if other != name and (
+                        other == f"can_{fam}_batch"
+                        or (other.startswith(fam)
+                            and other.endswith("_batch"))):
+                    members.append(om)
+            fams[fam] = members
+    for name, m in meths.items():
+        if name.endswith("_batch") \
+                and not any(m in v for v in fams.values()) \
+                and "_table_bytes" in ast.dump(m):
+            fams[name] = [m]
+    return fams
+
+
+def _claimed_fields(members: list[ast.FunctionDef],
+                    tuples: dict[str, tuple[str, ...]]) -> set[str]:
+    claimed: set[str] = set()
+    for m in members:
+        for node in ast.walk(m):
+            if isinstance(node, ast.Attribute) and node.attr in tuples:
+                claimed |= set(tuples[node.attr])
+            elif isinstance(node, ast.Name) and node.id in tuples:
+                claimed |= set(tuples[node.id])
+    return claimed
+
+
+def _used_fields(sf: SourceFile, members: list[ast.FunctionDef],
+                 files: list[SourceFile],
+                 trie_fields: set[str]) -> set[str]:
+    """``t.<field>`` reads in the family methods plus (one level deep)
+    in functions the dispatch passes the whole ``t`` into."""
+    used: set[str] = set()
+
+    def t_reads(tree: ast.AST) -> set[str]:
+        return {n.attr for n in ast.walk(tree)
+                if isinstance(n, ast.Attribute) and n.attr in trie_fields
+                and isinstance(n.value, ast.Name) and n.value.id == "t"}
+
+    for m in members:
+        used |= t_reads(m)
+        for node in ast.walk(m):
+            if isinstance(node, ast.Call) and any(
+                    isinstance(a, ast.Name) and a.id == "t"
+                    for a in node.args):
+                callee = call_callee(node)
+                if callee is None:
+                    continue
+                target = resolve_callee(sf, files, callee)
+                if target is not None:
+                    used |= t_reads(target)
+    return used
+
+
+# ---------------------------------------------------------------------------
+# ENV002/ENV003: VMEM scratch vs the probe bounds
+# ---------------------------------------------------------------------------
+
+
+def _local_env(fn: ast.FunctionDef) -> dict[str, ast.expr]:
+    out: dict[str, ast.expr] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def _shape_alias(node: ast.expr) -> str | None:
+    """``<param>.shape[<i>]`` (optionally int()-wrapped) -> config field."""
+    if isinstance(node, ast.Call) and call_callee(node) == "int" \
+            and len(node.args) == 1:
+        node = node.args[0]
+    if isinstance(node, ast.Subscript) \
+            and isinstance(node.value, ast.Attribute) \
+            and node.value.attr == "shape" \
+            and isinstance(node.value.value, ast.Name) \
+            and isinstance(node.slice, ast.Constant):
+        return _SHAPE_ALIASES.get(
+            (node.value.value.id, node.slice.value))
+    return None
+
+
+def _dim_symbols(node: ast.expr, locals_: dict[str, ast.expr],
+                 cfg_fields: set[str], depth: int = 0) -> set[str]:
+    """Config symbols a shape dim depends on (through local assigns)."""
+    out: set[str] = set()
+    if depth > 6:
+        return out
+    alias = _shape_alias(node)
+    if alias is not None:
+        return {alias}
+    for leaf in ast.walk(node):
+        if isinstance(leaf, ast.Name):
+            if leaf.id in locals_:
+                out |= _dim_symbols(locals_[leaf.id], locals_,
+                                    cfg_fields, depth + 1)
+            else:
+                sym = _config_sym(leaf, cfg_fields)
+                if sym is not None:
+                    out.add(sym)
+        elif isinstance(leaf, ast.Subscript):
+            a = _shape_alias(leaf)
+            if a is not None:
+                out.add(a)
+    return out
+
+
+def _eval_dim(node: ast.expr, env: dict[str, int],
+              locals_: dict[str, ast.expr], depth: int = 0) -> int | None:
+    if depth > 6:
+        return None
+    alias = _shape_alias(node)
+    if alias is not None:
+        return env.get(alias)
+    if isinstance(node, ast.Name) and node.id in locals_ \
+            and node.id not in env:
+        return _eval_dim(locals_[node.id], env, locals_, depth + 1)
+    if isinstance(node, ast.BinOp):
+        lhs = _eval_dim(node.left, env, locals_, depth + 1)
+        rhs = _eval_dim(node.right, env, locals_, depth + 1)
+        if lhs is None or rhs is None:
+            return None
+        fake = ast.BinOp(ast.Constant(lhs), node.op, ast.Constant(rhs))
+        return eval_int(fake, {})
+    if isinstance(node, ast.Call):
+        callee = call_callee(node)
+        if callee in ("max", "min", "int"):
+            vals = [_eval_dim(a, env, locals_, depth + 1)
+                    for a in node.args]
+            if any(v is None for v in vals) or not vals:
+                return None
+            ints = [v for v in vals if v is not None]
+            return (max(ints) if callee == "max"
+                    else min(ints) if callee == "min" else ints[0])
+        return None
+    return eval_int(node, env)
+
+
+def _param_env(fn: ast.FunctionDef, bounds: dict[str, int],
+               cfg_fields: set[str]) -> dict[str, int]:
+    """Parameter values at the envelope maximum: probe bound when the
+    param aliases a bounded config symbol, else the signature default."""
+    env: dict[str, int] = dict(bounds)
+    args = fn.args
+    every = args.args + args.kwonlyargs
+    defaults = dict(zip([a.arg for a in args.args[len(args.args)
+                                                  - len(args.defaults):]],
+                        args.defaults))
+    defaults.update({a.arg: d for a, d in zip(args.kwonlyargs,
+                                              args.kw_defaults)
+                     if d is not None})
+    for a in every:
+        sym = _PARAM_ALIASES.get(a.arg, a.arg)
+        if sym in bounds:
+            env[a.arg] = bounds[sym]
+        elif a.arg in defaults:
+            v = eval_int(defaults[a.arg], {})
+            if v is not None:
+                env[a.arg] = v
+    return env
+
+
+def _vmem_calls(fn: ast.FunctionDef) -> list[ast.Call]:
+    out: list[ast.Call] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            callee = call_callee(node)
+            if callee is not None and callee.split(".")[-1] == "VMEM":
+                out.append(node)
+    return out
+
+
+def _dtype_bytes(node: ast.expr | None) -> int:
+    if node is not None:
+        name = dotted_name(node)
+        if name is not None:
+            return _DTYPE_BYTES.get(name.split(".")[-1], 4)
+    return 4
+
+
+# ---------------------------------------------------------------------------
+# ENV004: structural requirements from subtractive shape dims
+# ---------------------------------------------------------------------------
+
+
+def _structural_requirements(fn: ast.FunctionDef,
+                             cfg_fields: set[str]) -> list[
+                                 tuple[str, str, int]]:
+    """(bigger, smaller, line) for every shape dim ``A - B`` inside an
+    array constructor — the kernel requires A >= B."""
+    locals_ = _tuple_locals(fn)
+    out: list[tuple[str, str, int]] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = call_callee(node)
+        if callee is None or callee.split(".")[-1] not in (
+                "full", "zeros", "ones", "empty"):
+            continue
+        if not (node.args and isinstance(node.args[0], ast.Tuple)):
+            continue
+        for dim in node.args[0].elts:
+            if isinstance(dim, ast.BinOp) and isinstance(dim.op, ast.Sub):
+                a = _resolve_sym(dim.left, locals_, cfg_fields)
+                b = _resolve_sym(dim.right, locals_, cfg_fields)
+                if a is not None and b is not None and a != b:
+                    out.append((a, b, node.lineno))
+    return out
+
+
+def _tuple_locals(fn: ast.FunctionDef) -> dict[str, ast.expr]:
+    """Locals including tuple-unpacked ones; ``x, y = a.shape`` targets
+    map to synthetic ``a.shape[i]`` subscripts."""
+    out: dict[str, ast.expr] = {}
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        tgt, val = node.targets[0], node.value
+        if isinstance(tgt, ast.Name):
+            out[tgt.id] = val
+        elif isinstance(tgt, ast.Tuple) \
+                and all(isinstance(e, ast.Name) for e in tgt.elts):
+            if isinstance(val, ast.Tuple) \
+                    and len(val.elts) == len(tgt.elts):
+                for e, v in zip(tgt.elts, val.elts):
+                    out[e.id] = v       # type: ignore[union-attr]
+            elif isinstance(val, ast.Attribute) and val.attr == "shape":
+                for i, e in enumerate(tgt.elts):
+                    sub = ast.Subscript(value=val, slice=ast.Constant(i),
+                                        ctx=ast.Load())
+                    out[e.id] = sub     # type: ignore[union-attr]
+    return out
+
+
+def _resolve_sym(node: ast.expr, locals_: dict[str, ast.expr],
+                 cfg_fields: set[str], depth: int = 0) -> str | None:
+    if depth > 6:
+        return None
+    alias = _shape_alias(node)
+    if alias is not None:
+        return alias
+    if isinstance(node, ast.Name):
+        sym = _config_sym(node, cfg_fields)
+        if sym is not None:
+            return sym
+        if node.id in locals_:
+            return _resolve_sym(locals_[node.id], locals_, cfg_fields,
+                                depth + 1)
+    return None
+
+
+def _family_kernel_files(sf: SourceFile, members: list[ast.FunctionDef],
+                         files: list[SourceFile]) -> list[SourceFile]:
+    """Kernel modules a family dispatches into: the modules imported (at
+    module level or inside the function) by every resolved callee the
+    dispatch methods reach, plus the family's own file."""
+    by_mod: dict[str, SourceFile] = {}
+    for f in files:
+        mod = f.rel[:-3].replace("/", ".")
+        by_mod[mod] = f
+        by_mod["repro." + mod] = f
+    out: dict[str, SourceFile] = {sf.rel: sf}
+
+    def add_imports(tree: ast.AST) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                target = by_mod.get(node.module)
+                if target is not None:
+                    out[target.rel] = target
+
+    for m in members:
+        for node in ast.walk(m):
+            if isinstance(node, ast.Call):
+                callee = call_callee(node)
+                if callee is None:
+                    continue
+                target = resolve_callee(sf, files, callee)
+                if target is not None:
+                    add_imports(target)
+    return list(out.values())
+
+
+def _probe_relates(probe: ast.FunctionDef, a: str, b: str) -> bool:
+    """True when some comparison in the probe mentions both fields."""
+    for node in ast.walk(probe):
+        if isinstance(node, ast.Compare):
+            tails = {n.attr for n in ast.walk(node)
+                     if isinstance(n, ast.Attribute)} | \
+                    {n.id for n in ast.walk(node)
+                     if isinstance(n, ast.Name)}
+            if a in tails and b in tails:
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def check(files: list[SourceFile]) -> list[Finding]:
+    _, _, cfg_fields = config_fields(files)
+    trie_fields = _trie_fields(files)
+    classes = _substrate_classes(files)
+    if not classes:
+        return []
+    bounds = _probe_bounds(classes, cfg_fields)
+    capacity = _DEFAULT_VMEM_BYTES
+    for _, cls in classes:
+        consts = class_int_constants(cls)
+        if "_VMEM_BYTES" in consts:
+            capacity = consts["_VMEM_BYTES"]
+    out: list[Finding] = []
+
+    # ENV001 + ENV004 per probe family
+    for sf, cls in classes:
+        tuples = class_str_tuples(cls)
+        for fam, members in _families(cls).items():
+            dispatch = members[-1]
+            if trie_fields and tuples:
+                claimed = _claimed_fields(members, tuples)
+                used = _used_fields(sf, members, files, trie_fields)
+                for field in sorted(used - claimed):
+                    out.append(Finding(
+                        "ENV001", sf.rel, dispatch.lineno,
+                        f"probe family {fam!r} reads DeviceTrie.{field} "
+                        "on its dispatch path but no _*_FIELDS byte "
+                        "accounting includes it — the probe under-counts "
+                        "VMEM demand"))
+            probe = members[0]
+            for kf in _family_kernel_files(sf, members, files):
+                for kfn in top_level_functions(kf.tree).values():
+                    for a, b, line in _structural_requirements(
+                            kfn, cfg_fields):
+                        if not _probe_relates(probe, a, b):
+                            out.append(Finding(
+                                "ENV004", kf.rel, line,
+                                f"kernel shape requires {a} >= {b} but "
+                                f"the {fam!r} probe has no comparison "
+                                "relating them — out-of-order configs "
+                                "reach the kernel with a negative "
+                                "dimension"))
+
+    # ENV002/ENV003 per kernel builder
+    for sf in files:
+        for fn in top_level_functions(sf.tree).values():
+            vmems = _vmem_calls(fn)
+            if not vmems:
+                continue
+            locals_ = _local_env(fn)
+            env = _param_env(fn, bounds, cfg_fields)
+            total = 0
+            evaluated_all = True
+            for call in vmems:
+                shape = call.args[0] if call.args else None
+                if not isinstance(shape, ast.Tuple):
+                    evaluated_all = False
+                    continue
+                for dim in shape.elts:
+                    for sym in sorted(_dim_symbols(dim, locals_,
+                                                   cfg_fields)):
+                        if sym not in bounds:
+                            out.append(Finding(
+                                "ENV002", sf.rel, call.lineno,
+                                f"VMEM scratch dimension depends on "
+                                f"config symbol {sym!r} but no probe "
+                                "comparison bounds it — scratch can be "
+                                "configured past any budget"))
+                nbytes = _dtype_bytes(call.args[1]
+                                      if len(call.args) > 1 else None)
+                for dim in shape.elts:
+                    v = _eval_dim(dim, env, locals_)
+                    if v is None:
+                        evaluated_all = False
+                        nbytes = 0
+                        break
+                    nbytes *= v
+                total += nbytes
+            if evaluated_all and total > capacity:
+                out.append(Finding(
+                    "ENV003", sf.rel, vmems[0].lineno,
+                    f"scratch of {fn.name!r} at the envelope maximum is "
+                    f"{total} bytes, over the {capacity}-byte VMEM "
+                    "capacity — the probe admits shapes the hardware "
+                    "cannot host"))
+    # one finding per (rule, file, line)
+    seen: set[tuple[str, str, int]] = set()
+    uniq: list[Finding] = []
+    for f in out:
+        k = (f.rule, f.file, f.line)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(f)
+    return uniq

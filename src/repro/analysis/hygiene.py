@@ -1,0 +1,283 @@
+"""Rule family TRC: traced-code hygiene in kernel modules.
+
+Scope: every module that imports ``jax.experimental.pallas`` — the
+kernel bodies and their helpers all trace under pallas, where Python
+control flow must depend only on *static* values (kwonly statics,
+annotated scalar params, shapes, module constants, and arithmetic over
+those).  Branching on a tracer either crashes the trace or — worse —
+freezes one branch into the compiled kernel.
+
+- ``TRC001`` *tracer-dependent Python branch*: an ``if``/``while``/
+  ternary whose test has a non-static leaf.  The sanctioned forms are
+  ``jnp.where`` masking and ``pl.when``.
+- ``TRC002`` *dynamic trip count*: a Python ``for`` over a ``range``
+  with a non-static bound, a ``lax.fori_loop`` whose trip bounds are
+  non-static, or any ``lax.while_loop`` — kernel loops must be masked
+  fixed-trip loops (the beam kernel's ``max_steps`` pattern).
+
+Staticness is a syntactic whitelist, evaluated per function in source
+order with nested functions inheriting the enclosing static set:
+module-level names, kwonly parameters, parameters annotated
+``int``/``bool``/``str``/``float``, ``.shape`` attribute chains,
+``int``/``len``/``max``/``min``/``bool``/``abs``/``isinstance`` calls
+over statics, arithmetic/comparisons over statics, and targets of
+``for _ in range(<static>)`` (trace-time-unrolled trip indices).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.astutil import SourceFile, call_callee
+from repro.analysis.findings import Finding
+
+_PALLAS_IMPORT_RE = re.compile(
+    r"from\s+jax\.experimental(\.pallas)?\s+import\s+.*pallas"
+    r"|from\s+jax\.experimental\.pallas"
+    r"|import\s+jax\.experimental\.pallas")
+
+_STATIC_ANNOTATIONS = {"int", "bool", "str", "float"}
+_STATIC_CALLS = {"int", "len", "max", "min", "bool", "abs", "str",
+                 "tuple", "isinstance", "range"}
+_BUILTINS = {"int", "bool", "str", "float", "len", "max", "min", "abs",
+             "range", "tuple", "list", "dict", "set", "isinstance",
+             "type", "TypeError", "ValueError", "RuntimeError",
+             "AssertionError", "NotImplementedError"}
+
+
+def _module_statics(tree: ast.Module) -> set[str]:
+    out: set[str] = set(_BUILTINS)
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                out.add((a.asname or a.name).split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                out.add(a.asname or a.name)
+    return out
+
+
+def _annotation_name(node: ast.expr | None) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        # "int | None" style: static if either side is
+        left = _annotation_name(node.left)
+        return left if left in _STATIC_ANNOTATIONS \
+            else _annotation_name(node.right)
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+class _Scope:
+    def __init__(self, statics: set[str]) -> None:
+        self.statics = set(statics)
+
+    def is_static(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.statics
+        if isinstance(node, ast.Attribute):
+            # any chain through .shape is a trace-time-concrete size;
+            # otherwise the root name must be static (module constants,
+            # jnp dtypes, ...)
+            parts = []
+            cur: ast.expr = node
+            while isinstance(cur, ast.Attribute):
+                parts.append(cur.attr)
+                cur = cur.value
+            if "shape" in parts:
+                return True
+            return isinstance(cur, ast.Name) and cur.id in self.statics
+        if isinstance(node, ast.Subscript):
+            return self.is_static(node.value) and \
+                self.is_static(node.slice)
+        if isinstance(node, ast.Tuple):
+            return all(self.is_static(e) for e in node.elts)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_static(node.left) and self.is_static(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_static(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return all(self.is_static(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return self.is_static(node.left) and \
+                all(self.is_static(c) for c in node.comparators)
+        if isinstance(node, ast.Call):
+            callee = call_callee(node)
+            if callee is None or callee.split(".")[-1] not in _STATIC_CALLS:
+                return False
+            return all(self.is_static(a) for a in node.args) and \
+                all(self.is_static(k.value) for k in node.keywords)
+        if isinstance(node, ast.IfExp):
+            return self.is_static(node.test) and \
+                self.is_static(node.body) and self.is_static(node.orelse)
+        return False
+
+
+def _fn_scope(fn: ast.FunctionDef, outer: _Scope) -> _Scope:
+    scope = _Scope(outer.statics)
+    a = fn.args
+    for arg in a.kwonlyargs:
+        scope.statics.add(arg.arg)
+    for arg in a.args + a.posonlyargs:
+        ann = _annotation_name(arg.annotation)
+        if ann in _STATIC_ANNOTATIONS:
+            scope.statics.add(arg.arg)
+    scope.statics.add(fn.name)
+    return scope
+
+
+def _bind_targets(tgt: ast.expr, static: bool, scope: _Scope) -> None:
+    names = [n.id for n in ast.walk(tgt) if isinstance(n, ast.Name)]
+    if static:
+        scope.statics |= set(names)
+    else:
+        scope.statics -= set(names)
+
+
+def _check_embedded_ifexp(stmt: ast.stmt, scope: _Scope, sf: SourceFile,
+                          out: list[Finding]) -> None:
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return      # nested defs get their own pass
+        if isinstance(node, ast.IfExp) and not scope.is_static(node.test):
+            out.append(Finding(
+                "TRC001", sf.rel, node.lineno,
+                "conditional expression on a traced value in kernel "
+                "code — use jnp.where (or pl.when) instead of a Python "
+                "branch"))
+
+
+def _check_loop_calls(stmt: ast.stmt, scope: _Scope, sf: SourceFile,
+                      out: list[Finding]) -> None:
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        if not isinstance(node, ast.Call):
+            continue
+        callee = call_callee(node)
+        if callee is None:
+            continue
+        base = callee.split(".")[-1]
+        if base == "while_loop":
+            out.append(Finding(
+                "TRC002", sf.rel, node.lineno,
+                "lax.while_loop in kernel code has a data-dependent "
+                "trip count — use a masked fixed-trip fori_loop "
+                "(the max_steps pattern)"))
+        elif base == "fori_loop" and len(node.args) >= 2:
+            for bound in node.args[:2]:
+                if not scope.is_static(bound):
+                    out.append(Finding(
+                        "TRC002", sf.rel, node.lineno,
+                        "fori_loop trip bound is not static in kernel "
+                        "code — dynamic trip counts must become masked "
+                        "fixed-trip loops"))
+                    break
+
+
+def _walk_body(body: list[ast.stmt], scope: _Scope, sf: SourceFile,
+               out: list[Finding]) -> None:
+    for stmt in body:
+        _check_embedded_ifexp(stmt, scope, sf, out)
+        _check_loop_calls(stmt, scope, sf, out)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if isinstance(stmt, ast.FunctionDef):
+                inner = _fn_scope(stmt, scope)
+                _walk_body(stmt.body, inner, sf, out)
+            scope.statics.add(stmt.name)
+        elif isinstance(stmt, ast.Assign):
+            static = scope.is_static(stmt.value)
+            if isinstance(stmt.value, ast.Attribute) \
+                    and stmt.value.attr == "shape":
+                static = True       # x, y = a.shape unpacks to statics
+            for t in stmt.targets:
+                _bind_targets(t, static, scope)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            _bind_targets(stmt.target, scope.is_static(stmt.value), scope)
+        elif isinstance(stmt, ast.AugAssign):
+            if not scope.is_static(stmt.value):
+                _bind_targets(stmt.target, False, scope)
+        elif isinstance(stmt, ast.If):
+            if not scope.is_static(stmt.test):
+                out.append(Finding(
+                    "TRC001", sf.rel, stmt.lineno,
+                    "Python `if` on a traced value in kernel code — "
+                    "the branch freezes at trace time; use jnp.where "
+                    "or pl.when"))
+            _walk_body(stmt.body, scope, sf, out)
+            _walk_body(stmt.orelse, scope, sf, out)
+        elif isinstance(stmt, ast.While):
+            if not scope.is_static(stmt.test):
+                out.append(Finding(
+                    "TRC001", sf.rel, stmt.lineno,
+                    "Python `while` on a traced value in kernel code — "
+                    "use a masked fixed-trip loop"))
+            _walk_body(stmt.body, scope, sf, out)
+        elif isinstance(stmt, ast.For):
+            it = stmt.iter
+            it_callee = call_callee(it) if isinstance(it, ast.Call) else None
+            static_range = it_callee is not None \
+                and it_callee.split(".")[-1] == "range"
+            if static_range and isinstance(it, ast.Call):
+                bad = [a for a in it.args if not scope.is_static(a)]
+                if bad:
+                    out.append(Finding(
+                        "TRC002", sf.rel, stmt.lineno,
+                        "Python `for` over a non-static range in kernel "
+                        "code — the trip count must be static (masked "
+                        "fixed-trip loop)"))
+                _bind_targets(stmt.target, not bad, scope)
+            else:
+                _bind_targets(stmt.target, False, scope)
+            _walk_body(stmt.body, scope, sf, out)
+            _walk_body(stmt.orelse, scope, sf, out)
+        elif isinstance(stmt, (ast.With, ast.Try)):
+            for sub in ast.iter_child_nodes(stmt):
+                if isinstance(sub, ast.stmt):
+                    _walk_body([sub], scope, sf, out)
+        elif isinstance(stmt, ast.ClassDef):
+            for m in stmt.body:
+                if isinstance(m, ast.FunctionDef):
+                    inner = _fn_scope(m, scope)
+                    _walk_body(m.body, inner, sf, out)
+            scope.statics.add(stmt.name)
+
+
+def check(files: list[SourceFile]) -> list[Finding]:
+    out: list[Finding] = []
+    for sf in files:
+        if not _PALLAS_IMPORT_RE.search(sf.source):
+            continue
+        module_scope = _Scope(_module_statics(sf.tree))
+        for node in sf.tree.body:
+            if isinstance(node, ast.FunctionDef):
+                _walk_body(node.body, _fn_scope(node, module_scope),
+                           sf, out)
+            elif isinstance(node, ast.ClassDef):
+                for m in node.body:
+                    if isinstance(m, ast.FunctionDef):
+                        _walk_body(m.body, _fn_scope(m, module_scope),
+                                   sf, out)
+    seen: set[tuple[str, str, int]] = set()
+    uniq: list[Finding] = []
+    for f in out:
+        key = (f.rule, f.file, f.line)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(f)
+    return uniq

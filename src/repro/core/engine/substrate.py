@@ -147,6 +147,17 @@ class PallasSubstrate(Substrate):
     # larger ones the DMA-streamed tier
     _DEFAULT_VMEM_BUDGET = 8 << 20
 
+    # physical per-core VMEM; a user-set memory_budget is clamped here —
+    # a larger budget would declare tables "resident" that can never fit
+    _VMEM_BYTES = 16 << 20
+
+    # the DMA-streamed tier stages [lanes, tile] windows in VMEM scratch,
+    # so the stream-tile widths (EngineConfig.walk_tile / link_tile /
+    # emit_tile) and the teleport-plane width are part of the envelope:
+    # beyond these the scratch alone would crowd out VMEM and the jnp
+    # fallback is the right tool
+    _STREAM_MAX_TILE = 1024
+
     # fused locus-DP static-shape envelope: beyond these the fused
     # sweep stops being a sensible single kernel (trace size / VMEM) and
     # the jnp DP is the right tool.  The per-step trip count grows as
@@ -188,7 +199,8 @@ class PallasSubstrate(Substrate):
     _CACHE_FIELDS = ("topk_score", "topk_sid")
 
     def _budget(self, cfg: EngineConfig) -> int:
-        return cfg.memory_budget or self._DEFAULT_VMEM_BUDGET
+        budget = cfg.memory_budget or self._DEFAULT_VMEM_BUDGET
+        return min(budget, self._VMEM_BYTES)
 
     @staticmethod
     def _table_bytes(t: DeviceTrie, fields) -> int:
@@ -217,7 +229,9 @@ class PallasSubstrate(Substrate):
                     or cfg.rule_matches > self._FUSE_MAX_RULE_MATCHES
                     or cfg.max_lhs_len > self._FUSE_MAX_LHS
                     or cfg.max_terms_per_node > self._FUSE_MAX_TERMS
-                    or cfg.teleports > self._FUSE_MAX_TELEPORTS)
+                    or cfg.teleports > self._FUSE_MAX_TELEPORTS
+                    or cfg.tele_width > self._FUSE_MAX_TELEPORTS
+                    or cfg.term_width > self._FUSE_MAX_TERMS)
 
     def walk_variant(self, t: DeviceTrie, cfg: EngineConfig,
                      seq_len: int) -> str | None:
@@ -226,17 +240,22 @@ class PallasSubstrate(Substrate):
         (HBM tables behind the DMA tier), or ``None`` (jnp fallback —
         static shapes outside the kernel envelope)."""
         budget = self._budget(cfg)
+        # the streamed tier stages [lanes, tile]-wide windows in VMEM
+        # scratch, so the stream-tile widths are part of its envelope
+        tiles_ok = (cfg.walk_tile <= self._STREAM_MAX_TILE
+                    and cfg.link_tile <= self._STREAM_MAX_TILE)
         if self._rule_free(t, cfg):
             if self._table_bytes(t, self._PREFIX_FIELDS) <= budget:
                 return "resident"
-            return "streamed"
+            return "streamed" if tiles_ok else None
         if not self._fuse_shapes_ok(cfg, seq_len):
             return None
         total = self._table_bytes(
             t, self._WALK_STREAM_FIELDS + self._WALK_RESIDENT_FIELDS)
         if total <= budget:
             return "resident"
-        if self._table_bytes(t, self._WALK_RESIDENT_FIELDS) <= budget:
+        if tiles_ok and \
+                self._table_bytes(t, self._WALK_RESIDENT_FIELDS) <= budget:
             return "streamed"
         return None
 
@@ -280,7 +299,10 @@ class PallasSubstrate(Substrate):
             return None
         if self._table_bytes(t, self._BEAM_FIELDS) <= self._budget(cfg):
             return "resident"
-        return "streamed"
+        # the streamed tier's emit-window scratch is [lanes, emit_tile]
+        if cfg.emit_tile <= self._STREAM_MAX_TILE:
+            return "streamed"
+        return None
 
     def can_beam_batch(self, t, cfg, k):
         return self.beam_variant(t, cfg, k) is not None

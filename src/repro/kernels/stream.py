@@ -42,6 +42,11 @@ def pipelined_dma(n: int, make_dmas) -> None:
     the descriptor is recreated for the wait, which is the documented
     start/wait pattern.  ``n`` must be static.
     """
+    if not isinstance(n, int):
+        raise TypeError(
+            "pipelined_dma: trip count n must be a static Python int "
+            f"(got {type(n).__name__}) — a traced count cannot drive "
+            "DMA start/wait pairing")
     if n <= 0:
         return
 
@@ -79,6 +84,23 @@ class StreamTable:
         self.buf = buf_ref
         self.sem = sem_ref
         self.width = int(width)
+        if self.width <= 0:
+            raise ValueError(
+                f"StreamTable: window width must be positive, got "
+                f"{self.width}")
+        if len(hbm_ref.shape) == 1 and self.width & (self.width - 1):
+            # flat CSR tables come from pack_stream_tiles, whose tiles
+            # are power-of-two so every window stays lane-aligned; row
+            # planes (2-D) stream whole rows of arbitrary width
+            raise ValueError(
+                f"StreamTable: stream tile width must be a power of two "
+                f"for 1-D tables, got {self.width} — the tile-aligned "
+                f"layout only guarantees window-covers-row for pow2 tiles")
+        if int(buf_ref.shape[-1]) < self.width:
+            raise ValueError(
+                f"StreamTable: staging buffer is narrower than the "
+                f"window ({int(buf_ref.shape[-1])} < {self.width}) — "
+                f"each DMA would write past its staging row")
 
     def _dma(self, j, slot, start):
         if len(self.hbm.shape) == 2:              # row plane: whole row
@@ -96,6 +118,11 @@ class StreamTable:
         resident gathers do."""
         flat = starts.reshape(-1)
         n = int(flat.shape[0])
+        if n > int(self.buf.shape[0]):
+            raise ValueError(
+                f"StreamTable.windows: {n} DMA stages but only "
+                f"{int(self.buf.shape[0])} staging rows — each stage "
+                f"must own its own staging row (disjoint destinations)")
 
         def make(j, slot):
             start = jax.lax.dynamic_index_in_dim(flat, j, keepdims=False)

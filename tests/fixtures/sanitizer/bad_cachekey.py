@@ -1,0 +1,27 @@
+"""Planted compile-cache-key violations (analyzed, never imported)."""
+
+from functools import partial
+
+import jax
+
+
+class _Cache(dict):
+    def get(self, key, factory=None):        # the analyzer keys on the name
+        return dict.get(self, key)
+
+
+compile_cache = _Cache()
+
+
+@partial(jax.jit, static_argnames=("width",))
+def build_kernel(x, *, width=8, depth=4):
+    return x
+
+
+def jitted_path(cfg, x):
+    return build_kernel(x, width=cfg.walk_tile, depth=cfg.emit_tile)  # PLANT: KEY003
+
+
+def lookup(cfg, batch):
+    key = ("batch", batch, cfg.walk_tile)  # PLANT: KEY001
+    return compile_cache.get(key, None)

@@ -1,0 +1,33 @@
+"""Planted DMA-discipline violations (analyzed, never imported)."""
+
+import jax
+from jax.experimental import pallas as pl            # noqa: F401
+from jax.experimental.pallas import tpu as pltpu     # noqa: F401
+
+
+def unwaited_start(src, dst, sem):
+    pltpu.make_async_copy(src.at[0], dst.at[0], sem.at[0]).start()  # PLANT: DMA001
+    return 0
+
+
+def wait_without_start(src, dst, sem):
+    pltpu.make_async_copy(src.at[0], dst.at[0], sem.at[0]).wait()  # PLANT: DMA002
+    return 0
+
+
+def read_races_dma(src, dst, sem):
+    pltpu.make_async_copy(src.at[0], dst.at[0], sem.at[0]).start()
+    x = dst[0]  # PLANT: DMA003
+    pltpu.make_async_copy(src.at[0], dst.at[0], sem.at[0]).wait()
+    return x
+
+
+def broken_rotation(n: int, make_dmas):
+    def body(j, _):
+        for dma in make_dmas(j, j % 2):
+            dma.start()  # PLANT: DMA004
+        for dma in make_dmas(j, j % 2):
+            dma.wait()
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)

@@ -1,0 +1,25 @@
+"""Planted traced-code hygiene violations (analyzed, never imported)."""
+
+import jax
+import jax.numpy as jnp                              # noqa: F401
+from jax.experimental import pallas as pl            # noqa: F401
+
+
+def frozen_branch(x):
+    if x.sum() > 0:  # PLANT: TRC001
+        x = x + 1
+    return x
+
+
+def frozen_ternary(x):
+    return x + 1 if x.any() else x  # PLANT: TRC001
+
+
+def dynamic_python_loop(x, n):
+    for _ in range(n):  # PLANT: TRC002
+        x = x + 1
+    return x
+
+
+def dynamic_while(cond, body, x):
+    return jax.lax.while_loop(cond, body, x)  # PLANT: TRC002

@@ -1,0 +1,10 @@
+"""Planted VMEM-scratch envelope violations (analyzed, never imported)."""
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl            # noqa: F401
+from jax.experimental.pallas import tpu as pltpu
+
+
+def walk_kernel(qs, cols, node, *, walk_tile=8, frontier=4):
+    scratch = pltpu.VMEM((frontier, walk_tile), jnp.int32)  # PLANT: ENV002 ENV003
+    return qs, cols, node, scratch

@@ -1,0 +1,41 @@
+"""Planted probe/envelope violations (analyzed, never imported)."""
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class DeviceTrie(NamedTuple):
+    first_child: object
+    edge_char: object
+    edge_child: object
+    tele_plane: object
+
+
+class FixtureSubstrate:
+    _WALK_FIELDS = ("first_child", "edge_char", "edge_child")
+    _MAX_FRONTIER = 1 << 20
+
+    @staticmethod
+    def _table_bytes(t, fields):
+        return 4 * len(fields)
+
+    def walk_variant(self, t, cfg, seq_len):
+        if cfg.frontier > self._MAX_FRONTIER:
+            return None
+        if self._table_bytes(t, self._WALK_FIELDS) <= cfg.memory_budget:
+            return "resident"
+        return "streamed"
+
+    def walk_batch(self, t, cfg, qs):  # PLANT: ENV001
+        from bad_kernels import walk_kernel
+
+        cols = t.tele_plane               # read but not in _WALK_FIELDS
+        node = t.first_child
+        return walk_kernel(qs, cols, node, walk_tile=cfg.walk_tile)
+
+
+def beam_seed_pool(loci, gens=16):
+    bq, f = loci.shape
+    pool = jnp.zeros((bq, gens - f), jnp.int32)  # PLANT: ENV004
+    return pool

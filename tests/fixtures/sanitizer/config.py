@@ -1,0 +1,17 @@
+"""Fixture config: deliberately NOT a frozen dataclass.
+
+This corpus is analyzed, never imported.  Each ``# PLANT: RULE-ID``
+comment marks a line the sanitizer must report with exactly that rule.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass
+class EngineConfig:  # PLANT: KEY002
+    frontier: int = 4
+    gens: int = 16
+    expand: int = 4
+    walk_tile: int = 8
+    emit_tile: int = 8
+    memory_budget: int = 0

@@ -1,0 +1,273 @@
+"""Kernel-sanitizer tests: the planted fixture corpus, the clean pass
+over the real tree, waiver semantics, the CLI gate, and the runtime
+mirrors of the static checks (stream asserts, probe tile bounds, and
+compile-cache-key completeness)."""
+
+import re
+from dataclasses import replace
+from pathlib import Path
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.runner import default_root, run_all
+from repro.api.compile_cache import CompileCache
+from repro.core.engine.structs import EngineConfig
+from repro.core.engine.substrate import PallasSubstrate
+from repro.kernels.stream import StreamTable, pipelined_dma
+
+FIXTURES = Path(__file__).parent / "fixtures" / "sanitizer"
+
+_PLANT_RE = re.compile(r"#\s*PLANT:\s*([A-Z0-9 ]+?)\s*$")
+
+
+def _planted() -> set[tuple[str, str, int]]:
+    out = set()
+    for path in sorted(FIXTURES.glob("*.py")):
+        for i, line in enumerate(path.read_text().splitlines(), start=1):
+            m = _PLANT_RE.search(line)
+            if m:
+                for rule in m.group(1).split():
+                    out.add((rule, path.name, i))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus: every plant reported, nothing else
+# ---------------------------------------------------------------------------
+
+
+def test_fixture_corpus_has_all_rule_families():
+    families = {rule[:3] for rule, _, _ in _planted()}
+    assert {"DMA", "KEY", "ENV", "TRC"} <= families
+
+
+def test_every_planted_violation_reported_with_rule_and_location():
+    findings = run_all(FIXTURES)
+    reported = {(f.rule, f.file, f.line) for f in findings if not f.waived}
+    planted = _planted()
+    assert planted, "fixture corpus lost its PLANT markers"
+    missing = planted - reported
+    assert not missing, f"planted violations not reported: {sorted(missing)}"
+
+
+def test_fixture_corpus_reports_nothing_unplanted():
+    findings = run_all(FIXTURES)
+    reported = {(f.rule, f.file, f.line) for f in findings if not f.waived}
+    extra = reported - _planted()
+    assert not extra, f"unplanted findings (analyzer noise): {sorted(extra)}"
+
+
+def test_each_dma_rule_planted_individually():
+    findings = run_all(FIXTURES)
+    rules = {f.rule for f in findings}
+    for rule in ("DMA001", "DMA002", "DMA003", "DMA004",
+                 "KEY001", "KEY002", "KEY003",
+                 "ENV001", "ENV002", "ENV003", "ENV004",
+                 "TRC001", "TRC002"):
+        assert rule in rules, f"rule {rule} never fired on its fixture"
+
+
+# ---------------------------------------------------------------------------
+# clean pass + CLI gate
+# ---------------------------------------------------------------------------
+
+
+def test_real_tree_is_clean():
+    findings = [f for f in run_all(default_root()) if not f.waived]
+    assert not findings, "sanitizer findings on src/repro:\n" + \
+        "\n".join(f.format() for f in findings)
+
+
+def test_cli_gate_fails_on_fixtures_and_passes_on_repo(capsys):
+    assert analysis_main([str(FIXTURES), "--fail-on-findings"]) == 1
+    capsys.readouterr()
+    assert analysis_main(["--fail-on-findings"]) == 0
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out
+
+
+# ---------------------------------------------------------------------------
+# waivers
+# ---------------------------------------------------------------------------
+
+
+def _write_tree(tmp_path, source: str) -> Path:
+    (tmp_path / "mod.py").write_text(source)
+    return tmp_path
+
+
+def test_waiver_with_reason_suppresses(tmp_path):
+    root = _write_tree(tmp_path, (
+        "from jax.experimental import pallas as pl\n"
+        "import jax\n"
+        "def f(cond, body, x):\n"
+        "    # sanitizer: waive[TRC002] reference path, traced on purpose\n"
+        "    return jax.lax.while_loop(cond, body, x)\n"))
+    findings = run_all(root)
+    assert [f.rule for f in findings] == ["TRC002"]
+    assert findings[0].waived
+
+
+def test_waiver_only_covers_its_rule(tmp_path):
+    root = _write_tree(tmp_path, (
+        "from jax.experimental import pallas as pl\n"
+        "import jax\n"
+        "def f(cond, body, x):\n"
+        "    # sanitizer: waive[TRC001] wrong rule id\n"
+        "    return jax.lax.while_loop(cond, body, x)\n"))
+    active = [f for f in run_all(root) if not f.waived]
+    assert [f.rule for f in active] == ["TRC002"]
+
+
+def test_waiver_without_reason_is_itself_reported(tmp_path):
+    root = _write_tree(tmp_path, (
+        "from jax.experimental import pallas as pl\n"
+        "import jax\n"
+        "def f(cond, body, x):\n"
+        "    # sanitizer: waive[TRC002]\n"
+        "    return jax.lax.while_loop(cond, body, x)\n"))
+    findings = run_all(root)
+    rules = {f.rule: f.waived for f in findings}
+    assert rules.get("WAIV01") is False      # active finding
+    assert rules.get("TRC002") is True       # still suppressed
+
+
+# ---------------------------------------------------------------------------
+# satellite: compile-cache keys stay complete (one regression per field)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("field,value", [
+    ("memory_budget", 1 << 15),
+    ("tele_width", 3),
+    ("term_width", 3),
+    ("walk_tile", 16),
+    ("emit_tile", 16),
+    ("link_tile", 16),
+])
+def test_config_field_changes_produce_distinct_cache_entries(field, value):
+    cache = CompileCache(maxsize=8)
+    base = EngineConfig()
+    changed = replace(base, **{field: value})
+    assert base != changed
+    cache.get(("batch", 8, 16, 10, base), lambda: object())
+    cache.get(("batch", 8, 16, 10, changed), lambda: object())
+    assert len(cache) == 2, \
+        f"EngineConfig.{field} change reused a stale cache entry"
+    assert cache.misses == 2
+
+
+def test_index_recompiles_when_memory_budget_changes():
+    from repro.core import CompletionIndex
+
+    strings = ["alpha", "alphabet", "beta"]
+    idx = CompletionIndex.build(strings, [3, 2, 1], [], kind="plain")
+    idx.complete(["al"], k=2)
+    before = idx._compile_cache.misses
+    idx.set_memory_budget(1 << 14)
+    idx.complete(["al"], k=2)
+    assert idx._compile_cache.misses > before, \
+        "memory_budget change did not re-key the compiled entry point"
+
+
+# ---------------------------------------------------------------------------
+# satellite: stream.py runtime asserts mirror the static checks
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_dma_rejects_traced_trip_count():
+    with pytest.raises(TypeError, match="static Python int"):
+        pipelined_dma(jnp.int32(4), lambda j, s: [])
+
+
+def test_stream_table_rejects_non_pow2_width_on_flat_tables():
+    hbm = np.zeros((64,), np.int32)
+    buf = np.zeros((4, 8), np.int32)
+    with pytest.raises(ValueError, match="power of two"):
+        StreamTable(hbm, buf, None, width=6)
+
+
+def test_stream_table_allows_arbitrary_width_row_planes():
+    hbm = np.zeros((16, 6), np.int32)                # 2-D plane, width 6
+    buf = np.zeros((4, 8), np.int32)
+    t = StreamTable(hbm, buf, None, width=6)
+    assert t.width == 6
+
+
+def test_stream_table_rejects_narrow_staging_buffer():
+    hbm = np.zeros((64,), np.int32)
+    buf = np.zeros((4, 4), np.int32)
+    with pytest.raises(ValueError, match="narrower than the window"):
+        StreamTable(hbm, buf, None, width=8)
+
+
+def test_stream_table_rejects_nonpositive_width():
+    hbm = np.zeros((64,), np.int32)
+    buf = np.zeros((4, 8), np.int32)
+    with pytest.raises(ValueError, match="positive"):
+        StreamTable(hbm, buf, None, width=0)
+
+
+def test_stream_windows_reject_more_stages_than_staging_rows():
+    hbm = np.zeros((64,), np.int32)
+    buf = np.zeros((4, 8), np.int32)
+    t = StreamTable(hbm, buf, None, width=8)
+    with pytest.raises(ValueError, match="staging row"):
+        t.windows(np.zeros((5,), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# satellite: probe bounds mirror the scratch envelope
+# ---------------------------------------------------------------------------
+
+
+def _fake_trie(n: int, rule_free: bool = True) -> SimpleNamespace:
+    fields = {}
+    for f in (PallasSubstrate._WALK_STREAM_FIELDS
+              + PallasSubstrate._WALK_RESIDENT_FIELDS
+              + PallasSubstrate._PREFIX_FIELDS
+              + PallasSubstrate._BEAM_FIELDS
+              + PallasSubstrate._CACHE_FIELDS):
+        fields[f] = np.zeros((n,), np.int32)
+    fields["s_edge_child"] = np.zeros((0 if rule_free else n,), np.int32)
+    return SimpleNamespace(**fields)
+
+
+def test_budget_is_clamped_to_physical_vmem():
+    sub = PallasSubstrate()
+    assert sub._budget(EngineConfig(memory_budget=1 << 30)) == \
+        PallasSubstrate._VMEM_BYTES
+    assert sub._budget(EngineConfig(memory_budget=1 << 10)) == 1 << 10
+
+
+def test_walk_variant_rejects_oversized_stream_tile():
+    sub = PallasSubstrate()
+    t = _fake_trie(1 << 20)                          # tables over budget
+    cfg = EngineConfig(memory_budget=1 << 10)
+    assert sub.walk_variant(t, cfg, 16) == "streamed"
+    wide = replace(cfg, walk_tile=PallasSubstrate._STREAM_MAX_TILE * 2)
+    assert sub.walk_variant(t, wide, 16) is None
+    wide = replace(cfg, link_tile=PallasSubstrate._STREAM_MAX_TILE * 2)
+    assert sub.walk_variant(t, wide, 16) is None
+
+
+def test_beam_variant_rejects_oversized_emit_tile():
+    sub = PallasSubstrate()
+    t = _fake_trie(1 << 20)
+    cfg = EngineConfig(memory_budget=1 << 10)
+    assert sub.beam_variant(t, cfg, 10) == "streamed"
+    wide = replace(cfg, emit_tile=PallasSubstrate._STREAM_MAX_TILE * 2)
+    assert sub.beam_variant(t, wide, 10) is None
+
+
+def test_fuse_envelope_bounds_rule_plane_widths():
+    sub = PallasSubstrate()
+    assert sub._fuse_shapes_ok(EngineConfig(), 16)
+    assert not sub._fuse_shapes_ok(
+        EngineConfig(tele_width=PallasSubstrate._FUSE_MAX_TELEPORTS + 1), 16)
+    assert not sub._fuse_shapes_ok(
+        EngineConfig(term_width=PallasSubstrate._FUSE_MAX_TERMS + 1), 16)
