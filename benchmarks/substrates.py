@@ -19,7 +19,12 @@ structures are shared), across two axes:
   so phase 1 and phase 2 go through the HBM-streaming kernels
   (``streamed_walk``/``streamed_beam`` columns, from the
   ``walk_variant``/``beam_variant`` probes).  Off-TPU these measure the
-  interpret-mode emulation of the DMA pipeline, not real overlap.
+  interpret-mode emulation of the DMA pipeline, not real overlap;
+- *compressed layout* (format v4): packed twins of the ET rows record
+  the bytes/string drop (``compression``/``bytes_per_string`` columns),
+  and a fixed-budget pair shows the tier flip — at the same
+  ``FLIP_BUDGET`` the uncompressed ET index runs DMA-streamed while the
+  packed layout fits VMEM-resident.
 
 On CPU the pallas column runs the kernels in interpret mode — that
 measures dispatch correctness and overhead, not kernel speed; the TPU run
@@ -43,21 +48,34 @@ from benchmarks.common import (SIZES, build_index, dataset, emit,
                                fixed_batches, time_batches)
 from repro.data.strings import make_workload
 
-# (label, index kind, build kwargs, streamed) — the two phase-2 engines
-# benchmarked in B7 on ET, the rule-bearing walk workloads for the fused
-# locus-DP kernel (tt = link store, ht = links + teleports), a rule-free
-# beam row where phase 1 is the trivial prefix walk so the beam phase-2
-# kernel dominates the measurement, and two DMA-streamed-tier rows (the
-# same workloads under a VMEM budget that evicts every dictionary-sized
-# table, so the HBM streaming path is what gets timed)
+# a fixed VMEM budget sized between the packed and uncompressed resident
+# footprints of the smoke-scale ET index: at the same budget the
+# uncompressed layout is forced onto the DMA-streamed tier while the
+# packed (format v4) layout fits VMEM-resident — the tier flip the
+# compressed layout exists to buy
+FLIP_BUDGET = 1 << 20
+
+# (label, index kind, build kwargs, streamed, compression, budget) — the
+# two phase-2 engines benchmarked in B7 on ET, the rule-bearing walk
+# workloads for the fused locus-DP kernel (tt = link store, ht = links +
+# teleports), a rule-free beam row where phase 1 is the trivial prefix
+# walk so the beam phase-2 kernel dominates the measurement, two
+# DMA-streamed-tier rows (the same workloads under a VMEM budget that
+# evicts every dictionary-sized table, so the HBM streaming path is what
+# gets timed), compressed (format v4) twins of the ET rows, and the
+# fixed-budget flip pair described at FLIP_BUDGET above
 CASES = [
-    ("beam", "et", {}, False),
-    ("cached_k16", "et", {"cache_k": 16}, False),
-    ("beam", "tt", {}, False),
-    ("beam", "ht", {}, False),
-    ("beam", "plain", {}, False),
-    ("beam", "plain", {}, True),
-    ("beam", "ht", {}, True),
+    ("beam", "et", {}, False, "none", None),
+    ("cached_k16", "et", {"cache_k": 16}, False, "none", None),
+    ("beam", "tt", {}, False, "none", None),
+    ("beam", "ht", {}, False, "none", None),
+    ("beam", "plain", {}, False, "none", None),
+    ("beam", "plain", {}, True, "none", None),
+    ("beam", "ht", {}, True, "none", None),
+    ("beam", "et", {}, False, "packed", None),
+    ("cached_k16", "et", {"cache_k": 16}, False, "packed", None),
+    ("beam", "et", {}, False, "none", FLIP_BUDGET),
+    ("beam", "et", {}, False, "packed", FLIP_BUDGET),
 ]
 SUBSTRATES = ("jnp", "pallas")
 
@@ -89,14 +107,17 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
     # with, or the fused_walk column could misreport the timed path
     from repro.api.compile_cache import bucket_size
     seq_len = bucket_size(max(len(q) for q in qs))
-    for engine, kind, kw, streamed in CASES:
-        idx = build_index(ds, kind, **kw)
+    for engine, kind, kw, streamed, compression, budget in CASES:
+        idx = build_index(ds, kind, compression=compression, **kw)
         if streamed:
             idx.set_memory_budget(_streamed_budget(idx))
-        # streamed rows only make sense on the pallas substrate (the jnp
-        # reference ignores the VMEM budget) — the resident cases keep
-        # the jnp twin as the reference column
-        for substrate in SUBSTRATES if not streamed else ("pallas",):
+        elif budget is not None:
+            idx.set_memory_budget(budget)
+        # streamed and fixed-budget rows only make sense on the pallas
+        # substrate (the jnp reference ignores the VMEM budget) — the
+        # resident cases keep the jnp twin as the reference column
+        for substrate in (SUBSTRATES if not streamed and budget is None
+                          else ("pallas",)):
             idx.set_substrate(substrate)
             sub = eng.get_substrate(substrate)
             walk_v = sub.walk_variant(idx.device, idx.cfg, seq_len) \
@@ -116,6 +137,7 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
                 "fused_beam": beam_v is not None,
                 "streamed_walk": walk_v == "streamed",
                 "streamed_beam": beam_v == "streamed",
+                "compression": compression,
                 "memory_budget": idx.memory_budget,
                 "bytes_per_string": round(idx.stats.bytes_per_string, 1),
                 "us_per_q": round(sec * 1e6, 1),
@@ -124,8 +146,11 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
 
 
 def _table(rows):
-    emit([[r["engine"], r["kind"], r["substrate"], r["us_per_q"]]
-          for r in rows], ["engine", "kind", "substrate", "us_per_q"])
+    emit([[r["engine"], r["kind"], r["substrate"], r["compression"],
+           r["bytes_per_string"], r["us_per_q"]]
+          for r in rows],
+         ["engine", "kind", "substrate", "compression", "bytes_per_string",
+          "us_per_q"])
 
 
 def b9_substrates():

@@ -94,18 +94,26 @@ def _row_key(row: dict) -> tuple:
     fused beam kernel claims them, or a row moving to the streamed
     tier), the row starts a fresh history instead of being gated against
     timings of a different code path.  Rows predating a flag read it as
-    False, so their keys are stable across tool upgrades."""
+    False, so their keys are stable across tool upgrades.  The on-device
+    layout (``compression``) is part of the identity for the same
+    reason: packed rows start fresh histories instead of being gated
+    against the uncompressed layout's timings; rows predating the column
+    read it as ``"none"``."""
     return (row.get("engine"), row.get("kind"), row.get("substrate"),
             row.get("backend"), bool(row.get("fused_walk")),
             bool(row.get("fused_beam")), bool(row.get("streamed_walk")),
-            bool(row.get("streamed_beam")))
+            bool(row.get("streamed_beam")),
+            row.get("compression") or "none")
 
 
 def _key_label(key: tuple) -> str:
-    engine, kind, substrate, _, fw, fb, sw, sb = key
+    engine, kind, substrate, _, fw, fb, sw, sb, compression = key
     fused = "+".join(n for n, f in (("fw", fw), ("fb", fb), ("sw", sw),
                                     ("sb", sb)) if f)
-    return f"{engine}/{kind}/{substrate}" + (f" [{fused}]" if fused else "")
+    label = f"{engine}/{kind}/{substrate}"
+    if compression != "none":
+        label += f"/{compression}"
+    return label + (f" [{fused}]" if fused else "")
 
 
 def render_markdown(hist: list[dict], max_commits: int = 8) -> str:
@@ -121,13 +129,17 @@ def render_markdown(hist: list[dict], max_commits: int = 8) -> str:
             if _row_key(row) not in keys:
                 keys.append(_row_key(row))
     cells = {}          # (key, commit) -> us/query
+    space = {}          # key -> newest bytes/string on record
     for entry in runs:
         for row in entry.get("rows", []):
             cells[(_row_key(row), entry["commit"])] = row.get("us_per_q")
+            if row.get("bytes_per_string") is not None:
+                space[_row_key(row)] = row["bytes_per_string"]
     backend = runs[-1].get("backend", "?")
     lines = [f"### Substrate perf trajectory (us/query, backend={backend})",
              ""]
-    heads = ["workload"] + [str(e["commit"])[:8] for e in runs]
+    heads = (["workload"] + [str(e["commit"])[:8] for e in runs]
+             + ["B/str"])
     lines.append("| " + " | ".join(heads) + " |")
     lines.append("|" + "---|" * len(heads))
     for key in keys:
@@ -135,6 +147,8 @@ def render_markdown(hist: list[dict], max_commits: int = 8) -> str:
         for entry in runs:
             v = cells.get((key, entry["commit"]))
             row_cells.append("-" if v is None else f"{v:g}")
+        bs = space.get(key)
+        row_cells.append("-" if bs is None else f"{bs:g}")
         lines.append("| " + " | ".join(row_cells) + " |")
     if len(hist) > max_commits:
         lines.append("")
@@ -151,7 +165,8 @@ def render_markdown(hist: list[dict], max_commits: int = 8) -> str:
 
 
 def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
-              commit: str | None = None, threshold: float = 1.5):
+              commit: str | None = None, threshold: float = 1.5,
+              space_threshold: float = 1.2):
     """Gate the fresh smoke run against the trajectory median.
 
     For every row of the smoke run, compares us/query against the median
@@ -165,11 +180,18 @@ def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
     only once its history holds at least two prior samples — a lone
     sample (e.g. the committed seed, recorded on a different machine)
     gives the median no noise robustness, so it warns instead.
+
+    Index *space* is gated too, warn-only: a row whose bytes/string
+    grows beyond ``space_threshold`` x its history median warns
+    (layout changes are deliberate and land with a new compression key,
+    so drift under the same key is worth flagging but build-order
+    noise should never fail CI).
     """
     with open(smoke_path) as f:
         run = json.load(f)
     commit = commit or _commit()
     prior: dict[tuple, list[float]] = {}
+    prior_space: dict[tuple, list[float]] = {}
     for entry in load_history(history_path):
         if entry.get("commit") == commit:
             continue
@@ -177,7 +199,22 @@ def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
             if row.get("us_per_q") is not None:
                 prior.setdefault(_row_key(row), []).append(
                     float(row["us_per_q"]))
+            if row.get("bytes_per_string") is not None:
+                prior_space.setdefault(_row_key(row), []).append(
+                    float(row["bytes_per_string"]))
     failures, warnings = [], []
+    for row in run.get("rows", []):
+        base = prior_space.get(_row_key(row))
+        if not base or row.get("bytes_per_string") is None:
+            continue
+        median = statistics.median(base)
+        now = float(row["bytes_per_string"])
+        if median > 0 and now > space_threshold * median:
+            warnings.append(
+                f"{_key_label(_row_key(row))}: index grew to {now:g} "
+                f"bytes/string vs history median {median:g} over "
+                f"{len(base)} run(s) "
+                f"({now / median:.2f}x > {space_threshold}x)")
     for row in run.get("rows", []):
         key = _row_key(row)
         base = prior.get(key)
@@ -223,7 +260,7 @@ def main() -> None:
         failures, warnings = check_run(args.smoke_json, args.history,
                                        args.commit, args.threshold)
         for msg in warnings:
-            print(f"WARN (jnp reference row, not gated): {msg}")
+            print(f"WARN (not gated): {msg}")
         for msg in failures:
             print(f"FAIL (fused-kernel row regressed): {msg}")
         if failures:

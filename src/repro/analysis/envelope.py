@@ -57,9 +57,9 @@ _SHAPE_ALIASES = {
     ("loci", 1): "frontier",
 }
 
-_DTYPE_BYTES = {"int8": 1, "uint8": 1, "int16": 2, "bfloat16": 2,
-                "float16": 2, "int32": 4, "uint32": 4, "float32": 4,
-                "int64": 8, "float64": 8}
+_DTYPE_BYTES = {"int8": 1, "uint8": 1, "int16": 2, "uint16": 2,
+                "bfloat16": 2, "float16": 2, "int32": 4, "uint32": 4,
+                "float32": 4, "int64": 8, "float64": 8}
 
 
 def _trie_fields(files: list[SourceFile]) -> set[str]:

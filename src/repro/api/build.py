@@ -131,6 +131,7 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
         tb.build_topk_cache(trie, spec.cache_k)
     tb.pack_rule_planes(trie, rule_trie)
     tb.pack_stream_tiles(trie, rule_trie)
+    widths = tb.pack_compressed(trie) if spec.compression == "packed" else {}
 
     has_rule_side = bool(active.any())
     cfg = eng.EngineConfig(
@@ -147,6 +148,8 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
         memory_budget=spec.memory_budget,
         use_cache=spec.cache_k > 0, cache_k=spec.cache_k,
         substrate=eng.resolve_substrate(spec.substrate),
+        compression=spec.compression,
+        table_widths=tuple(sorted(widths.items())),
     )
     validate_rule_planes(trie, rule_trie, cfg)
     stats = _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
@@ -159,6 +162,26 @@ def validate_rule_planes(trie, rule_trie, cfg) -> None:
     engine was configured with (the jit shape key).  Runs at build time and
     again when a persisted container is loaded, so a stale or hand-edited
     container fails loudly instead of mis-gathering on device."""
+    if (cfg.compression == "packed") != trie.has_packed:
+        raise ValueError(
+            f"compression mismatch: cfg says {cfg.compression!r} but the "
+            f"trie {'carries' if trie.has_packed else 'lacks'} the packed "
+            "layout; rebuild the index (or re-save the container) with "
+            "this version")
+    if cfg.compression == "packed":
+        validate_packed_layout(trie, cfg)
+    if trie.tele_plane is None:
+        # packed container with the dense planes elided: the rule trie is
+        # kept intact, so its plane is still checked; everything dict-side
+        # was covered by validate_packed_layout above
+        want = (rule_trie.n_nodes, cfg.term_width)
+        if rule_trie.term_plane is None or \
+                tuple(rule_trie.term_plane.shape) != want:
+            raise ValueError(
+                f"rule plane 'term_plane' has shape "
+                f"{None if rule_trie.term_plane is None else tuple(rule_trie.term_plane.shape)}, "
+                f"expected {want}; rebuild the index with this version")
+        return
     n = trie.n_nodes
     checks = [
         ("tele_plane", trie.tele_plane, (n, cfg.tele_width)),
@@ -229,6 +252,88 @@ def validate_stream_tiles(trie, cfg) -> None:
                     "this version")
 
 
+def validate_packed_layout(trie, cfg) -> None:
+    """Cross-check the compressed layout's side tables and recorded dtype
+    tiers.  A corrupt container (truncated table, non-monotone pointers)
+    or one whose dtype tier disagrees with ``cfg.table_widths`` (the
+    compile-cache key) fails loudly here instead of mis-decoding on
+    device.  Runs at build time and again on load."""
+    if not trie.has_packed:
+        raise ValueError(
+            "compression='packed' but the trie has no packed layout; "
+            "rebuild the index (or re-save the container) with this "
+            "version")
+    n = trie.n_nodes
+    if len(trie.p_labels) != n or len(trie.p_flags) != n:
+        raise ValueError(
+            f"packed label/flag planes cover {len(trie.p_labels)} nodes, "
+            f"expected {n}")
+    groups = [
+        ("c", trie.c_ids, trie.c_eptr,
+         [trie.c_enode, trie.c_escore, trie.c_eleaf],
+         [trie.c_tout, trie.c_maxscore]),
+        ("b", trie.b_ids, trie.b_ptr, [trie.b_char, trie.b_child], []),
+        ("sb", trie.sb_ids, trie.sb_ptr, [trie.sb_char, trie.sb_child], []),
+        ("la", trie.la_ids, trie.la_ptr, [], []),
+    ]
+    for name, ids, ptr, rows, sides in groups:
+        if len(ptr) != len(ids) + 1:
+            raise ValueError(
+                f"packed table {name!r}: pointer length {len(ptr)} does "
+                f"not fit {len(ids)} ids")
+        if len(ids) and not (np.diff(ids.astype(np.int64)) > 0).all():
+            raise ValueError(f"packed table {name!r}: ids not sorted")
+        if len(ptr) and (np.diff(ptr.astype(np.int64)) < 0).any():
+            raise ValueError(f"packed table {name!r}: pointers not "
+                             "monotone")
+        for arr in rows:
+            if len(arr) != (int(ptr[-1]) if len(ptr) else 0):
+                raise ValueError(
+                    f"packed table {name!r}: flat rows length {len(arr)} "
+                    f"!= pointer total {int(ptr[-1]) if len(ptr) else 0}")
+        for arr in sides:
+            if len(arr) != len(ids):
+                raise ValueError(
+                    f"packed table {name!r}: side column length "
+                    f"{len(arr)} != {len(ids)} ids")
+    if tuple(trie.t_plane.shape) != (len(trie.t_ids), cfg.tele_width):
+        raise ValueError(
+            f"packed teleport plane has shape {tuple(trie.t_plane.shape)}, "
+            f"expected ({len(trie.t_ids)}, {cfg.tele_width})")
+    if len(trie.la_ptr) and trie.link_rule is not None and \
+            int(trie.la_ptr[-1]) > len(trie.link_rule):
+        raise ValueError("packed link spans exceed the link store rows")
+    if len(trie.l_ids) != len(trie.l_sid):
+        raise ValueError("packed terminal table column lengths differ")
+    widths = dict(cfg.table_widths)
+    tiered = ["c_maxscore", "c_escore", "l_sid"]
+    if cfg.use_cache:
+        tiered += ["pc_score", "pc_sid"]
+        want = (len(trie.c_ids), cfg.cache_k)
+        for name in ("pc_score", "pc_sid"):
+            arr = getattr(trie, name)
+            if arr is None or tuple(arr.shape) != want:
+                raise ValueError(
+                    f"packed cache plane {name!r} has shape "
+                    f"{None if arr is None else tuple(arr.shape)}, "
+                    f"expected {want}")
+        if len(trie.pc_base) != len(trie.c_ids):
+            raise ValueError("packed cache base column length mismatch")
+    for name in tiered:
+        arr = getattr(trie, name)
+        if name not in widths:
+            raise ValueError(
+                f"packed table {name!r} missing from the recorded dtype "
+                "tiers (cfg.table_widths)")
+        if arr is None or str(arr.dtype) != widths[name]:
+            got = None if arr is None else str(arr.dtype)
+            raise ValueError(
+                f"packed table {name!r} width mismatch: stored dtype "
+                f"{got} but cfg.table_widths records {widths[name]!r}; "
+                "rebuild the index (or re-save the container) with this "
+                "version")
+
+
 def _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
                 n_strings, seconds) -> BuildStats:
     """Byte accounting (paper Table 2 / Fig. 5 breakdown)."""
@@ -247,6 +352,30 @@ def _make_stats(spec, trie, rule_trie, n_syn, link_sel, expand_mask,
     cache_bytes = (trie.topk_score.nbytes + trie.topk_sid.nbytes
                    if trie.topk_score is not None else 0)
     syn_frac = n_syn / max(n_nodes, 1)
+    if trie.has_packed:
+        # what actually ships to the device is the packed layout + the
+        # (kept) link store + rule trie — account those, not the host-side
+        # build intermediates
+        cache_bytes = sum(
+            getattr(trie, f).nbytes for f in ("pc_score", "pc_base",
+                                              "pc_sid")
+            if getattr(trie, f) is not None)
+        link_bytes = sum(
+            getattr(trie, f).nbytes for f in ("link_rule", "link_target",
+                                              "la_ids", "la_ptr"))
+        node_edge = trie.packed_nbytes(include_cache=False) - link_bytes
+        return BuildStats(
+            kind=spec.kind, n_strings=n_strings, n_nodes=n_nodes,
+            n_syn_nodes=n_syn,
+            n_links=int(link_sel.sum()) if len(link_sel) else 0,
+            n_rules_expanded=int(expand_mask.sum()),
+            build_seconds=seconds,
+            bytes_total=trie.packed_nbytes() + rule_trie.nbytes(),
+            bytes_dict_nodes=int(node_edge * (1 - syn_frac)),
+            bytes_syn_nodes=int(node_edge * syn_frac),
+            bytes_rule_side=link_bytes + rule_trie.nbytes(),
+            bytes_cache=cache_bytes,
+        )
     return BuildStats(
         kind=spec.kind, n_strings=n_strings, n_nodes=n_nodes,
         n_syn_nodes=n_syn,

@@ -26,6 +26,31 @@ def _to_device(trie: tb.DictTrie, rule_trie: tb.RuleTrie) -> eng.DeviceTrie:
     j = jnp.asarray
     has_cache = trie.topk_score is not None
     dummy = np.full((1, 1), -1, np.int32)
+    if trie.has_packed:
+        # compressed layout: only the packed side tables (their narrow
+        # dtypes preserved), the kept link store, and the rule trie go to
+        # the device — the dense planes ship as 0-size dummies so the
+        # NamedTuple stays a uniform pytree while costing nothing
+        z1 = jnp.zeros((0,), jnp.int32)
+        z2 = jnp.zeros((0, 1), jnp.int32)
+        packed_kw = {f: j(getattr(trie, f)) for f in tb.PACKED_ONLY_FIELDS
+                     if getattr(trie, f) is not None}
+        return eng.DeviceTrie(
+            depth=z1, max_score=z1, leaf_score=z1, leaf_sid=z1,
+            syn_mask=jnp.zeros((0,), bool), tout=z1,
+            first_child=z1, edge_char=z1, edge_child=z1,
+            s_first_child=z1, s_edge_char=z1, s_edge_child=z1,
+            emit_ptr=z1, emit_node=z1, emit_score=z1, emit_is_leaf=z1,
+            tele_plane=z2, link_ptr=z1,
+            link_rule=j(trie.link_rule), link_target=j(trie.link_target),
+            r_first_child=j(rule_trie.first_child),
+            r_edge_char=j(rule_trie.edge_char),
+            r_edge_child=j(rule_trie.edge_child),
+            r_term_plane=j(rule_trie.term_plane),
+            r_rule_len=j(rule_trie.rule_len),
+            topk_score=j(dummy), topk_sid=j(dummy),
+            **packed_kw,
+        )
     if trie.tele_plane is None or trie.link_ptr is None \
             or rule_trie.term_plane is None:
         tb.pack_rule_planes(trie, rule_trie)
@@ -90,6 +115,11 @@ class CompletionIndex:
         return self
 
     @property
+    def compression(self) -> str:
+        """On-device layout: "none" (full-width) or "packed" (format v4)."""
+        return self.cfg.compression
+
+    @property
     def memory_budget(self) -> int:
         """VMEM byte budget for table residency (0 = substrate default)."""
         return self.cfg.memory_budget
@@ -112,12 +142,13 @@ class CompletionIndex:
     def build(strings, scores, rules, kind: str = "et", *,
               alpha: float = 0.5, cache_k: int = 0,
               frontier: int = 32, gens: int = 48, expand: int = 8,
-              max_steps: int = 512) -> "CompletionIndex":
+              max_steps: int = 512,
+              compression: str = "none") -> "CompletionIndex":
         """Back-compat keyword constructor; equivalent to
         ``build_index(strings, scores, rules, IndexSpec(...))``."""
         spec = IndexSpec(kind=kind, alpha=alpha, cache_k=cache_k,
                          frontier=frontier, gens=gens, expand=expand,
-                         max_steps=max_steps)
+                         max_steps=max_steps, compression=compression)
         return build_index(strings, scores, rules, spec)
 
     @staticmethod

@@ -15,12 +15,20 @@ Format history:
   widths on the persisted EngineConfig.  v1 containers still load — the
   planes are rebuilt from the CSRs on the fly (a few ms of numpy) and the
   widths recomputed, so old on-disk indexes keep working unchanged.
-- v3 (this version): the flat CSR / emission / link tables are stored in
+- v3 (PR 5): the flat CSR / emission / link tables are stored in
   the tile-aligned stream layout (``trie_build.pack_stream_tiles``) with
   the static tile widths in the metadata, so the DMA-streamed kernel
   tier can window them without a re-layout on load.  v1/v2 containers
   still load — the tiles are re-packed on the fly and the widths
   recomputed (real lengths come from the CSR ptr totals).
+- v4 (this version): compressed on-device layout.  When the spec says
+  ``compression="packed"`` the container stores only the packed side
+  tables (``trie_build.pack_compressed``) plus the kept link store —
+  the dense per-node planes are elided, shrinking the container itself
+  alongside the device footprint — and the dtype tiers ride the
+  persisted ``EngineConfig.table_widths``.  Uncompressed indexes are
+  byte-compatible with v3; v1-v3 containers still load, and are
+  re-packed on the fly if their spec asks for compression.
 """
 
 from __future__ import annotations
@@ -35,8 +43,8 @@ from repro.api.spec import IndexSpec
 from repro.core import engine as eng
 from repro.core import trie_build as tb
 
-FORMAT_VERSION = 3
-_SUPPORTED_VERSIONS = (1, 2, 3)
+FORMAT_VERSION = 4
+_SUPPORTED_VERSIONS = (1, 2, 3, 4)
 _META_KEY = "__meta__"
 
 
@@ -58,9 +66,15 @@ def save_index(index, path: str) -> None:
     trie: tb.DictTrie = index.trie
     rule_trie: tb.RuleTrie = index.rule_trie
     arrays: dict[str, np.ndarray] = {}
+    # packed indexes persist only the compressed side tables + the kept
+    # link store: the dense per-node planes are rebuilt on neither save
+    # nor load, so the container shrinks with the device footprint
+    packed_keep = (set(tb.PACKED_ONLY_FIELDS) | set(tb.PACKED_KEEP_FIELDS)
+                   if trie.has_packed else None)
     for f in dataclasses.fields(trie):
         v = getattr(trie, f.name)
-        if isinstance(v, np.ndarray):
+        if isinstance(v, np.ndarray) and \
+                (packed_keep is None or f.name in packed_keep):
             arrays[f"trie__{f.name}"] = v
     for f in dataclasses.fields(rule_trie):
         v = getattr(rule_trie, f.name)
@@ -84,7 +98,8 @@ def save_index(index, path: str) -> None:
                          "walk_tile": trie.walk_tile,
                          "emit_tile": trie.emit_tile,
                          "link_tile": trie.link_tile,
-                         "has_cache": trie.topk_score is not None},
+                         "has_cache": trie.topk_score is not None
+                         or trie.pc_score is not None},
         "rule_trie_scalars": {
             "max_lhs_len": rule_trie.max_lhs_len,
             "max_matches_per_pos": rule_trie.max_matches_per_pos,
@@ -132,6 +147,13 @@ def load_index_parts(path: str) -> dict:
             tb.pack_rule_planes(trie, rule_trie)
         if version < 3:   # pre-stream-layout container: re-pack the tiles
             tb.pack_stream_tiles(trie, rule_trie)
+        # a pre-v4 container whose spec asks for compression (or a v4 one
+        # saved before packing) is re-packed on the fly; the dtype tiers
+        # recomputed here overwrite whatever the stale metadata carried
+        repacked_widths = None
+        if meta["spec"].get("compression", "none") == "packed" \
+                and not trie.has_packed:
+            repacked_widths = tb.pack_compressed(trie)
         strings = _unpack_bytes(z["strings__blob"], z["strings__offsets"])
         scores = z["scores"]
         rules = [tb.SynonymRule(lhs, rhs) for lhs, rhs in zip(
@@ -146,13 +168,24 @@ def load_index_parts(path: str) -> dict:
     # that saved: re-resolve the spec's (possibly "auto") choice here.
     # Plane/tile widths come from the (possibly just re-packed) structures
     # themselves (v1/v2 metadata predates them) and are cross-checked
-    # before anything reaches the device.
-    cfg = dataclasses.replace(
-        cfg, substrate=eng.resolve_substrate(spec.substrate),
-        tele_width=trie.tele_plane.shape[1],
+    # before anything reaches the device.  A packed container elides the
+    # dense planes, so its widths can only come from the (always-v4)
+    # metadata; table_widths round-trips JSON as nested lists and must be
+    # re-frozen to stay hashable in compile-cache keys.
+    replace_kw = dict(
+        substrate=eng.resolve_substrate(spec.substrate),
         term_width=rule_trie.term_plane.shape[1],
-        walk_tile=trie.walk_tile, emit_tile=trie.emit_tile,
-        link_tile=trie.link_tile)
+        table_widths=tuple((str(n), str(d)) for n, d in cfg.table_widths))
+    if trie.tele_plane is not None:
+        replace_kw.update(
+            tele_width=trie.tele_plane.shape[1],
+            walk_tile=trie.walk_tile, emit_tile=trie.emit_tile,
+            link_tile=trie.link_tile)
+    if repacked_widths is not None:
+        replace_kw.update(
+            compression="packed",
+            table_widths=tuple(sorted(repacked_widths.items())))
+    cfg = dataclasses.replace(cfg, **replace_kw)
     from repro.api.build import validate_rule_planes
     validate_rule_planes(trie, rule_trie, cfg)
     return {

@@ -37,6 +37,12 @@ class IndexSpec:
         tables resident; tries whose tables exceed it run the
         DMA-streamed kernel tier (HBM-resident tables) instead of
         falling back to jnp.  0 = substrate default.
+    compression: on-device table layout — "none" keeps the uniform-i32
+        arrays; "packed" builds the compressed layout
+        (:func:`repro.core.trie_build.pack_compressed`): narrow dtype
+        tiers, chain-collapsed unary paths, elided empty planes, and a
+        quantized top-K cache.  Bit-identical results, ~an order of
+        magnitude fewer bytes/string; persisted as format v4.
     """
 
     kind: str = "et"
@@ -48,6 +54,7 @@ class IndexSpec:
     max_steps: int = 512
     substrate: str = "auto"
     memory_budget: int = 0
+    compression: str = "none"
 
     def validate(self) -> "IndexSpec":
         if self.kind not in _BUILDERS:
@@ -62,6 +69,10 @@ class IndexSpec:
             raise ValueError(
                 f"unknown substrate {self.substrate!r}; expected 'auto' or "
                 f"one of {available_substrates()}")
+        if self.compression not in ("none", "packed"):
+            raise ValueError(
+                f"unknown compression {self.compression!r}; expected "
+                "'none' or 'packed'")
         for name in ("cache_k", "memory_budget"):
             if getattr(self, name) < 0:
                 raise ValueError(f"{name} must be >= 0")

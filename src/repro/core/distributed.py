@@ -77,6 +77,11 @@ def stack_shards(indexes: list[CompletionIndex]):
     devs = [ix.device for ix in indexes]
     fields = eng.DeviceTrie._fields
     cfgs = [ix.cfg for ix in indexes]
+    if any(getattr(c, "compression", "none") != "none" for c in cfgs):
+        raise NotImplementedError(
+            "stack_shards does not support the compressed (packed) layout: "
+            "padding would break the sorted side-table rank invariants — "
+            "build shards with compression='none'")
     # the merged stream-tile widths are maxima over the shards, so every
     # streamable flat table keeps one merged tile of tail slack past the
     # longest shard — a streamed-tier window anchored at any real row
@@ -95,7 +100,13 @@ def stack_shards(indexes: list[CompletionIndex]):
     }
     stacked = {}
     for f in fields:
-        arrs = [np.asarray(getattr(d, f)) for d in devs]
+        vals = [getattr(d, f) for d in devs]
+        if any(v is None for v in vals):
+            # elided packed-only planes (always None once compression is
+            # rejected above) — keep them None in the stacked trie too
+            stacked[f] = None
+            continue
+        arrs = [np.asarray(v) for v in vals]
         tgt = tuple(max(a.shape[i] for a in arrs) for i in range(arrs[0].ndim))
         tgt = tuple(max(t, 1) for t in tgt)
         if f in tile_slack and tgt[0] > 1:

@@ -26,6 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import packed as pk
 from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
 
 
@@ -35,18 +36,33 @@ def beam_topk(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
     Returns (scores[k], sids[k], exact bool). scores are -1 padded.
     """
     W, P = cfg.gens, cfg.expand
-    if int(t.emit_node.shape[0]) == 0:  # degenerate empty dictionary
+    packed = pk.is_packed(t)
+    degenerate = (int(t.c_enode.shape[0]) == 0 if packed
+                  else int(t.emit_node.shape[0]) == 0)
+    if degenerate:  # empty dictionary — no emissions anywhere
         return (jnp.full((k,), NEG_ONE, jnp.int32),
                 jnp.full((k,), NEG_ONE, jnp.int32), jnp.bool_(True))
-    e_size = max(int(t.emit_node.shape[0]), 1)
 
-    def emit_bound(nodes, cursors):
-        valid = nodes >= 0
-        n = jnp.where(valid, nodes, 0)
-        e = t.emit_ptr[n] + cursors
-        ok = valid & (e < t.emit_ptr[n + 1])
-        score = t.emit_score[jnp.clip(e, 0, e_size - 1)]
-        return jnp.where(ok, score, NEG_ONE)
+    if packed:
+        emit_bound = lambda nodes, cursors: pk.emit_bound(t, nodes, cursors)
+        pop = lambda nodes, cursors: pk.pop_emissions(t, nodes, cursors)
+        sid_of = lambda nodes: pk.leaf_sid_of(t, nodes)
+    else:
+        e_size = max(int(t.emit_node.shape[0]), 1)
+
+        def emit_bound(nodes, cursors):
+            valid = nodes >= 0
+            n = jnp.where(valid, nodes, 0)
+            e = t.emit_ptr[n] + cursors
+            ok = valid & (e < t.emit_ptr[n + 1])
+            score = t.emit_score[jnp.clip(e, 0, e_size - 1)]
+            return jnp.where(ok, score, NEG_ONE)
+
+        def pop(nodes, cursors):
+            e = jnp.clip(t.emit_ptr[nodes] + cursors, 0, e_size - 1)
+            return t.emit_node[e], t.emit_score[e], t.emit_is_leaf[e]
+
+        sid_of = lambda nodes: t.leaf_sid[nodes]
 
     # generator pool seeded with loci
     gn = jnp.full((W,), NEG_ONE, jnp.int32)
@@ -71,16 +87,12 @@ def beam_topk(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int):
         topb, topi = jax.lax.top_k(gb, P)
         sel_valid = topb >= 0
         sel_n = jnp.where(sel_valid, gn[topi], 0)
-        e = t.emit_ptr[sel_n] + gc[topi]
-        e = jnp.clip(e, 0, e_size - 1)
-        em_node = t.emit_node[e]
-        em_score = t.emit_score[e]
-        em_leaf = t.emit_is_leaf[e]
+        em_node, em_score, em_leaf = pop(sel_n, gc[topi])
 
         # leaves -> result buffer
         leaf_ok = sel_valid & em_leaf
         new_ls = jnp.where(leaf_ok, em_score, NEG_ONE)
-        new_li = jnp.where(leaf_ok, t.leaf_sid[jnp.where(leaf_ok, em_node, 0)],
+        new_li = jnp.where(leaf_ok, sid_of(jnp.where(leaf_ok, em_node, 0)),
                            NEG_ONE)
         cat_s = jnp.concatenate([ls, new_ls])
         cat_i = jnp.concatenate([li, new_li])

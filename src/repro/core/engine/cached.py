@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import packed as pk
 from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
 
 
@@ -29,6 +30,8 @@ def gather_cached(t: DeviceTrie, loci: jax.Array):
     loci int32[..., F] -> (scores[..., F*K], sids[..., F*K]), -1 where the
     locus slot is empty, loci-major/K-minor candidate order.
     """
+    if pk.is_packed(t):
+        return pk.gather_cached(t, loci)
     valid = loci >= 0
     n = jnp.where(valid, loci, 0)
     sc = jnp.where(valid[..., None], t.topk_score[n], NEG_ONE)

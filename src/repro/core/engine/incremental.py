@@ -14,6 +14,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import packed as pk
 from repro.core.engine.locus import finalize_loci, link_lookup, teleport_expand
 from repro.core.engine.primitives import iters_for, resolve_sub
 from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
@@ -66,13 +67,20 @@ def advance_locus_state(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
     c = jnp.asarray(c, jnp.int32)
     row = state.rows[0]
 
-    d_iters = iters_for(int(t.edge_char.shape[0]))
-    parts = [sub.csr_child_lookup(t.first_child, t.edge_char, t.edge_child,
-                                  row, c, d_iters)]
-    if int(t.s_edge_child.shape[0]) > 0:
-        s_iters = iters_for(int(t.s_edge_char.shape[0]))
-        parts.append(sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
-                                          t.s_edge_child, row, c, s_iters))
+    packed = pk.is_packed(t)
+    if packed:
+        parts = [pk.dict_children(t, row, c)]
+        if pk.has_syn_edges(t):
+            parts.append(pk.syn_children(t, row, c))
+    else:
+        d_iters = iters_for(int(t.edge_char.shape[0]))
+        parts = [sub.csr_child_lookup(t.first_child, t.edge_char,
+                                      t.edge_child, row, c, d_iters)]
+        if int(t.s_edge_child.shape[0]) > 0:
+            s_iters = iters_for(int(t.s_edge_char.shape[0]))
+            parts.append(sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
+                                              t.s_edge_child, row, c,
+                                              s_iters))
 
     rnodes = state.rnodes
     if cfg.rule_matches > 0 and cfg.max_lhs_len > 0:
@@ -89,7 +97,9 @@ def advance_locus_state(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
             # lhs of length j+1 anchors at the frontier j keystrokes back
             anchor_row = state.rows[j]
             anchor_ok = anchor_row >= 0
-            anchor_ok &= ~t.syn_mask[jnp.where(anchor_row >= 0, anchor_row, 0)]
+            an = jnp.where(anchor_row >= 0, anchor_row, 0)
+            anchor_ok &= ~(pk.syn_mask_of(t, an) if packed
+                           else t.syn_mask[an])
             anchors = jnp.where(anchor_ok, anchor_row, NEG_ONE)
             for j2 in range(cfg.max_terms_per_node):
                 rid = terms[j2]

@@ -24,6 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import packed as pk
 from repro.core.engine.primitives import (dedup_pad, iters_for, lower_bound,
                                           resolve_sub)
 from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
@@ -75,9 +76,12 @@ def teleport_expand(t: DeviceTrie, cfg: EngineConfig, row: jax.Array,
         return row, jnp.int32(0)
     sub = resolve_sub(cfg, sub)
     F = row.shape[0]
-    valid = row >= 0
-    n = jnp.where(valid, row, 0)
-    tgt = jnp.where(valid[:, None], t.tele_plane[n], NEG_ONE)
+    if pk.is_packed(t):
+        tgt = pk.tele_rows(t, row)
+    else:
+        valid = row >= 0
+        n = jnp.where(valid, row, 0)
+        tgt = jnp.where(valid[:, None], t.tele_plane[n], NEG_ONE)
     merged = jnp.concatenate([row, tgt.reshape(-1)])
     return sub.dedup_compact(merged, F)
 
@@ -88,6 +92,8 @@ def link_lookup(t: DeviceTrie, anchors: jax.Array, rid: jax.Array):
     The packed ``link_ptr`` CSR bounds each anchor's (rule-sorted) row
     range with one pointer load, so the whole lookup is a single binary
     search over ``link_rule`` instead of the pre-relayout three."""
+    if pk.is_packed(t):
+        return pk.link_lookup(t, anchors, rid)
     n_link = int(t.link_rule.shape[0])
     if n_link == 0:
         return jnp.full(anchors.shape, NEG_ONE, jnp.int32)
@@ -105,13 +111,16 @@ def finalize_loci(t: DeviceTrie, row: jax.Array) -> jax.Array:
     """Turn a (teleport-expanded) frontier row into the final locus antichain:
     drop mid-variant synonym nodes, dedup, and remove covered descendants."""
     F = row.shape[0]
+    packed = pk.is_packed(t)
     # strict semantics: drop mid-variant (synonym) loci
-    is_syn = t.syn_mask[jnp.where(row >= 0, row, 0)]
+    n0 = jnp.where(row >= 0, row, 0)
+    is_syn = pk.syn_mask_of(t, n0) if packed else t.syn_mask[n0]
     row = jnp.where((row >= 0) & ~is_syn, row, NEG_ONE)
     row, _ = dedup_pad(row, F)
     # antichain reduction via preorder intervals: drop descendants
     tin = jnp.where(row >= 0, row, NEG_ONE)
-    to = t.tout[jnp.where(row >= 0, row, 0)]
+    n0 = jnp.where(row >= 0, row, 0)
+    to = pk.tout_of(t, n0) if packed else t.tout[n0]
     covered = (
         (tin[None, :] <= tin[:, None]) & (tin[:, None] < to[None, :])
         & (jnp.arange(F)[None, :] != jnp.arange(F)[:, None])
@@ -131,9 +140,14 @@ def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array,
     sub = resolve_sub(cfg, sub)
     L = int(q.shape[0])
     F = cfg.frontier
-    d_iters = iters_for(int(t.edge_char.shape[0]))
-    s_iters = iters_for(int(t.s_edge_char.shape[0]))
-    has_syn_edges = int(t.s_edge_child.shape[0]) > 0
+    packed = pk.is_packed(t)
+    if packed:
+        has_syn_edges = pk.has_syn_edges(t)
+        d_iters = s_iters = 0
+    else:
+        d_iters = iters_for(int(t.edge_char.shape[0]))
+        s_iters = iters_for(int(t.s_edge_char.shape[0]))
+        has_syn_edges = int(t.s_edge_child.shape[0]) > 0
     M = cfg.rule_matches
 
     mrule, mend = match_table(t, cfg, q, sub)
@@ -150,12 +164,18 @@ def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array,
         c = jax.lax.dynamic_index_in_dim(q, i, keepdims=False)
 
         # literal char step: dict children + synonym-branch children
-        nd = sub.csr_child_lookup(t.first_child, t.edge_char, t.edge_child,
-                                  row, c, d_iters)
+        if packed:
+            nd = pk.dict_children(t, row, c)
+        else:
+            nd = sub.csr_child_lookup(t.first_child, t.edge_char,
+                                      t.edge_child, row, c, d_iters)
         parts = [nd]
         if has_syn_edges:
-            ns = sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
-                                      t.s_edge_child, row, c, s_iters)
+            if packed:
+                ns = pk.syn_children(t, row, c)
+            else:
+                ns = sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
+                                          t.s_edge_child, row, c, s_iters)
             parts.append(ns)
         nxt_row = jax.lax.dynamic_slice(buf, (i + 1, 0), (1, F))[0]
         merged, drop = sub.dedup_compact(jnp.concatenate([nxt_row] + parts), F)
@@ -165,7 +185,8 @@ def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array,
         # rule steps through the link store (anchors must be dict nodes)
         if M > 0:
             anchor_ok = row >= 0
-            anchor_ok &= ~t.syn_mask[jnp.where(row >= 0, row, 0)]
+            ar = jnp.where(row >= 0, row, 0)
+            anchor_ok &= ~(pk.syn_mask_of(t, ar) if packed else t.syn_mask[ar])
             anchors = jnp.where(anchor_ok, row, NEG_ONE)
             for m in range(M):
                 rid = mrule[i, m]

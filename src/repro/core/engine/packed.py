@@ -1,0 +1,221 @@
+"""Accessors for the compressed (packed) on-device layout.
+
+The packed layout (:func:`repro.core.trie_build.pack_compressed`) keeps
+logical node ids unchanged and replaces the dense per-node arrays with u8
+labels/flags plus sparse side tables keyed by sorted node id.  Each
+accessor here mirrors one uncompressed engine read bit-for-bit:
+
+- child lookup: a unary node's single child is ``v + 1`` (DFS preorder),
+  read straight off the flag + label; branching rows binary-search
+  ``b_ids``/``sb_ids`` and then the row, exactly like
+  ``primitives.csr_child_lookup`` over the dense CSR;
+- per-node data (``tout``, ``max_score``, emission lists, cache rows) of
+  an unstored node equals its chain representative's — the first stored
+  id at or after it, one ``lower_bound`` over ``c_ids``;
+- narrow (u8/u16) values widen to i32 in-register at the read, so every
+  comparison and merge downstream sees the same i32 values as the
+  uncompressed path.
+
+The jnp engine branches to these functions whenever :func:`is_packed`
+holds; the Pallas kernels implement the same forms behind their
+table-accessor seams (``kernels/locus_dp.py`` / ``kernels/beam_topk.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine.primitives import iters_for, lower_bound
+from repro.core.engine.structs import NEG_ONE
+
+# p_flags bits (mirror trie_build.PACK_*; plain ints for kernel tracing)
+DICT_UNARY = 1
+SYN_UNARY = 2
+IS_SYN = 4
+HAS_LEAF = 8
+
+
+def is_packed(t) -> bool:
+    """True when the DeviceTrie carries the packed layout (the dense
+    arrays are the dummies then, not the side tables).  Duck-typed so
+    probe fakes that predate the packed fields read as unpacked."""
+    labels = getattr(t, "p_labels", None)
+    return labels is not None and int(labels.shape[0]) > 0
+
+
+def has_syn_edges(t) -> bool:
+    """Static synonym-branch probe for packed tries: synonym nodes exist
+    iff teleports do (every expanded branch ends in one) or a non-unary
+    syn row was stored."""
+    return int(t.t_ids.shape[0]) > 0 or int(t.sb_child.shape[0]) > 0
+
+
+def _rank(ids_arr, nodes):
+    """Position of each node in a sorted id table: (clipped_rank, exact)."""
+    size = int(ids_arr.shape[0])
+    if size == 0:
+        return jnp.zeros_like(nodes), jnp.zeros(nodes.shape, bool)
+    pos = lower_bound(ids_arr, jnp.zeros_like(nodes),
+                      jnp.full_like(nodes, size), nodes, iters_for(size))
+    rc = jnp.clip(pos, 0, size - 1)
+    return rc, (pos < size) & (ids_arr[rc] == nodes)
+
+
+def _children(t, ids_arr, ptr, chars, children, unary_bit, nodes, ch):
+    """Shared unary-flag + sparse-row child lookup (dict and syn forms).
+    Semantics identical to ``csr_child_lookup`` over the dense CSR."""
+    n_nodes = int(t.p_labels.shape[0])
+    valid = nodes >= 0
+    n = jnp.where(valid, nodes, 0)
+    fl = t.p_flags[n].astype(jnp.int32)
+    lbl = t.p_labels[jnp.clip(n + 1, 0, n_nodes - 1)].astype(jnp.int32)
+    ok_u = ((fl & unary_bit) != 0) & (lbl == ch) & valid & (ch >= 0)
+    u_child = jnp.where(ok_u, n + 1, NEG_ONE)
+    if int(ids_arr.shape[0]) == 0:
+        return u_child
+    rc, isrow = _rank(ids_arr, n)
+    lo = ptr[rc]
+    hi = jnp.where(isrow, ptr[rc + 1], lo)
+    e_size = max(int(chars.shape[0]), 1)
+    pos = lower_bound(chars, lo, hi, ch, iters_for(int(chars.shape[0])))
+    posc = jnp.clip(pos, 0, e_size - 1)
+    found = (pos < hi) & (chars[posc].astype(jnp.int32) == ch) \
+        & valid & (ch >= 0)
+    row_child = jnp.where(found, children[posc], NEG_ONE)
+    return jnp.where(isrow, row_child, u_child)
+
+
+def dict_children(t, nodes, ch):
+    return _children(t, t.b_ids, t.b_ptr, t.b_char, t.b_child,
+                     DICT_UNARY, nodes, ch)
+
+
+def syn_children(t, nodes, ch):
+    return _children(t, t.sb_ids, t.sb_ptr, t.sb_char, t.sb_child,
+                     SYN_UNARY, nodes, ch)
+
+
+def tele_rows(t, nodes):
+    """Teleport-target rows [..., tele_width]; all -1 for nodes without
+    teleports (== the dense ``tele_plane`` gather, rows masked by the
+    caller's validity the same way)."""
+    tw = int(t.t_plane.shape[1])
+    valid = nodes >= 0
+    n = jnp.where(valid, nodes, 0)
+    if int(t.t_ids.shape[0]) == 0:
+        return jnp.full(tuple(nodes.shape) + (tw,), NEG_ONE, jnp.int32)
+    rc, exact = _rank(t.t_ids, n)
+    return jnp.where((exact & valid)[..., None], t.t_plane[rc], NEG_ONE)
+
+
+def syn_mask_of(t, nodes):
+    """bool syn mask gather (callers pre-clamp nodes to >= 0)."""
+    return (t.p_flags[nodes] & IS_SYN) != 0
+
+
+def tout_of(t, nodes):
+    """Preorder subtree end (callers pre-clamp nodes to >= 0).  Synonym
+    nodes are their own chains (tout == v + 1); dict nodes read their
+    chain representative's stored value."""
+    fl = t.p_flags[nodes].astype(jnp.int32)
+    rc, _ = _rank(t.c_ids, nodes)
+    return jnp.where((fl & IS_SYN) != 0, nodes + 1, t.c_tout[rc])
+
+
+def link_lookup(t, anchors, rid):
+    """(anchor, rule) -> target or -1 via the sparse anchor spans
+    (``la_ids``/``la_ptr``), same search as the dense ``link_ptr`` form."""
+    n_link = int(t.link_rule.shape[0])
+    if n_link == 0 or int(t.la_ids.shape[0]) == 0:
+        return jnp.full(anchors.shape, NEG_ONE, jnp.int32)
+    valid = anchors >= 0
+    a = jnp.where(valid, anchors, 0)
+    rc, isrow = _rank(t.la_ids, a)
+    lo = t.la_ptr[rc]
+    hi = jnp.where(isrow, t.la_ptr[rc + 1], lo)
+    pos = lower_bound(t.link_rule, lo, hi, rid, iters_for(n_link))
+    posc = jnp.clip(pos, 0, n_link - 1)
+    found = (pos < hi) & (t.link_rule[posc] == rid) & valid
+    return jnp.where(found, t.link_target[posc], NEG_ONE)
+
+
+# ---------------------------------------------------------------------------
+# beam-phase emission accessors
+# ---------------------------------------------------------------------------
+
+
+def emit_bound(t, nodes, cursors):
+    """Admissible bound of each generator's current emission.  Stored
+    nodes read their compacted emission row; an unstored (unary
+    non-terminal dict) node's list is exactly ``[(v+1, max_score, False)]``
+    so cursor 0 yields the representative's ``max_score`` and anything
+    past it is exhausted."""
+    valid = nodes >= 0
+    n = jnp.where(valid, nodes, 0)
+    rc, stored = _rank(t.c_ids, n)
+    e = t.c_eptr[rc] + cursors
+    e_size = max(int(t.c_enode.shape[0]), 1)
+    ok_s = stored & (e < t.c_eptr[rc + 1])
+    sc_s = t.c_escore[jnp.clip(e, 0, e_size - 1)].astype(jnp.int32)
+    fl = t.p_flags[n].astype(jnp.int32)
+    derived = ~stored & ((fl & IS_SYN) == 0) & (cursors == 0)
+    ms = t.c_maxscore[rc].astype(jnp.int32)
+    bound = jnp.where(ok_s, sc_s, jnp.where(derived, ms, NEG_ONE))
+    return jnp.where(valid, bound, NEG_ONE)
+
+
+def pop_emissions(t, nodes, cursors):
+    """(node, score, is_leaf) of each generator's current emission
+    (callers mask invalid lanes; a popped lane's cursor is in-row)."""
+    rc, stored = _rank(t.c_ids, nodes)
+    e_size = max(int(t.c_enode.shape[0]), 1)
+    e = jnp.clip(t.c_eptr[rc] + cursors, 0, e_size - 1)
+    ms = t.c_maxscore[rc].astype(jnp.int32)
+    node = jnp.where(stored, t.c_enode[e], nodes + 1)
+    score = jnp.where(stored, t.c_escore[e].astype(jnp.int32), ms)
+    leaf = jnp.where(stored, t.c_eleaf[e] != 0, False)
+    return node, score, leaf
+
+
+def leaf_sid_of(t, nodes):
+    """String id of terminal nodes via exact search over ``l_ids``
+    (callers only use lanes where the node is a real leaf)."""
+    size = max(int(t.l_ids.shape[0]), 1)
+    rc, _ = _rank(t.l_ids, nodes)
+    return t.l_sid[jnp.clip(rc, 0, size - 1)].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# cached-phase accessors
+# ---------------------------------------------------------------------------
+
+
+def gather_cached(t, loci):
+    """Packed mirror of ``cached.gather_cached``: decode the quantized
+    per-representative cache rows back to raw i32 scores/sids."""
+    valid = loci >= 0
+    n = jnp.where(valid, loci, 0)
+    rc, _ = _rank(t.c_ids, n)
+    sc = decode_cache_scores(t.pc_score[rc], t.pc_base[rc])
+    si = decode_cache_sids(t.pc_sid[rc])
+    sc = jnp.where(valid[..., None], sc, NEG_ONE)
+    si = jnp.where(valid[..., None], si, NEG_ONE)
+    flat = loci.shape[:-1] + (-1,)
+    return sc.reshape(flat), si.reshape(flat)
+
+
+def decode_cache_scores(enc, base):
+    """u16 rows hold ``score - base + 1`` (0 = empty slot); i32 rows are
+    raw.  The dtype is the scheme marker — ``EngineConfig.table_widths``
+    keys compiled entry points on it."""
+    if enc.dtype == jnp.uint16:
+        e = enc.astype(jnp.int32)
+        return jnp.where(e == 0, NEG_ONE, base[..., None] + e - 1)
+    return enc.astype(jnp.int32)
+
+
+def decode_cache_sids(enc):
+    if enc.dtype == jnp.uint16:
+        e = enc.astype(jnp.int32)
+        return jnp.where(e == 0, NEG_ONE, e - 1)
+    return enc.astype(jnp.int32)

@@ -57,6 +57,37 @@ class DeviceTrie(NamedTuple):
     # materialized per-node top-K (dummy (1,1) when disabled)
     topk_score: jax.Array
     topk_sid: jax.Array
+    # -- compressed layout (trie_build.pack_compressed) ------------------
+    # (0,)-shaped dummies when compression="none"; when packed, the dense
+    # per-node arrays above become the dummies instead and every engine
+    # accessor routes through these sparse, narrow-dtype side tables
+    # (repro.core.engine.packed).  Ids stay logical, results bit-identical.
+    p_labels: jax.Array = None      # u8[N]
+    p_flags: jax.Array = None       # u8[N]
+    c_ids: jax.Array = None         # i32[C]
+    c_tout: jax.Array = None        # i32[C]
+    c_maxscore: jax.Array = None    # u16/i32[C]
+    c_eptr: jax.Array = None        # i32[C+1]
+    c_enode: jax.Array = None       # i32[Me]
+    c_escore: jax.Array = None      # u16/i32[Me]
+    c_eleaf: jax.Array = None       # u8[Me]
+    b_ids: jax.Array = None         # i32[B]
+    b_ptr: jax.Array = None         # i32[B+1]
+    b_char: jax.Array = None        # u8[Eb]
+    b_child: jax.Array = None       # i32[Eb]
+    sb_ids: jax.Array = None        # i32[Sb]
+    sb_ptr: jax.Array = None        # i32[Sb+1]
+    sb_char: jax.Array = None       # u8[Esb]
+    sb_child: jax.Array = None      # i32[Esb]
+    l_ids: jax.Array = None         # i32[S]
+    l_sid: jax.Array = None         # u16/i32[S]
+    t_ids: jax.Array = None         # i32[Tn]
+    t_plane: jax.Array = None       # i32[Tn, tele_width]
+    la_ids: jax.Array = None        # i32[La]
+    la_ptr: jax.Array = None        # i32[La+1]
+    pc_score: jax.Array = None      # u16/i32[C, K]
+    pc_base: jax.Array = None       # i32[C]
+    pc_sid: jax.Array = None        # u16/i32[C, K]
 
 
 @dataclass(frozen=True)
@@ -92,3 +123,11 @@ class EngineConfig:
     use_cache: bool = False     # phase-2 via materialized top-K
     cache_k: int = 0
     substrate: str = "jnp"      # execution substrate ("jnp" | "pallas")
+    # compressed on-device layout (trie_build.pack_compressed): "none"
+    # keeps the uniform-i32 tables; "packed" routes every accessor
+    # through the chain-collapsed sparse side tables.  table_widths
+    # records the tier-variable dtypes as a sorted (name, dtype) tuple —
+    # hashable, and part of every compile-cache key so a rebuild landing
+    # in a different tier re-traces instead of reusing a stale entry.
+    compression: str = "none"
+    table_widths: tuple = ()

@@ -41,7 +41,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import beam, cached, locus, primitives
+from repro.core.engine import beam, cached, locus, packed as pk, primitives
 from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
 
 
@@ -198,21 +198,48 @@ class PallasSubstrate(Substrate):
                     "leaf_sid")
     _CACHE_FIELDS = ("topk_score", "topk_sid")
 
+    # compressed-layout (packed) counterparts: the streamed packed walk
+    # streams only the two u8 per-node planes; every sparse side table —
+    # chain representatives, branching rows, teleports, link spans — plus
+    # the rule trie stays VMEM-resident (all are branch-count-sized, not
+    # node-count-sized)
+    _WALK_STREAM_FIELDS_PACKED = ("p_labels", "p_flags")
+    _WALK_RESIDENT_FIELDS_PACKED = (
+        "c_ids", "c_tout", "b_ids", "b_ptr", "b_char", "b_child",
+        "sb_ids", "sb_ptr", "sb_char", "sb_child", "t_ids", "t_plane",
+        "la_ids", "la_ptr", "link_rule", "link_target",
+        "r_first_child", "r_edge_char", "r_edge_child", "r_term_plane")
+    # p_labels rides both tuples for the is_packed layout probe even
+    # though the kernels only read p_flags — the N extra u8 bytes keep
+    # the accounting a (tiny) over-estimate instead of an under-count
+    _BEAM_FIELDS_PACKED = (
+        "p_labels", "p_flags", "c_ids", "c_eptr", "c_enode", "c_escore",
+        "c_eleaf", "c_maxscore", "l_ids", "l_sid")
+    _CACHE_FIELDS_PACKED = ("p_labels", "pc_score", "pc_base", "pc_sid",
+                            "c_ids")
+
     def _budget(self, cfg: EngineConfig) -> int:
         budget = cfg.memory_budget or self._DEFAULT_VMEM_BUDGET
         return min(budget, self._VMEM_BYTES)
 
     @staticmethod
     def _table_bytes(t: DeviceTrie, fields) -> int:
-        return 4 * sum(math.prod(getattr(t, f).shape) for f in fields)
+        # itemsize-aware: the packed layout's u8/u16 tables count their
+        # real footprint, which is the whole point of the compression
+        return sum(math.prod(a.shape) * a.dtype.itemsize
+                   for a in (getattr(t, f) for f in fields)
+                   if a is not None)
 
     def min_streamed_budget(self, t: DeviceTrie) -> int:
         """The smallest ``memory_budget`` that still admits the streamed
-        walk tier for this trie: room for the rule trie (which the
-        streamed locus kernel keeps VMEM-resident) and nothing else.
-        Test/benchmark harnesses use it to *force* the streamed tier —
-        every dictionary-sized table is over budget at this value."""
-        return max(self._table_bytes(t, self._WALK_RESIDENT_FIELDS), 1)
+        walk tier for this trie: room for the resident-side tables (the
+        rule trie; for packed layouts also the sparse side tables) and
+        nothing else.  Test/benchmark harnesses use it to *force* the
+        streamed tier — every streamed table is over budget at this
+        value."""
+        fields = (self._WALK_RESIDENT_FIELDS_PACKED if pk.is_packed(t)
+                  else self._WALK_RESIDENT_FIELDS)
+        return max(self._table_bytes(t, fields), 1)
 
     @staticmethod
     def _rule_free(t: DeviceTrie, cfg: EngineConfig) -> bool:
@@ -240,6 +267,20 @@ class PallasSubstrate(Substrate):
         (HBM tables behind the DMA tier), or ``None`` (jnp fallback —
         static shapes outside the kernel envelope)."""
         budget = self._budget(cfg)
+        if pk.is_packed(t):
+            # compressed layout: always the fused locus kernel (the
+            # rule-free walk shortcut's dense CSR is elided); the
+            # streamed tier's windows are width-1 u8 gathers, so the
+            # stream-tile envelope does not apply
+            if not self._fuse_shapes_ok(cfg, seq_len):
+                return None
+            resident = self._table_bytes(
+                t, self._WALK_RESIDENT_FIELDS_PACKED)
+            total = resident + self._table_bytes(
+                t, self._WALK_STREAM_FIELDS_PACKED)
+            if total <= budget:
+                return "resident"
+            return "streamed" if resident <= budget else None
         # the streamed tier stages [lanes, tile]-wide windows in VMEM
         # scratch, so the stream-tile widths are part of its envelope
         tiles_ok = (cfg.walk_tile <= self._STREAM_MAX_TILE
@@ -269,6 +310,8 @@ class PallasSubstrate(Substrate):
         if variant is None:
             return super().walk_batch(t, cfg, qs, qlens)
         streamed = variant == "streamed"
+        if pk.is_packed(t):
+            return ops.locus_walk(t, cfg, qs, qlens, streamed=streamed)
         if self._rule_free(t, cfg):
             node, depth = ops.trie_walk(t.first_child, t.edge_char,
                                         t.edge_child, qs, qlens,
@@ -296,6 +339,14 @@ class PallasSubstrate(Substrate):
                 or cfg.max_steps > self._BEAM_MAX_STEPS \
                 or cfg.frontier > cfg.gens \
                 or cfg.expand > cfg.gens:
+            return None
+        if pk.is_packed(t):
+            # no streamed packed beam tier: the packed emission store is
+            # already branch-count-sized, so over-budget cases are rare
+            # and the jnp reference answers them bit-identically
+            if self._table_bytes(t, self._BEAM_FIELDS_PACKED) \
+                    <= self._budget(cfg):
+                return "resident"
             return None
         if self._table_bytes(t, self._BEAM_FIELDS) <= self._budget(cfg):
             return "resident"
@@ -328,11 +379,19 @@ class PallasSubstrate(Substrate):
         # tables whole in VMEM; there is no streamed cached tier yet
         # (ROADMAP follow-on), so caches over the budget answer through
         # the jnp reference merge instead of an unfittable kernel
-        if self._table_bytes(t, self._CACHE_FIELDS) > self._budget(cfg):
+        cache_fields = (self._CACHE_FIELDS_PACKED if pk.is_packed(t)
+                        else self._CACHE_FIELDS)
+        if self._table_bytes(t, cache_fields) > self._budget(cfg):
             return super().cached_topk_batch(t, cfg, loci, k)
         from repro.kernels import ops
 
         exact = jnp.ones(loci.shape[:-1], bool)
+        if pk.is_packed(t):
+            # quantized cache: translate loci to chain-representative
+            # ranks and decode the row planes in-jit, then reuse the
+            # uncompressed merge kernel unchanged
+            s, p = ops.cached_topk_merge_packed(t, loci, k)
+            return s, p, exact
         if self._rule_free(t, cfg):
             # single-locus rows: the gather is one row per query; merging
             # reduces to selecting from the node's own (sorted) top-K list

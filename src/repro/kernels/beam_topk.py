@@ -54,6 +54,7 @@ vmapped jnp reference.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -160,6 +161,80 @@ class _StreamedEmit:
 
     def lsid(self, nodes):
         return self.lsid_t.gather(nodes)
+
+
+def _pk_iters(size: int) -> int:
+    """Fixed trip count that lets a binary search converge over a
+    ``size``-entry sorted table."""
+    return max(1, int(math.ceil(math.log2(max(size, 1) + 1))))
+
+
+def _pk_rank(ids, nodes, iters: int):
+    """Sorted-id-table rank (clipped) + exact flag; mirrors
+    ``engine.packed._rank`` as a fixed-trip binary search."""
+    size = int(ids.shape[0])
+    lo = jnp.zeros_like(nodes)
+    hi = jnp.full_like(nodes, size)
+    for _ in range(iters):
+        cont = lo < hi
+        mid = (lo + hi) >> 1
+        v = jnp.take(ids, jnp.clip(mid, 0, max(size, 1) - 1))
+        go_right = v < nodes
+        lo = jnp.where(cont & go_right, mid + 1, lo)
+        hi = jnp.where(cont & ~go_right, mid, hi)
+    rc = jnp.clip(lo, 0, max(size, 1) - 1)
+    return rc, (lo < size) & (jnp.take(ids, rc) == nodes)
+
+
+class _PackedEmit:
+    """Compressed-layout emission reads: stored nodes (``c_ids`` rows)
+    read their compacted emission lists; an unstored (unary non-terminal
+    dict) node's list is exactly ``[(v+1, max_score, not-leaf)]``, read
+    off its chain representative — the same forms as
+    :mod:`repro.core.engine.packed`.  Narrow (u8/u16) values widen to
+    i32 at the read."""
+
+    _IS_SYN = 4   # p_flags bit (mirror engine.packed)
+
+    def __init__(self, flags, c_ids, eptr, enode, escore, eleaf,
+                 maxscore, l_ids, l_sid):
+        self.flags, self.c_ids, self.eptr = flags, c_ids, eptr
+        self.enode, self.escore, self.eleaf = enode, escore, eleaf
+        self.maxscore, self.l_ids, self.l_sid = maxscore, l_ids, l_sid
+        self.e_size = max(int(enode.shape[0]), 1)
+
+    def emit_bound(self, nodes, cursors):
+        valid = nodes >= 0
+        n = jnp.where(valid, nodes, 0)
+        rc, stored = _pk_rank(self.c_ids, n,
+                              _pk_iters(int(self.c_ids.shape[0])))
+        e = jnp.take(self.eptr, rc) + cursors
+        ok_s = stored & (e < jnp.take(self.eptr, rc + 1))
+        sc_s = jnp.take(self.escore,
+                        jnp.clip(e, 0, self.e_size - 1)).astype(jnp.int32)
+        fl = jnp.take(self.flags, n).astype(jnp.int32)
+        derived = ~stored & ((fl & self._IS_SYN) == 0) & (cursors == 0)
+        ms = jnp.take(self.maxscore, rc).astype(jnp.int32)
+        bound = jnp.where(ok_s, sc_s, jnp.where(derived, ms, _NEG_ONE))
+        return jnp.where(valid, bound, _NEG_ONE)
+
+    def pop_emissions(self, nodes, cursors):
+        rc, stored = _pk_rank(self.c_ids, nodes,
+                              _pk_iters(int(self.c_ids.shape[0])))
+        e = jnp.clip(jnp.take(self.eptr, rc) + cursors, 0, self.e_size - 1)
+        ms = jnp.take(self.maxscore, rc).astype(jnp.int32)
+        node = jnp.where(stored, jnp.take(self.enode, e), nodes + 1)
+        score = jnp.where(stored,
+                          jnp.take(self.escore, e).astype(jnp.int32), ms)
+        leaf = jnp.where(stored, jnp.take(self.eleaf, e) != 0, False)
+        return node, score, leaf
+
+    def lsid(self, nodes):
+        size = max(int(self.l_ids.shape[0]), 1)
+        rc, _ = _pk_rank(self.l_ids, nodes,
+                         _pk_iters(int(self.l_ids.shape[0])))
+        return jnp.take(self.l_sid,
+                        jnp.clip(rc, 0, size - 1)).astype(jnp.int32)
 
 
 def _search(tabs, loci,
@@ -271,6 +346,19 @@ def _kernel(eptr_ref, enode_ref, escore_ref, eleaf_ref, lsid_ref,
             gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref, **statics)
 
 
+def _kernel_packed(flg_ref, c_ids_ref, eptr_ref, enode_ref, escore_ref,
+                   eleaf_ref, ms_ref, l_ids_ref, lsid_ref,
+                   loci_ref,
+                   os_ref, oi_ref, oe_ref,
+                   gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref,
+                   **statics):
+    tabs = _PackedEmit(flg_ref[...], c_ids_ref[...], eptr_ref[...],
+                       enode_ref[...], escore_ref[...], eleaf_ref[...],
+                       ms_ref[...], l_ids_ref[...], lsid_ref[...])
+    _search(tabs, loci_ref[...], os_ref, oi_ref, oe_ref,
+            gn_ref, gc_ref, gb_ref, ls_ref, li_ref, dm_ref, **statics)
+
+
 def _kernel_streamed(eptr_hbm, enode_hbm, escore_hbm, eleaf_hbm, lsid_hbm,
                      loci_ref,
                      os_ref, oi_ref, oe_ref,
@@ -343,6 +431,29 @@ def beam_topk_batch(emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid,
     kernel = functools.partial(_kernel, gens=gens, expand=expand, k=k,
                                max_steps=max_steps)
     tables = [emit_ptr, emit_node, emit_score, emit_is_leaf, leaf_sid]
+    return _call(kernel, tables, [full(a) for a in tables], loci, [],
+                 k=k, gens=gens, block_b=block_b, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gens", "expand", "k", "max_steps", "block_b", "interpret"))
+def beam_topk_batch_packed(p_flags, c_ids, c_eptr, c_enode, c_escore,
+                           c_eleaf, c_maxscore, l_ids, l_sid, loci, *,
+                           gens: int, expand: int, k: int, max_steps: int,
+                           block_b: int = 8, interpret: bool = True):
+    """Compressed-layout variant of :func:`beam_topk_batch`: same
+    contract and bit-identical results, reading the packed emission store
+    (u8 flags, sorted ``c_ids`` side tables, u16-or-i32 scores/sids)
+    VMEM-resident.  ``c_enode`` must be non-empty (the degenerate empty
+    dictionary short-circuits in ops.py, like the uncompressed path)."""
+    def full(a):
+        shape = tuple(int(s) for s in a.shape)
+        return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
+
+    kernel = functools.partial(_kernel_packed, gens=gens, expand=expand,
+                               k=k, max_steps=max_steps)
+    tables = [p_flags, c_ids, c_eptr, c_enode, c_escore, c_eleaf,
+              c_maxscore, l_ids, l_sid]
     return _call(kernel, tables, [full(a) for a in tables], loci, [],
                  k=k, gens=gens, block_b=block_b, interpret=interpret)
 

@@ -230,6 +230,130 @@ class _StreamedTables:
         return jnp.where(found, tgt, _NEG_ONE)
 
 
+def _packed_rank(ids, nodes):
+    """Position of each node in a sorted id table: (clipped_rank, exact).
+    Mirrors ``engine.packed._rank``; a padded single ``-1`` row (empty
+    table, see ops._nonempty) never matches a node id >= 0."""
+    size = int(ids.shape[0])
+    lo = jnp.zeros_like(nodes)
+    hi = jnp.full_like(nodes, size)
+    pos = _lower_bound(ids, lo, hi, nodes, _iters(size))
+    rc = jnp.clip(pos, 0, max(size, 1) - 1)
+    return rc, (pos < size) & (jnp.take(ids, rc) == nodes)
+
+
+# p_flags bits (mirror engine.packed; plain ints for kernel tracing)
+_PK_DICT_UNARY = 1
+_PK_SYN_UNARY = 2
+_PK_IS_SYN = 4
+
+
+class _PackedResidentTables:
+    """VMEM-resident reads of the compressed layout — the same forms as
+    :mod:`repro.core.engine.packed`, lowered through the seam the sweep
+    already speaks.  Narrow (u8) values widen to i32 at the read."""
+
+    def __init__(self, labels, flags, c_ids, c_tout,
+                 b_ids, b_ptr, b_char, b_child,
+                 sb_ids, sb_ptr, sb_char, sb_child,
+                 t_ids, tele_plane, la_ids, la_ptr, lrule, ltgt):
+        self.labels, self.flags = labels, flags
+        self.c_ids, self.c_tout = c_ids, c_tout
+        self.b_ids, self.b_ptr = b_ids, b_ptr
+        self.b_char, self.b_child = b_char, b_child
+        self.sb_ids, self.sb_ptr = sb_ids, sb_ptr
+        self.sb_char, self.sb_child = sb_char, sb_child
+        self.t_ids, self.tele_plane = t_ids, tele_plane
+        self.la_ids, self.la_ptr = la_ids, la_ptr
+        self.lrule, self.ltgt = lrule, ltgt
+        self.n_nodes = int(labels.shape[0])
+
+    # the two N-sized plane reads — the only loads the streamed packed
+    # tier overrides
+    def _flags(self, nodes):
+        return jnp.take(self.flags, nodes).astype(jnp.int32)
+
+    def _label_next(self, nodes):
+        return jnp.take(self.labels,
+                        jnp.clip(nodes + 1, 0,
+                                 self.n_nodes - 1)).astype(jnp.int32)
+
+    def _children(self, ids, ptr, chars, children, unary_bit, nodes, ch):
+        valid = nodes >= 0
+        n = jnp.where(valid, nodes, 0)
+        ok_u = ((self._flags(n) & unary_bit) != 0) \
+            & (self._label_next(n) == ch) & valid & (ch >= 0)
+        u_child = jnp.where(ok_u, n + 1, _NEG_ONE)
+        rc, isrow = _packed_rank(ids, n)
+        lo = jnp.take(ptr, rc)
+        hi = jnp.where(isrow, jnp.take(ptr, rc + 1), lo)
+        pos = _lower_bound(chars, lo, hi, ch, _iters(int(chars.shape[0])))
+        posc = jnp.clip(pos, 0, max(int(chars.shape[0]), 1) - 1)
+        found = (pos < hi) & \
+            (jnp.take(chars, posc).astype(jnp.int32) == ch) \
+            & valid & (ch >= 0)
+        row_child = jnp.where(found, jnp.take(children, posc), _NEG_ONE)
+        return jnp.where(isrow, row_child, u_child)
+
+    def dict_children(self, nodes, ch):
+        return self._children(self.b_ids, self.b_ptr, self.b_char,
+                              self.b_child, _PK_DICT_UNARY, nodes, ch)
+
+    def syn_children(self, nodes, ch):
+        return self._children(self.sb_ids, self.sb_ptr, self.sb_char,
+                              self.sb_child, _PK_SYN_UNARY, nodes, ch)
+
+    def tele_rows(self, nodes):
+        rc, exact = _packed_rank(self.t_ids, nodes)
+        rows = _plane_rows(self.tele_plane, rc)
+        return jnp.where(exact[..., None], rows, _NEG_ONE)
+
+    def syn_mask_of(self, nodes):
+        # 0/IS_SYN int; the sweep only compares against 0
+        return self._flags(nodes) & _PK_IS_SYN
+
+    def tout_of(self, nodes):
+        rc, _ = _packed_rank(self.c_ids, nodes)
+        return jnp.where((self._flags(nodes) & _PK_IS_SYN) != 0,
+                         nodes + 1, jnp.take(self.c_tout, rc))
+
+    def link_lookup(self, anchors, rid):
+        n_link = int(self.lrule.shape[0])
+        valid = anchors >= 0
+        a = jnp.where(valid, anchors, 0)
+        rc, isrow = _packed_rank(self.la_ids, a)
+        lo = jnp.take(self.la_ptr, rc)
+        hi = jnp.where(isrow, jnp.take(self.la_ptr, rc + 1), lo)
+        pos = _lower_bound(self.lrule, lo, hi, rid[:, None], _iters(n_link))
+        posc = jnp.clip(pos, 0, max(n_link, 1) - 1)
+        found = (pos < hi) & \
+            (jnp.take(self.lrule, posc) == rid[:, None]) & valid
+        return jnp.where(found, jnp.take(self.ltgt, posc), _NEG_ONE)
+
+
+class _PackedStreamedTables(_PackedResidentTables):
+    """Packed tier with the two N-sized u8 planes (labels/flags) DMA'd
+    per access; every sparse side table — branch-count-sized, tiny next
+    to the planes — stays VMEM-resident.  ``StreamTable.windows`` widens
+    the u8 staging rows to i32, so the reads are the resident forms'."""
+
+    def __init__(self, lbl_t, flg_t, *side):
+        self.lbl_t, self.flg_t = lbl_t, flg_t
+        (self.c_ids, self.c_tout,
+         self.b_ids, self.b_ptr, self.b_char, self.b_child,
+         self.sb_ids, self.sb_ptr, self.sb_char, self.sb_child,
+         self.t_ids, self.tele_plane,
+         self.la_ids, self.la_ptr, self.lrule, self.ltgt) = side
+        self.n_nodes = int(lbl_t.hbm.shape[0])
+
+    def _flags(self, nodes):
+        return self.flg_t.gather(nodes)
+
+    def _label_next(self, nodes):
+        return self.lbl_t.gather(
+            jnp.clip(nodes + 1, 0, self.n_nodes - 1))
+
+
 def _tele_expand(tabs, row, width: int):
     """Frontier row [BQ, F] -> row plus teleport targets, dedup'd back."""
     bq, f = row.shape
@@ -398,6 +522,45 @@ def _kernel_streamed(fc_hbm, ec_hbm, echild_hbm,
            q_ref[...], qlen_ref[...], loci_ref, ov_ref, **statics)
 
 
+def _kernel_packed(lbl_ref, flg_ref, c_ids_ref, c_tout_ref,
+                   b_ids_ref, b_ptr_ref, b_char_ref, b_child_ref,
+                   sb_ids_ref, sb_ptr_ref, sb_char_ref, sb_child_ref,
+                   t_ids_ref, tele_ref, la_ids_ref, la_ptr_ref,
+                   lrule_ref, ltgt_ref,
+                   rfc_ref, rec_ref, rechild_ref, rterm_ref,
+                   q_ref, qlen_ref,
+                   loci_ref, ov_ref, **statics):
+    tabs = _PackedResidentTables(
+        lbl_ref[...], flg_ref[...], c_ids_ref[...], c_tout_ref[...],
+        b_ids_ref[...], b_ptr_ref[...], b_char_ref[...], b_child_ref[...],
+        sb_ids_ref[...], sb_ptr_ref[...], sb_char_ref[...],
+        sb_child_ref[...], t_ids_ref[...], tele_ref[...],
+        la_ids_ref[...], la_ptr_ref[...], lrule_ref[...], ltgt_ref[...])
+    _sweep(tabs, rfc_ref[...], rec_ref[...], rechild_ref[...], rterm_ref[...],
+           q_ref[...], qlen_ref[...], loci_ref, ov_ref, **statics)
+
+
+def _kernel_packed_streamed(lbl_hbm, flg_hbm, c_ids_ref, c_tout_ref,
+                            b_ids_ref, b_ptr_ref, b_char_ref, b_child_ref,
+                            sb_ids_ref, sb_ptr_ref, sb_char_ref,
+                            sb_child_ref, t_ids_ref, tele_ref,
+                            la_ids_ref, la_ptr_ref, lrule_ref, ltgt_ref,
+                            rfc_ref, rec_ref, rechild_ref, rterm_ref,
+                            q_ref, qlen_ref,
+                            loci_ref, ov_ref,
+                            lbl_buf, flg_buf, sem_l, sem_f, **statics):
+    tabs = _PackedStreamedTables(
+        StreamTable(lbl_hbm, lbl_buf, sem_l, 1),
+        StreamTable(flg_hbm, flg_buf, sem_f, 1),
+        c_ids_ref[...], c_tout_ref[...],
+        b_ids_ref[...], b_ptr_ref[...], b_char_ref[...], b_child_ref[...],
+        sb_ids_ref[...], sb_ptr_ref[...], sb_char_ref[...],
+        sb_child_ref[...], t_ids_ref[...], tele_ref[...],
+        la_ids_ref[...], la_ptr_ref[...], lrule_ref[...], ltgt_ref[...])
+    _sweep(tabs, rfc_ref[...], rec_ref[...], rechild_ref[...], rterm_ref[...],
+           q_ref[...], qlen_ref[...], loci_ref, ov_ref, **statics)
+
+
 def _call(kernel, tables, table_specs, queries, qlens, scratch, *,
           frontier: int, block_q: int, interpret: bool):
     bsz, seq_len = queries.shape
@@ -509,6 +672,91 @@ def locus_dp_walk_streamed(first_child, edge_char, edge_child,
         pltpu.SemaphoreType.DMA((2,)),
         pltpu.SemaphoreType.DMA((2,)),
         pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    return _call(kernel, tables, specs, queries, qlens, scratch,
+                 frontier=frontier, block_q=block_q, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "frontier", "rule_matches", "max_lhs_len", "max_terms", "has_syn",
+    "has_tele", "has_links", "block_q", "interpret"))
+def locus_dp_walk_packed(p_labels, p_flags, c_ids, c_tout,
+                         b_ids, b_ptr, b_char, b_child,
+                         sb_ids, sb_ptr, sb_char, sb_child,
+                         t_ids, tele_plane, la_ids, la_ptr,
+                         link_rule, link_target,
+                         r_first_child, r_edge_char, r_edge_child,
+                         r_term_plane, queries, qlens, *,
+                         frontier: int, rule_matches: int, max_lhs_len: int,
+                         max_terms: int, has_syn: bool, has_tele: bool,
+                         has_links: bool, block_q: int = 8,
+                         interpret: bool = True):
+    """Fused locus DP over the compressed (packed) layout, every table
+    VMEM-resident.  Same contract and bit-identical results as
+    :func:`locus_dp_walk`; the table set is the packed one — u8
+    labels/flags planes plus the sparse side tables (empties padded to
+    one inert ``-1`` row by the ops wrapper, which no node id matches)."""
+    def full(a):
+        shape = tuple(int(s) for s in a.shape)
+        return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
+
+    kernel = functools.partial(
+        _kernel_packed, frontier=frontier, rule_matches=rule_matches,
+        max_lhs_len=max_lhs_len, max_terms=max_terms, has_syn=has_syn,
+        has_tele=has_tele, has_links=has_links,
+        seq_len=int(queries.shape[1]))
+    tables = [p_labels, p_flags, c_ids, c_tout,
+              b_ids, b_ptr, b_char, b_child,
+              sb_ids, sb_ptr, sb_char, sb_child,
+              t_ids, tele_plane, la_ids, la_ptr, link_rule, link_target,
+              r_first_child, r_edge_char, r_edge_child, r_term_plane]
+    return _call(kernel, tables, [full(a) for a in tables], queries, qlens,
+                 [], frontier=frontier, block_q=block_q, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "frontier", "rule_matches", "max_lhs_len", "max_terms", "has_syn",
+    "has_tele", "has_links", "block_q", "interpret"))
+def locus_dp_walk_packed_streamed(p_labels, p_flags, c_ids, c_tout,
+                                  b_ids, b_ptr, b_char, b_child,
+                                  sb_ids, sb_ptr, sb_char, sb_child,
+                                  t_ids, tele_plane, la_ids, la_ptr,
+                                  link_rule, link_target,
+                                  r_first_child, r_edge_char, r_edge_child,
+                                  r_term_plane, queries, qlens, *,
+                                  frontier: int, rule_matches: int,
+                                  max_lhs_len: int, max_terms: int,
+                                  has_syn: bool, has_tele: bool,
+                                  has_links: bool, block_q: int = 4,
+                                  interpret: bool = True):
+    """HBM-resident variant of :func:`locus_dp_walk_packed`: only the two
+    N-sized u8 planes (labels/flags) stay in HBM and stream per access as
+    width-1 windows through their own u8 staging buffers; the sparse side
+    tables and the rule trie — branch-count-sized — stay VMEM-resident.
+    No stream-tile parameter: the packed layout's windows are single
+    elements, so the tile-aligned layout plays no role here."""
+    def full(a):
+        shape = tuple(int(s) for s in a.shape)
+        return pl.BlockSpec(shape, (lambda i: (0,) * len(shape)))
+
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
+    kernel = functools.partial(
+        _kernel_packed_streamed, frontier=frontier,
+        rule_matches=rule_matches, max_lhs_len=max_lhs_len,
+        max_terms=max_terms, has_syn=has_syn, has_tele=has_tele,
+        has_links=has_links, seq_len=int(queries.shape[1]))
+    tables = [p_labels, p_flags, c_ids, c_tout,
+              b_ids, b_ptr, b_char, b_child,
+              sb_ids, sb_ptr, sb_char, sb_child,
+              t_ids, tele_plane, la_ids, la_ptr, link_rule, link_target,
+              r_first_child, r_edge_char, r_edge_child, r_term_plane]
+    specs = [hbm] * 2 + [full(a) for a in tables[2:]]
+    lanes = block_q * frontier
+    scratch = [
+        pltpu.VMEM((lanes, 1), jnp.uint8),   # label window stage
+        pltpu.VMEM((lanes, 1), jnp.uint8),   # flag window stage
         pltpu.SemaphoreType.DMA((2,)),
         pltpu.SemaphoreType.DMA((2,)),
     ]

@@ -97,6 +97,22 @@ def _nonempty(a, fill=-1):
     return jnp.full((1,) + tuple(a.shape[1:]), fill, a.dtype)
 
 
+def _pair_ptr(ptr):
+    """Pad a CSR pointer table to >= 2 entries so ``ptr[rc + 1]`` stays
+    in bounds for the packed kernels' padded single ``-1`` id row (whose
+    lookups are discarded — no node id matches -1)."""
+    if int(ptr.shape[0]) >= 2:
+        return ptr
+    return jnp.zeros((2,), ptr.dtype)
+
+
+def _is_packed(t) -> bool:
+    """Compressed-layout probe on a duck-typed DeviceTrie (mirrors
+    ``engine.packed.is_packed`` without importing the engine)."""
+    return getattr(t, "p_labels", None) is not None \
+        and int(t.p_labels.shape[0]) > 0
+
+
 def locus_walk(t, cfg, queries, qlens, block_q: int = 8,
                streamed: bool = False):
     """Fused synonym-aware locus DP; see kernels/locus_dp.py.
@@ -115,6 +131,35 @@ def locus_walk(t, cfg, queries, qlens, block_q: int = 8,
         block_q = min(4, block_q)
     block_q = min(block_q, max(int(queries.shape[0]), 1))
     q, ql, b = _pad_query_batch(queries, qlens, block_q)
+    if _is_packed(t):
+        from repro.kernels.locus_dp import (
+            locus_dp_walk_packed as _locus_dp_packed,
+            locus_dp_walk_packed_streamed as _locus_dp_packed_streamed)
+
+        tables = (
+            t.p_labels, t.p_flags, t.c_ids, t.c_tout,
+            _nonempty(t.b_ids), _pair_ptr(t.b_ptr),
+            _nonempty(t.b_char), _nonempty(t.b_child),
+            _nonempty(t.sb_ids), _pair_ptr(t.sb_ptr),
+            _nonempty(t.sb_char), _nonempty(t.sb_child),
+            _nonempty(t.t_ids), _nonempty(t.t_plane),
+            _nonempty(t.la_ids), _pair_ptr(t.la_ptr),
+            _nonempty(t.link_rule), _nonempty(t.link_target),
+            t.r_first_child, _nonempty(t.r_edge_char),
+            _nonempty(t.r_edge_child), t.r_term_plane)
+        statics = dict(
+            frontier=cfg.frontier, rule_matches=cfg.rule_matches,
+            max_lhs_len=cfg.max_lhs_len, max_terms=cfg.max_terms_per_node,
+            # syn nodes exist iff teleports do (every expanded branch
+            # ends in one) or a non-unary syn row was stored
+            has_syn=int(t.t_ids.shape[0]) > 0
+            or int(t.sb_child.shape[0]) > 0,
+            has_tele=cfg.teleports > 0,
+            has_links=int(t.link_rule.shape[0]) > 0,
+            block_q=block_q, interpret=_interpret())
+        fn = _locus_dp_packed_streamed if streamed else _locus_dp_packed
+        loci, overflow = fn(*tables, q, ql, **statics)
+        return loci[:b], overflow[:b]
     tables = (
         t.first_child, t.edge_char, t.edge_child,
         t.s_first_child, _nonempty(t.s_edge_char), _nonempty(t.s_edge_child),
@@ -156,11 +201,31 @@ def beam_topk(t, cfg, loci, k: int, block_b: int = 8,
         beam_topk_batch_streamed as _beam_topk_streamed
 
     B = int(loci.shape[0])
-    if int(t.emit_node.shape[0]) == 0:
+    packed = _is_packed(t)
+    empty = (int(t.c_enode.shape[0]) == 0 if packed
+             else int(t.emit_node.shape[0]) == 0)
+    if empty:
         # degenerate empty dictionary: mirror the reference's short-circuit
         return (jnp.full((B, k), -1, jnp.int32),
                 jnp.full((B, k), -1, jnp.int32),
                 jnp.ones((B,), bool))
+    if packed:
+        if streamed:
+            raise ValueError(
+                "no streamed packed beam tier — the substrate probe "
+                "routes over-budget packed tries to the jnp reference")
+        from repro.kernels.beam_topk import \
+            beam_topk_batch_packed as _beam_topk_packed
+
+        block_b = min(block_b, max(B, 1))
+        l, b = _pad_rows(loci, block_b, -1)
+        s, i, e = _beam_topk_packed(
+            t.p_flags, t.c_ids, t.c_eptr, t.c_enode, t.c_escore,
+            t.c_eleaf, t.c_maxscore, _nonempty(t.l_ids),
+            _nonempty(t.l_sid), l, gens=cfg.gens, expand=cfg.expand,
+            k=k, max_steps=cfg.max_steps, block_b=block_b,
+            interpret=_interpret())
+        return s[:b], i[:b], e[:b].astype(bool)
     if streamed:
         block_b = min(4, block_b)
     block_b = min(block_b, max(B, 1))
@@ -213,6 +278,25 @@ def cached_topk_merge(loci, topk_score, topk_sid, k: int, block_b: int = 8):
     s, p = _locus_topk_merge(l, topk_score, topk_sid, k, block_b=block_b,
                              interpret=_interpret())
     return s[:b], p[:b]
+
+
+def cached_topk_merge_packed(t, loci, k: int, block_b: int = 8):
+    """Cached merge over the compressed layout's quantized cache.
+
+    Translates each locus to its chain-representative rank in ``c_ids``
+    (an unstored unary node's cache row equals its representative's, a
+    pack-time invariant) and decodes the u16-or-i32 row planes back to
+    raw i32 in-jit, then reuses :func:`cached_topk_merge` unchanged —
+    the candidates and their order are exactly the uncompressed path's.
+    """
+    from repro.core.engine import packed as pk
+
+    valid = loci >= 0
+    rc, _ = pk._rank(t.c_ids, jnp.where(valid, loci, 0))
+    rloci = jnp.where(valid, rc, -1)
+    dec_s = pk.decode_cache_scores(t.pc_score, t.pc_base)
+    dec_i = pk.decode_cache_sids(t.pc_sid)
+    return cached_topk_merge(rloci, dec_s, dec_i, k, block_b=block_b)
 
 
 def embedding_bag(table, indices, offsets, weights=None, mode: str = "sum",

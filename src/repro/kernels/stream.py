@@ -101,6 +101,11 @@ class StreamTable:
                 f"StreamTable: staging buffer is narrower than the "
                 f"window ({int(buf_ref.shape[-1])} < {self.width}) — "
                 f"each DMA would write past its staging row")
+        assert hbm_ref.dtype == buf_ref.dtype, (
+            f"StreamTable: staging buffer dtype {buf_ref.dtype} does "
+            f"not match the HBM table dtype {hbm_ref.dtype} — the "
+            f"packed layout's narrow (u8) tables need their own "
+            f"staging buffers; widening happens at the read")
 
     def _dma(self, j, slot, start):
         if len(self.hbm.shape) == 2:              # row plane: whole row
@@ -129,7 +134,10 @@ class StreamTable:
             return [self._dma(j, slot, start)]
 
         pipelined_dma(n, make)
-        vals = self.buf[...][:n, : self.width]
+        # widen at the read: narrow (u8) staging rows surface as i32, so
+        # every in-window compare/select downstream sees the same values
+        # the resident gathers see (and -1 sentinels survive jnp.where)
+        vals = self.buf[...][:n, : self.width].astype(jnp.int32)
         return vals.reshape(tuple(starts.shape) + (self.width,))
 
     def gather(self, idx):

@@ -48,7 +48,8 @@ def _make_index(spec, args):
             ds.strings, ds.scores, make_rules(ds.rules),
             IndexSpec(kind=args.index_kind, cache_k=args.cache_k,
                       substrate=args.substrate or "auto",
-                      memory_budget=args.memory_budget or 0))
+                      memory_budget=args.memory_budget or 0,
+                      compression=args.compression))
     build_s = time.perf_counter() - t0
     if args.save_index:
         idx.save(args.save_index)
@@ -71,6 +72,7 @@ def serve_autocomplete(spec, args):
     out = {
         "arch": spec.arch_id, "kind": idx.kind,
         "substrate": idx.substrate,
+        "compression": idx.compression,
         "memory_budget": idx.memory_budget,
         "workload": "batch",
         "n_strings": idx.stats.n_strings,
@@ -102,6 +104,7 @@ def serve_keystroke(spec, args):
     out = {
         "arch": spec.arch_id, "kind": idx.kind,
         "substrate": idx.substrate,
+        "compression": idx.compression,
         "memory_budget": idx.memory_budget,
         "workload": "keystroke",
         "n_strings": idx.stats.n_strings,
@@ -150,6 +153,12 @@ def main():
     ap.add_argument("--index-kind", default="et",
                     choices=["tt", "et", "ht", "plain"])
     ap.add_argument("--cache-k", type=int, default=0)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "packed"],
+                    help="on-device index layout; packed = format-v4 "
+                         "compressed tables (narrow dtypes, elided "
+                         "planes, collapsed unary chains). Ignored with "
+                         "--load-index (the container records it)")
     ap.add_argument("--substrate", default=None,
                     choices=["jnp", "pallas", "auto"],
                     help="execution substrate; auto = pallas on TPU, jnp "

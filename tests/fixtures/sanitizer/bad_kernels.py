@@ -8,3 +8,11 @@ from jax.experimental.pallas import tpu as pltpu
 def walk_kernel(qs, cols, node, *, walk_tile=8, frontier=4):
     scratch = pltpu.VMEM((frontier, walk_tile), jnp.int32)  # PLANT: ENV002 ENV003
     return qs, cols, node, scratch
+
+
+def packed_stage_kernel(labels):
+    # narrow-dtype staging for the compressed layout: the u16 itemsize
+    # must be what the scratch accounting multiplies by — 2 B/elem over
+    # 2^23 rows is still past the 16 MiB VMEM capacity
+    stage = pltpu.VMEM((1 << 23, 2), jnp.uint16)  # PLANT: ENV003
+    return labels, stage

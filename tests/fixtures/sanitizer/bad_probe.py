@@ -10,10 +10,15 @@ class DeviceTrie(NamedTuple):
     edge_char: object
     edge_child: object
     tele_plane: object
+    # compressed (format v4) planes
+    p_flags: object
+    pc_score: object
+    pc_sid: object
 
 
 class FixtureSubstrate:
     _WALK_FIELDS = ("first_child", "edge_char", "edge_child")
+    _CACHE_FIELDS = ("pc_sid",)
     _MAX_FRONTIER = 1 << 20
 
     @staticmethod
@@ -33,6 +38,13 @@ class FixtureSubstrate:
         cols = t.tele_plane               # read but not in _WALK_FIELDS
         node = t.first_child
         return walk_kernel(qs, cols, node, walk_tile=cfg.walk_tile)
+
+    def cached_topk_batch(self, t, cfg, loci, k):  # PLANT: ENV001
+        if self._table_bytes(t, self._CACHE_FIELDS) > cfg.memory_budget:
+            return None
+        flags = t.p_flags      # compressed planes read but the byte
+        enc = t.pc_score       # accounting only claims pc_sid
+        return flags, enc, loci, k
 
 
 def beam_seed_pool(loci, gens=16):

@@ -148,6 +148,8 @@ def test_waiver_without_reason_is_itself_reported(tmp_path):
     ("walk_tile", 16),
     ("emit_tile", 16),
     ("link_tile", 16),
+    ("compression", "packed"),
+    ("table_widths", (("c_tout", "uint16"),)),
 ])
 def test_config_field_changes_produce_distinct_cache_entries(field, value):
     cache = CompileCache(maxsize=8)

@@ -1,0 +1,306 @@
+"""Compressed on-device layout (format v4): bit-identity, persistence
+migration, corruption rejection, and the space/tier wins.
+
+The packed layout keeps logical node ids unchanged, so every observable
+result — loci, scores, string ids, exactness — must be bit-identical to
+the uncompressed layout across the oracle, the jnp reference, and both
+pallas tiers (VMEM-resident and DMA-streamed, interpret mode on CPU).
+The space side is the acceptance gate of the layout itself: bytes/string
+must drop >= 4x and at least one workload must flip from the streamed
+tier to resident at an unchanged VMEM budget.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import CompletionIndex, IndexSpec, Session, build_index
+from repro.core import engine as eng
+from repro.core import make_rules
+from repro.core.engine import packed as pk
+from repro.core.oracle import OracleIndex
+
+KINDS = ["plain", "tt", "et", "ht"]
+
+QUERIES = ["", "a", "ap", "app", "appl", "b", "ban", "c", "j", "jc",
+           "jcp", "m", "mid", "midd", "do", "hou", "hound", "z", "q",
+           "xyz", "j c", "j c p"]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    strings = ["apple", "application", "apply", "banana", "band",
+               "bandana", "cat", "catalog", "dog", "dodge", "middle",
+               "midline", "midnight", "j c penney", "jcp", "pennies",
+               "zebra", "zebu", "a", "ab"]
+    scores = [50, 40, 30, 60, 20, 10, 70, 15, 80, 5, 33, 44, 55, 90, 25,
+              35, 12, 8, 3, 99]
+    rules = make_rules([("jcp", "j c penney"), ("j c penney", "jcp"),
+                        ("mid", "middle"), ("dog", "hound")])
+    return strings, scores, rules
+
+
+@pytest.fixture(scope="module")
+def big_corpus():
+    """~2000 strings with heavy prefix sharing: big enough that the
+    uncompressed index overflows a 1 MiB VMEM budget while the packed
+    one fits (the tier-flip regime the benchmark's FLIP_BUDGET row
+    measures)."""
+    syll = ["an", "ber", "cor", "dal", "el", "fin", "gor", "hal", "in",
+            "jor", "kel", "lor", "min", "nor", "ol", "per"]
+    rng = np.random.default_rng(7)
+    strings = []
+    for i in range(2000):
+        n = 3 + int(rng.integers(0, 4))
+        strings.append("".join(syll[int(j)]
+                               for j in rng.integers(0, len(syll), n)))
+    strings = sorted(set(strings))
+    scores = [int(s) for s in rng.integers(1, 10_000, len(strings))]
+    rules = make_rules([("an", "ander"), ("kel", "kelvin")])
+    return strings, scores, rules
+
+
+def _pair(corpus, kind, **kw):
+    """(uncompressed, packed) twins of one spec."""
+    strings, scores, rules = corpus
+    r = rules if kind != "plain" else []
+    base = IndexSpec(kind=kind, **kw)
+    return (build_index(strings, scores, r, base),
+            build_index(strings, scores, r,
+                        base.replace(compression="packed")))
+
+
+# -- bit-identity across substrates and tiers ---------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("cache_k", [0, 4])
+def test_packed_matches_unpacked_and_oracle(corpus, kind, cache_k):
+    ix_u, ix_p = _pair(corpus, kind, cache_k=cache_k)
+    ref = ix_u.complete(QUERIES, k=5)
+    assert ix_p.complete(QUERIES, k=5) == ref
+    strings, scores, rules = corpus
+    oracle = OracleIndex(strings, scores, rules if kind != "plain" else [])
+    for q, row in zip(QUERIES, ref):
+        assert [s for s, _ in row] == \
+            [s for s, _ in oracle.complete(q, 5)], q
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_packed_parity_on_pallas_tiers(corpus, kind):
+    ix_u, _ = _pair(corpus, kind, cache_k=4)
+    ref = ix_u.complete(QUERIES, k=5)
+    sub = eng.get_substrate("pallas")
+    for streamed in (False, True):
+        _, ix_p = _pair(corpus, kind, cache_k=4,
+                        substrate="pallas")
+        if streamed:
+            ix_p.set_memory_budget(sub.min_streamed_budget(ix_p.device))
+        variant = sub.walk_variant(ix_p.device, ix_p.cfg, 8)
+        assert variant == ("streamed" if streamed else "resident")
+        assert ix_p.complete(QUERIES, k=5) == ref, (kind, variant)
+
+
+def test_packed_session_parity(corpus):
+    ix_u, ix_p = _pair(corpus, "et", cache_k=4)
+    s_u, s_p = Session(ix_u, k=5), Session(ix_p, k=5)
+    for ch in "midd":
+        expect = s_u.type(ch)
+        assert s_p.type(ch) == expect
+    assert s_p.backspace() == s_u.backspace()
+    assert s_p.topk() == s_u.topk()
+
+
+def test_packed_device_elides_dense_planes(corpus):
+    _, ix_p = _pair(corpus, "ht", cache_k=4)
+    t = ix_p.device
+    assert pk.is_packed(t)
+    # the dense per-node planes ride as zero-size dummies on device
+    assert int(t.first_child.shape[0]) == 0
+    assert int(t.edge_char.shape[0]) == 0
+    # dtype tiers are recorded as static metadata on the config
+    assert dict(ix_p.cfg.table_widths)
+    assert ix_p.cfg.compression == "packed"
+
+
+# -- space + tier wins --------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_bytes_per_string_drops_4x(big_corpus, kind):
+    ix_u, ix_p = _pair(big_corpus, kind)
+    ratio = ix_u.stats.bytes_per_string / ix_p.stats.bytes_per_string
+    assert ratio >= 4.0, \
+        f"{kind}: packed only {ratio:.2f}x smaller " \
+        f"({ix_u.stats.bytes_per_string:.0f} -> " \
+        f"{ix_p.stats.bytes_per_string:.0f} B/string)"
+
+
+def test_packed_flips_streamed_to_resident_at_same_budget(big_corpus):
+    ix_u, ix_p = _pair(big_corpus, "et", cache_k=0, substrate="pallas")
+    sub = eng.get_substrate("pallas")
+    du, dp = ix_u.device, ix_p.device
+    u_walk_fields = (sub._PREFIX_FIELDS if sub._rule_free(du, ix_u.cfg)
+                     else sub._WALK_STREAM_FIELDS
+                     + sub._WALK_RESIDENT_FIELDS)
+    u_need = min(sub._table_bytes(du, u_walk_fields),
+                 sub._table_bytes(du, sub._BEAM_FIELDS))
+    p_need = max(
+        sub._table_bytes(dp, sub._WALK_STREAM_FIELDS_PACKED
+                         + sub._WALK_RESIDENT_FIELDS_PACKED),
+        sub._table_bytes(dp, sub._BEAM_FIELDS_PACKED))
+    # the layout's whole point: the packed footprint clears the
+    # residency bar the uncompressed one misses
+    assert p_need < u_need
+    budget = (p_need + u_need) // 2
+    ix_u.set_memory_budget(budget)
+    ix_p.set_memory_budget(budget)
+    assert sub.walk_variant(ix_u.device, ix_u.cfg, 8) == "streamed"
+    assert sub.walk_variant(ix_p.device, ix_p.cfg, 8) == "resident"
+    assert sub.beam_variant(ix_u.device, ix_u.cfg, 5) == "streamed"
+    assert sub.beam_variant(ix_p.device, ix_p.cfg, 5) == "resident"
+
+
+# -- persistence: v4 round-trip + v1/v2/v3 migration --------------------------
+
+
+def _rewrite(path, version, request_packed):
+    """Stamp a saved (uncompressed) container as an older format and
+    optionally flip its spec to ask for compression — the load path must
+    re-pack it to the v4 layout on the fly."""
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    meta = json.loads(arrays["__meta__"].tobytes().decode())
+    meta["format_version"] = version
+    if version < 2:   # pre-rule-plane container shape
+        for k in ("trie__tele_plane", "trie__link_ptr",
+                  "rule_trie__term_plane"):
+            arrays.pop(k, None)
+        for key in ("tele_width", "term_width"):
+            meta["cfg"].pop(key, None)
+    if request_packed:
+        meta["spec"]["compression"] = "packed"
+        # the stale cfg keeps its uncompressed identity: the on-load
+        # re-pack must recompute the dtype tiers itself
+        meta["cfg"]["compression"] = "none"
+        meta["cfg"]["table_widths"] = []
+    arrays["__meta__"] = np.frombuffer(json.dumps(meta).encode(),
+                                       dtype=np.uint8)
+    np.savez_compressed(path, **arrays)
+
+
+@pytest.mark.parametrize("version,kind", [
+    (1, "ht"), (1, "tt"), (2, "et"), (3, "ht"), (3, "et"),
+])
+def test_old_container_repacks_to_v4_on_load(corpus, tmp_path,
+                                             version, kind):
+    ix_u, ix_p = _pair(corpus, kind, cache_k=4)
+    ref = ix_u.complete(QUERIES, k=5)
+    path = str(tmp_path / "idx.npz")
+    ix_u.save(path)
+    _rewrite(path, version, request_packed=True)
+    loaded = CompletionIndex.load(path)
+    assert loaded.cfg.compression == "packed"
+    assert loaded.trie.has_packed
+    assert loaded.cfg.table_widths == ix_p.cfg.table_widths
+    assert loaded.complete(QUERIES, k=5) == ref
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_packed_save_load_roundtrip(corpus, tmp_path, kind):
+    ix_u, ix_p = _pair(corpus, kind, cache_k=4)
+    ref = ix_u.complete(QUERIES, k=5)
+    path = str(tmp_path / "packed.npz")
+    ix_p.save(path)
+    loaded = CompletionIndex.load(path)
+    assert loaded.cfg.compression == "packed"
+    assert loaded.cfg.table_widths == ix_p.cfg.table_widths
+    assert loaded.complete(QUERIES, k=5) == ref
+    for substrate in ("jnp", "pallas"):
+        assert loaded.set_substrate(substrate).complete(QUERIES, k=5) \
+            == ref
+
+
+def test_packed_container_elides_dense_planes(corpus, tmp_path):
+    ix_u, ix_p = _pair(corpus, "ht", cache_k=4)
+    pu, pp = str(tmp_path / "u.npz"), str(tmp_path / "p.npz")
+    ix_u.save(pu)
+    ix_p.save(pp)
+    with np.load(pp) as z:
+        names = set(z.files)
+    assert "trie__p_labels" in names
+    assert "trie__first_child" not in names
+    assert "trie__emit_node" not in names
+    import os
+    assert os.path.getsize(pp) < os.path.getsize(pu)
+
+
+# -- corruption / width-mismatch rejection ------------------------------------
+
+
+def _tamper(path, fn):
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    fn(arrays)
+    np.savez_compressed(path, **arrays)
+
+
+def _saved_packed(corpus, tmp_path):
+    _, ix_p = _pair(corpus, "ht", cache_k=4)
+    path = str(tmp_path / "packed.npz")
+    ix_p.save(path)
+    return path
+
+
+def test_load_rejects_truncated_side_table(corpus, tmp_path):
+    path = _saved_packed(corpus, tmp_path)
+    _tamper(path, lambda a: a.update(
+        trie__c_tout=a["trie__c_tout"][:-1]))
+    with pytest.raises(ValueError, match="side column length"):
+        CompletionIndex.load(path)
+
+
+def test_load_rejects_unsorted_packed_ids(corpus, tmp_path):
+    path = _saved_packed(corpus, tmp_path)
+
+    def swap(a):
+        ids = a["trie__c_ids"].copy()
+        assert len(ids) >= 2
+        ids[0], ids[1] = ids[1], ids[0]
+        a["trie__c_ids"] = ids
+    _tamper(path, swap)
+    with pytest.raises(ValueError, match="not sorted"):
+        CompletionIndex.load(path)
+
+
+def test_load_rejects_dtype_tier_mismatch(corpus, tmp_path):
+    path = _saved_packed(corpus, tmp_path)
+
+    def widen(a):
+        meta = json.loads(a["__meta__"].tobytes().decode())
+        widths = dict(meta["cfg"]["table_widths"])
+        assert "c_escore" in widths
+        widths["c_escore"] = "int32"      # array on disk stays narrow
+        meta["cfg"]["table_widths"] = sorted(widths.items())
+        a["__meta__"] = np.frombuffer(json.dumps(meta).encode(),
+                                      dtype=np.uint8)
+    _tamper(path, widen)
+    with pytest.raises(ValueError, match="width mismatch"):
+        CompletionIndex.load(path)
+
+
+def test_build_rejects_unknown_compression():
+    with pytest.raises(ValueError, match="compression"):
+        IndexSpec(kind="et", compression="zip").validate()
+
+
+# -- distributed: packed shards are rejected, not silently broken -------------
+
+
+def test_stack_shards_rejects_packed(corpus):
+    from repro.core.distributed import stack_shards
+
+    _, ix_p = _pair(corpus, "et")
+    with pytest.raises(NotImplementedError, match="packed"):
+        stack_shards([ix_p, ix_p])
