@@ -63,17 +63,32 @@ def load_history(path: str) -> list[dict]:
     return hist
 
 
-def append_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
+def _load_runs(smoke_paths) -> list[dict]:
+    if isinstance(smoke_paths, str):
+        smoke_paths = [smoke_paths]
+    runs = []
+    for path in smoke_paths:
+        with open(path) as f:
+            runs.append(json.load(f))
+    return runs
+
+
+def append_run(smoke_paths, history_path: str = DEFAULT_HISTORY,
                commit: str | None = None, timestamp: float | None = None):
-    """Append one smoke JSON to the trajectory; returns the new history."""
-    with open(smoke_path) as f:
-        run = json.load(f)
+    """Append one or more smoke JSONs to the trajectory as a single
+    entry; returns the new history.
+
+    Entries are replaced per commit, so smoke files from different
+    benchmarks (substrates, serving, ...) of the same CI run must be
+    folded into one entry here — appending them one call at a time would
+    leave only the last file's rows."""
+    runs = _load_runs(smoke_paths)
     entry = {
         "timestamp": timestamp if timestamp is not None else time.time(),
         "commit": commit or _commit(),
-        "backend": run.get("backend"),
-        "smoke": run.get("smoke"),
-        "rows": run.get("rows", []),
+        "backend": runs[0].get("backend"),
+        "smoke": runs[0].get("smoke"),
+        "rows": [row for run in runs for row in run.get("rows", [])],
     }
     hist = load_history(history_path)
     hist = [e for e in hist if e.get("commit") != entry["commit"]
@@ -164,10 +179,10 @@ def render_markdown(hist: list[dict], max_commits: int = 8) -> str:
     return "\n".join(lines) + "\n"
 
 
-def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
+def check_run(smoke_paths, history_path: str = DEFAULT_HISTORY,
               commit: str | None = None, threshold: float = 1.5,
               space_threshold: float = 1.2):
-    """Gate the fresh smoke run against the trajectory median.
+    """Gate the fresh smoke run(s) against the trajectory median.
 
     For every row of the smoke run, compares us/query against the median
     of the same workload (engine x kind x substrate x backend) over all
@@ -187,8 +202,8 @@ def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
     so drift under the same key is worth flagging but build-order
     noise should never fail CI).
     """
-    with open(smoke_path) as f:
-        run = json.load(f)
+    rows = [row for run in _load_runs(smoke_paths)
+            for row in run.get("rows", [])]
     commit = commit or _commit()
     prior: dict[tuple, list[float]] = {}
     prior_space: dict[tuple, list[float]] = {}
@@ -203,7 +218,7 @@ def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
                 prior_space.setdefault(_row_key(row), []).append(
                     float(row["bytes_per_string"]))
     failures, warnings = [], []
-    for row in run.get("rows", []):
+    for row in rows:
         base = prior_space.get(_row_key(row))
         if not base or row.get("bytes_per_string") is None:
             continue
@@ -215,7 +230,7 @@ def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
                 f"bytes/string vs history median {median:g} over "
                 f"{len(base)} run(s) "
                 f"({now / median:.2f}x > {space_threshold}x)")
-    for row in run.get("rows", []):
+    for row in rows:
         key = _row_key(row)
         base = prior.get(key)
         if not base or row.get("us_per_q") is None:
@@ -234,8 +249,10 @@ def check_run(smoke_path: str, history_path: str = DEFAULT_HISTORY,
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("smoke_json", help="output of benchmarks.substrates "
-                                       "--smoke --out <path>")
+    ap.add_argument("smoke_json", nargs="+",
+                    help="output(s) of benchmarks.substrates / "
+                         "benchmarks.serving --smoke --out <path>; "
+                         "multiple files fold into one trajectory entry")
     ap.add_argument("--history", default=DEFAULT_HISTORY,
                     help="trajectory file to append to / read "
                          "(default: BENCH_substrates.json at repo root)")

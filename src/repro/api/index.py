@@ -202,6 +202,46 @@ class CompletionIndex:
 
         return self._compile_cache.get(key, factory)
 
+    def _slab_fns(self, block: int):
+        """(init, advance) jitted at the fixed ``[block]`` lane shape.
+
+        The continuous-batching scheduler's hot pair: ``init()`` builds a
+        stacked empty-prefix LocusState slab, ``advance(slab, chars,
+        resets)`` re-initializes lanes flagged in ``resets`` and then
+        advances every lane whose char is >= 0, all in one dispatch.
+        """
+        key = ("slab", block, self.cfg)
+
+        def factory():
+            dev, cfg = self.device, self.cfg
+            init = jax.jit(lambda: eng.init_locus_batch(dev, cfg, block))
+
+            def _advance(slab, chars, resets):
+                fresh = eng.init_locus_state(dev, cfg)
+                slab = jax.tree.map(
+                    lambda s, z: jnp.where(
+                        resets.reshape((block,) + (1,) * (s.ndim - 1)),
+                        z, s),
+                    slab, fresh)
+                return eng.advance_loci_batch(dev, cfg, slab, chars)
+
+            # the slab is threaded flush-to-flush and never read after the
+            # advance, so donating it lets XLA update lanes in place
+            return init, jax.jit(_advance, donate_argnums=0)
+
+        return self._compile_cache.get(key, factory)
+
+    def _slab_topk_fn(self, block: int, k: int):
+        """Batched top-k over a state slab, jitted per (block, k)."""
+        key = ("slab_topk", block, k, self.cfg)
+
+        def factory():
+            dev, cfg = self.device, self.cfg
+            return jax.jit(
+                lambda slab: eng.topk_from_loci_batch(dev, cfg, slab, k))
+
+        return self._compile_cache.get(key, factory)
+
     def session(self, k: int = 10):
         """Open a stateful incremental-typing session (see
         :class:`repro.api.session.Session`)."""
@@ -263,10 +303,15 @@ class CompletionIndex:
         return out
 
     def _decode_row(self, scores, sids) -> list[tuple[int, str]]:
+        # tolist() converts the row in one C pass: the per-keystroke
+        # serving paths decode thousands of these, and looping numpy
+        # scalars costs more than the decode itself
         row = []
-        for score, sid in zip(scores, sids):
+        strings = self.strings
+        for score, sid in zip(np.asarray(scores).tolist(),
+                              np.asarray(sids).tolist()):
             if score < 0 or sid < 0:
                 continue
-            row.append((int(score), self.strings[int(sid)].decode(
+            row.append((score, strings[sid].decode(
                 "utf-8", errors="replace")))
         return row

@@ -19,6 +19,18 @@ import numpy as np
 import jax
 
 
+def resolve_topk(index, scores, sids, exact, prefix: bytes, k: int):
+    """Decode a session's device top-k into (score, string) pairs.
+
+    When the result is inexact (frontier overflow or a failed beam bound)
+    the widened one-shot ``index.complete`` path recovers exactness from
+    the raw prefix — the single exactness contract shared by the
+    sequential :class:`Session` and the batched scheduler demux."""
+    if not bool(exact):
+        return index.complete([bytes(prefix)], k=k)[0]
+    return index._decode_row(scores, sids)
+
+
 class Session:
     """Per-user incremental completion session over a CompletionIndex."""
 
@@ -65,8 +77,5 @@ class Session:
             return self.index.complete([bytes(self._prefix)], k=k)[0]
         scores, sids, exact = jax.tree.map(
             np.asarray, self._topk(self._states[-1]))
-        if not bool(exact):
-            # frontier overflow or beam inexactness: the widened one-shot
-            # retry path recovers exactness from the raw prefix
-            return self.index.complete([bytes(self._prefix)], k=self.k)[0]
-        return self.index._decode_row(scores, sids)
+        return resolve_topk(self.index, scores, sids, exact,
+                            bytes(self._prefix), self.k)

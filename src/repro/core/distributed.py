@@ -3,9 +3,23 @@
 Strings are hash-partitioned into shards; each shard is an independent
 TT/ET/HT over its subset with the (small) rule set replicated.  A query
 batch is sharded over the data axes and replicated over `model`; every
-device answers from its local sub-trie and a single all_gather + top-k
-merge produces the global answer.  This is how the paper's 1M-string
-dictionaries scale to billions of strings across pods.
+device answers from its local sub-trie and a single all_gather + fused
+top-k merge produces the global answer.  This is how the paper's
+1M-string dictionaries scale to billions of strings across pods.
+
+The cross-shard merge routes through ``Substrate.topk_with_payload``
+(:func:`merge_shard_topk`) — the same seam the per-shard phase 2 uses —
+so on the pallas substrate the [S*k]-candidate reduction runs the fused
+top-k selection kernel instead of a host-side concat-and-sort.  Two
+execution paths share that merge:
+
+- :func:`sharded_complete`: ``jax.shard_map`` over a device mesh (needs
+  the modern sharding APIs; feature-gated by ``HAS_MODERN_SHARDING``);
+- :meth:`ShardedCompletionIndex._complete_local`: a single-process path
+  that answers every shard from the stacked trie and fuses the merge in
+  one jitted dispatch — the serving shape for one host carrying many
+  shards, and the path that keeps the sharded index fully exercised on
+  jax builds without ``shard_map`` (construct with ``mesh=None``).
 """
 
 from __future__ import annotations
@@ -21,6 +35,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.api import CompletionIndex, IndexSpec, build_index
+from repro.api.compile_cache import CompileCache, bucket_size
 from repro.core import engine as eng
 
 # Feature detection: the manual-sharding APIs this module (and the mesh
@@ -135,18 +150,35 @@ def stack_shards(indexes: list[CompletionIndex]):
     return eng.DeviceTrie(**stacked), merged, stride
 
 
+def merge_shard_topk(all_scores: jax.Array, all_gsids: jax.Array, k: int,
+                     sub: eng.Substrate):
+    """Fuse per-shard answers [S, B, k] into the global (scores[B, k],
+    gsids[B, k]) with one substrate-routed top-k-with-payload.
+
+    The candidate relayout is a device-side transpose+reshape feeding the
+    substrate's selection (the fused ``topk_select`` kernel on pallas);
+    score ties resolve toward the lower shard index then the lower
+    per-shard rank — the same deterministic order on every substrate, so
+    the shard_map and single-process paths agree bitwise."""
+    S, B = all_scores.shape[0], all_scores.shape[1]
+    flat_s = jnp.moveaxis(all_scores, 0, 1).reshape(B, S * k)
+    flat_i = jnp.moveaxis(all_gsids, 0, 1).reshape(B, S * k)
+    return sub.topk_with_payload(flat_s, flat_i, k)
+
+
 def sharded_complete(stacked: eng.DeviceTrie, cfg: eng.EngineConfig,
                      qs: jax.Array, qlens: jax.Array, k: int, *,
                      mesh: jax.sharding.Mesh, sid_stride: int,
                      data_axes=("data",), model_axis: str = "model"):
     """Global top-k under shard_map: local per-shard top-k, then one
-    all_gather over the model axis and a merge.
+    all_gather over the model axis and the fused substrate merge.
 
     stacked: DeviceTrie with leading shard dim == mesh size along model axis.
     qs: int32[B, L] global batch; qlens int32[B].
     Returns (scores[B, k], global_sids[B, k]).
     """
     require_modern_sharding()
+    sub = eng.get_substrate(cfg.substrate)
     trie_spec = jax.tree.map(lambda _: P(model_axis), stacked,
                              is_leaf=lambda x: not isinstance(x, tuple))
     q_spec = P(data_axes)
@@ -157,18 +189,15 @@ def sharded_complete(stacked: eng.DeviceTrie, cfg: eng.EngineConfig,
              check_vma=False)
     def run(trie, qs_l, qlens_l):
         local = jax.tree.map(lambda x: x[0], trie)  # drop unit shard dim
-        scores, sids, _ = eng.complete_batch(local, cfg, qs_l, qlens_l, k)
+        scores, sids, _ = eng.complete_batch(local, cfg, qs_l, qlens_l, k,
+                                             sub)
         shard = jax.lax.axis_index(model_axis)
         gsids = jnp.where(sids >= 0, sids + shard * sid_stride, -1)
-        # merge across shards: [S, b, k] -> top-k
+        # merge across shards: all_gather to [S, b, k], then the fused
+        # substrate top-k — still on-device, replicated over model
         all_scores = jax.lax.all_gather(scores, model_axis)   # [S, b, k]
         all_sids = jax.lax.all_gather(gsids, model_axis)
-        S = all_scores.shape[0]
-        flat_s = jnp.moveaxis(all_scores, 0, 1).reshape(scores.shape[0], S * k)
-        flat_i = jnp.moveaxis(all_sids, 0, 1).reshape(scores.shape[0], S * k)
-        top_s, idx = jax.lax.top_k(flat_s, k)
-        top_i = jnp.take_along_axis(flat_i, idx, axis=1)
-        return top_s, top_i
+        return merge_shard_topk(all_scores, all_sids, k, sub)
 
     return run(stacked, qs, qlens)
 
@@ -181,14 +210,19 @@ class ShardedCompletionIndex:
     any sub-trie.
     """
 
-    def __init__(self, strings, scores, rules, *, mesh, kind=None,
-                 model_axis="model", data_axes=("data",), spec=None,
-                 **build_kwargs):
+    def __init__(self, strings, scores, rules, *, mesh=None, n_shards=None,
+                 kind=None, model_axis="model", data_axes=("data",),
+                 spec=None, **build_kwargs):
         if spec is None:
             spec = IndexSpec(kind=kind or "et", **build_kwargs)
         elif kind is not None or build_kwargs:
             raise TypeError("pass either spec= or IndexSpec kwargs, not both")
-        n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+        if mesh is not None:
+            n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+        elif n_shards is None:
+            raise TypeError(
+                "pass mesh= (device-sharded serving) or n_shards= "
+                "(single-process local mode)")
         buckets = shard_strings(strings, scores, n_shards)
         shards = [
             build_index(b[0] if b[0] else [""], b[1] if b[1] else [1],
@@ -206,13 +240,17 @@ class ShardedCompletionIndex:
         self.spec = spec
         self.shards = shards
         stacked, self.cfg, self.stride = stack_shards(self.shards)
-        sharding = NamedSharding(mesh, P(model_axis))
+        if mesh is not None:
+            sharding = NamedSharding(mesh, P(model_axis))
+            put = lambda x: jax.device_put(x, sharding)
+        else:
+            put = jnp.asarray  # local mode: whole stacked trie on one device
         self.device_tries = jax.tree.map(
-            lambda x: jax.device_put(x, sharding), stacked,
-            is_leaf=lambda x: isinstance(x, np.ndarray))
+            put, stacked, is_leaf=lambda x: isinstance(x, np.ndarray))
+        self._local_cache = CompileCache(maxsize=16)
 
     @classmethod
-    def from_shards(cls, shards, *, mesh, model_axis="model",
+    def from_shards(cls, shards, *, mesh=None, model_axis="model",
                     data_axes=("data",), spec=None):
         """Wrap already-built per-shard indexes (skips construction)."""
         self = cls.__new__(cls)
@@ -234,16 +272,18 @@ class ShardedCompletionIndex:
             json.dump(meta, f)
 
     @classmethod
-    def load(cls, path: str, *, mesh, model_axis="model",
+    def load(cls, path: str, *, mesh=None, model_axis="model",
              data_axes=("data",)) -> "ShardedCompletionIndex":
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
         n_shards = meta["n_shards"]
-        mesh_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
-        if n_shards != mesh_shards:
-            raise ValueError(
-                f"saved index has {n_shards} shards but mesh axis "
-                f"{model_axis!r} has {mesh_shards} devices")
+        if mesh is not None:
+            mesh_shards = dict(zip(mesh.axis_names,
+                                   mesh.devices.shape))[model_axis]
+            if n_shards != mesh_shards:
+                raise ValueError(
+                    f"saved index has {n_shards} shards but mesh axis "
+                    f"{model_axis!r} has {mesh_shards} devices")
         shards = [CompletionIndex.load(os.path.join(path, f"shard_{i:04d}.npz"))
                   for i in range(n_shards)]
         return cls.from_shards(shards, mesh=mesh, model_axis=model_axis,
@@ -254,16 +294,59 @@ class ShardedCompletionIndex:
         shard, sid = divmod(int(gsid), self.stride)
         return self.shards[shard].strings[sid].decode("utf-8", errors="replace")
 
+    def _local_fn(self, B: int, L: int, k: int):
+        """Jitted single-process answer: loop the static shard count over
+        the stacked trie, rebase sids to global ids, fuse the merge — one
+        dispatch per (bucketed) batch shape, LRU-cached."""
+        key = (B, L, k, self.cfg)
+
+        def factory():
+            cfg, stride, S = self.cfg, self.stride, len(self.shards)
+            sub = eng.get_substrate(cfg.substrate)
+
+            def run(trie, qs, qlens):
+                per_s, per_i = [], []
+                for s in range(S):
+                    local = jax.tree.map(lambda x: x[s], trie)
+                    scores, sids, _ = eng.complete_batch(
+                        local, cfg, qs, qlens, k, sub)
+                    per_s.append(scores)
+                    per_i.append(jnp.where(sids >= 0, sids + s * stride, -1))
+                return merge_shard_topk(
+                    jnp.stack(per_s), jnp.stack(per_i), k, sub)
+
+            return jax.jit(run)
+
+        return self._local_cache.get(key, factory)
+
+    def _complete_local(self, qs: np.ndarray, qlens: np.ndarray, k: int,
+                        n_real: int):
+        """Answer a padded query batch without a mesh (see module docstring);
+        batch is bucketed up to a power of two so shapes re-hit the cache."""
+        B = bucket_size(n_real)
+        qs_p = np.zeros((B, qs.shape[1]), np.int32)
+        qlens_p = np.zeros((B,), np.int32)
+        qs_p[:n_real], qlens_p[:n_real] = qs, qlens
+        fn = self._local_fn(B, qs.shape[1], k)
+        scores, gsids = fn(self.device_tries, jnp.asarray(qs_p),
+                           jnp.asarray(qlens_p))
+        return scores[:n_real], gsids[:n_real]
+
     def complete(self, queries, k: int = 10):
         from repro.core.alphabet import pad_queries
 
         max_len = max((len(q) for q in queries), default=1)
         L = max(8, 1 << (max_len - 1).bit_length())
         qs, qlens = pad_queries(queries, L)
-        scores, gsids = sharded_complete(
-            self.device_tries, self.cfg, jnp.asarray(qs), jnp.asarray(qlens),
-            k, mesh=self.mesh, sid_stride=self.stride,
-            data_axes=self.data_axes, model_axis=self.model_axis)
+        if self.mesh is not None and HAS_MODERN_SHARDING:
+            scores, gsids = sharded_complete(
+                self.device_tries, self.cfg, jnp.asarray(qs),
+                jnp.asarray(qlens), k, mesh=self.mesh,
+                sid_stride=self.stride, data_axes=self.data_axes,
+                model_axis=self.model_axis)
+        else:
+            scores, gsids = self._complete_local(
+                np.asarray(qs), np.asarray(qlens), k, len(queries))
         scores, gsids = np.asarray(scores), np.asarray(gsids)
         out = []
         for b in range(len(queries)):
@@ -271,3 +354,10 @@ class ShardedCompletionIndex:
                    for s, g in zip(scores[b], gsids[b]) if s >= 0 and g >= 0]
             out.append(row)
         return out
+
+    def session(self, k: int = 10):
+        raise NotImplementedError(
+            "ShardedCompletionIndex has no per-keystroke session: a "
+            "resumable locus frontier would have to live on every shard "
+            "and merge per keystroke — use complete() for batch lookups, "
+            "or a local CompletionIndex for incremental typing")

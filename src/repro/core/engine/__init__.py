@@ -32,15 +32,19 @@ from repro.core.engine.locus import (finalize_loci, link_lookup, locus_dp,
 from repro.core.engine.beam import beam_topk
 from repro.core.engine.cached import cached_topk, gather_cached
 from repro.core.engine.incremental import (LocusState, advance_loci,
+                                           advance_loci_batch,
                                            advance_locus_state,
-                                           init_locus_state, topk_from_loci)
+                                           init_locus_batch,
+                                           init_locus_state, topk_from_loci,
+                                           topk_from_loci_batch)
 # substrate last: it pulls the sibling modules above off the (partially
 # initialized) package, so they must already be bound
 from repro.core.engine.substrate import (PallasSubstrate, Substrate,
                                          available_substrates,
                                          complete_batch, complete_one,
                                          get_substrate, register_substrate,
-                                         resolve_substrate, topk_phase2)
+                                         resolve_substrate, topk_phase2,
+                                         topk_phase2_batch)
 
 __all__ = [
     "DeviceTrie", "EngineConfig", "INT_MAX", "NEG_ONE",
@@ -49,8 +53,9 @@ __all__ = [
     "locus_dp",
     "beam_topk", "cached_topk", "gather_cached",
     "LocusState", "init_locus_state", "advance_locus_state", "advance_loci",
-    "topk_from_loci",
+    "topk_from_loci", "init_locus_batch", "advance_loci_batch",
+    "topk_from_loci_batch",
     "Substrate", "PallasSubstrate", "register_substrate", "get_substrate",
     "available_substrates", "resolve_substrate",
-    "topk_phase2", "complete_one", "complete_batch",
+    "topk_phase2", "topk_phase2_batch", "complete_one", "complete_batch",
 ]

@@ -131,6 +131,33 @@ def advance_loci(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
     return state
 
 
+def init_locus_batch(t: DeviceTrie, cfg: EngineConfig, batch: int,
+                     sub=None) -> LocusState:
+    """Stacked state [batch, ...] of ``batch`` empty-prefix sessions.
+
+    The continuous-batching scheduler's *slab*: every lane starts at the
+    expanded root, bit-identical to ``init_locus_state`` per lane."""
+    state = init_locus_state(t, cfg, sub)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (batch,) + x.shape), state)
+
+
+def advance_loci_batch(t: DeviceTrie, cfg: EngineConfig, states: LocusState,
+                       chars: jax.Array, sub=None) -> LocusState:
+    """One keystroke per lane across a stacked state batch.
+
+    ``states`` is a LocusState whose leaves carry a leading batch dim;
+    ``chars`` is int32[B].  Lanes with ``chars < 0`` are untouched (the
+    single-state no-op contract of :func:`advance_locus_state`), so a
+    partially filled micro-batch block advances only its live lanes in
+    one dispatch.  Per-lane results are bit-identical to the sequential
+    :func:`advance_locus_state` — lanes never interact (pure vmap)."""
+    sub = resolve_sub(cfg, sub)
+    return jax.vmap(
+        lambda s, c: advance_locus_state(t, cfg, s, c, sub))(
+        states, jnp.asarray(chars, jnp.int32))
+
+
 def topk_from_loci(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
                    k: int, sub=None):
     """Top-k for the prefix carried by ``state`` (scores, sids, exact)."""
@@ -140,3 +167,20 @@ def topk_from_loci(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
     loci = finalize_loci(t, state.rows[0])
     scores, sids, exact = topk_phase2(t, cfg, loci, k, sub)
     return scores, sids, exact & (state.overflow == 0)
+
+
+def topk_from_loci_batch(t: DeviceTrie, cfg: EngineConfig,
+                         states: LocusState, k: int, sub=None):
+    """Top-k for every lane of a stacked state batch in one dispatch:
+    (scores[B, k], sids[B, k], exact[B]).
+
+    Phase 2 goes through the substrate's natively batched path
+    (``beam_topk_batch`` / ``cached_topk_batch``) — the same kernels the
+    one-shot ``complete_batch`` uses — so a coalesced micro-batch of
+    keystrokes pays one kernel launch instead of B."""
+    from repro.core.engine.substrate import topk_phase2_batch
+
+    sub = resolve_sub(cfg, sub)
+    loci = jax.vmap(lambda row: finalize_loci(t, row))(states.rows[:, 0])
+    scores, sids, exact = topk_phase2_batch(t, cfg, loci, k, sub)
+    return scores, sids, exact & (states.overflow == 0)

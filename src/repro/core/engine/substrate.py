@@ -470,6 +470,14 @@ def topk_phase2(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array, k: int,
     return s[0], p[0], e[0]
 
 
+def topk_phase2_batch(t: DeviceTrie, cfg: EngineConfig, loci: jax.Array,
+                      k: int, sub=None):
+    """Batched phase 2 (loci [B, F]) -> (scores[B,k], sids[B,k], exact[B]);
+    one dispatch for a whole coalesced micro-batch block."""
+    sub = primitives.resolve_sub(cfg, sub)
+    return _phase2_batch(t, cfg, loci, k, sub)
+
+
 def complete_batch(t: DeviceTrie, cfg: EngineConfig, qs: jax.Array,
                    qlens: jax.Array, k: int, sub=None):
     """qs: int32[B, L]; qlens: int32[B] -> (scores[B,k], sids[B,k],

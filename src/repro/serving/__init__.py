@@ -1,6 +1,10 @@
 from repro.serving.completion_service import (CompletionService,
                                               ServiceSession, ServiceStats)
 from repro.serving.engine import LMServer, Request, SlotScheduler
+from repro.serving.scheduler import (BatchSession, BatchStats,
+                                     KeystrokeScheduler, SchedulerOverloaded,
+                                     Ticket)
 
 __all__ = ["CompletionService", "ServiceSession", "ServiceStats", "LMServer",
-           "Request", "SlotScheduler"]
+           "Request", "SlotScheduler", "KeystrokeScheduler", "BatchSession",
+           "BatchStats", "SchedulerOverloaded", "Ticket"]

@@ -8,6 +8,11 @@ candidates (DESIGN §3.1).
 ``open_session`` exposes the incremental per-keystroke path: a
 :class:`ServiceSession` advances the index's resumable locus frontier one
 char at a time and folds per-keystroke latency into the service stats.
+With ``batching=True`` the service owns a
+:class:`~repro.serving.scheduler.KeystrokeScheduler` and sessions ride
+shared fixed-shape micro-batches instead of paying one dispatch per
+keystroke — same results (bit-identical demux), one batched advance/top-k
+per coalesced block.
 """
 
 from __future__ import annotations
@@ -53,11 +58,29 @@ class ServiceStats:
     def mean_keystroke_ms(self) -> float:
         return (self.keystroke_seconds / max(self.n_keystrokes, 1)) * 1e3
 
-    def p99_ms(self) -> float:
+    @property
+    def p50_latency_ms(self) -> float:
+        return _percentile(self.latencies_ms, 0.50)
+
+    @property
+    def p99_latency_ms(self) -> float:
         return _percentile(self.latencies_ms, 0.99)
+
+    def p99_ms(self) -> float:
+        return self.p99_latency_ms
+
+    def p50_keystroke_ms(self) -> float:
+        return _percentile(self.keystroke_latencies_ms, 0.50)
 
     def p99_keystroke_ms(self) -> float:
         return _percentile(self.keystroke_latencies_ms, 0.99)
+
+    def record_keystroke(self, seconds: float) -> None:
+        """Fold one per-keystroke latency sample in (the scheduler's demux
+        hook and the sequential session's timer share this path)."""
+        self.n_keystrokes += 1
+        self.keystroke_seconds += seconds
+        _record(self.keystroke_latencies_ms, seconds * 1e3)
 
     def reset_keystrokes(self) -> None:
         """Discard keystroke accounting (e.g. after jit warmup)."""
@@ -73,11 +96,29 @@ class ServiceSession:
         self.service = service
         self.k = k
         fetch_k = k * (service.overfetch if service.reranker else 1)
-        self._session = service.index.session(k=fetch_k)
+        if service.batching:
+            # batched sessions share the scheduler's slab; per-keystroke
+            # latency (queue wait + flush + demux) is recorded by the
+            # scheduler's demux hook, not a wall timer here
+            self._session = service._scheduler().open(k=fetch_k)
+            self._timed = False
+        else:
+            self._session = service.index.session(k=fetch_k)
+            self._timed = True
 
     @property
     def prefix(self) -> str:
         return self._session.prefix
+
+    def submit(self, char: int | bytes | str, want_topk: bool = True):
+        """Non-blocking enqueue of one keystroke (batching mode only);
+        returns the scheduler Ticket.  This is the entry point drivers use
+        to keep many sessions in flight so keystrokes coalesce."""
+        if not self.service.batching:
+            raise RuntimeError(
+                "submit() needs a batching service; construct "
+                "CompletionService(..., batching=True) or use type()")
+        return self._session.submit(char, want_topk=want_topk)
 
     def type(self, text: str | bytes) -> list[tuple[float, str]]:
         """Feed keystrokes; returns (re-ranked) top-k for the new prefix."""
@@ -87,11 +128,9 @@ class ServiceSession:
         for i in range(len(data)):
             t0 = time.perf_counter()
             results = self._session.type(data[i:i + 1])
-            dt = time.perf_counter() - t0
-            stats = self.service.stats
-            stats.n_keystrokes += 1
-            stats.keystroke_seconds += dt
-            _record(stats.keystroke_latencies_ms, dt * 1e3)
+            if self._timed:
+                self.service.stats.record_keystroke(
+                    time.perf_counter() - t0)
         if self.service.reranker is not None:
             results = self.service.reranker(self.prefix, results)
         return results[:self.k]
@@ -105,16 +144,32 @@ class ServiceSession:
     def reset(self) -> None:
         self._session.reset()
 
+    def close(self) -> None:
+        """Release the session's scheduler lane (no-op when unbatched)."""
+        close = getattr(self._session, "close", None)
+        if close is not None:
+            close()
+
 
 class CompletionService:
-    def __init__(self, index, reranker=None, overfetch: int = 4):
+    def __init__(self, index, reranker=None, overfetch: int = 4, *,
+                 batching: bool = False, block: int = 8,
+                 max_wait_ms: float = 2.0, max_queue: int | None = None):
         """index: CompletionIndex or ShardedCompletionIndex.
         reranker: callable(query, [(score, string)]) -> [(score, string)].
-        overfetch: fetch overfetch*k trie candidates before reranking."""
+        overfetch: fetch overfetch*k trie candidates before reranking.
+        batching: route per-keystroke sessions through the continuous-
+            batching scheduler (block/max_wait_ms/max_queue are its
+            micro-batch width, latency budget, and admission bound)."""
         self.index = index
         self.reranker = reranker
         self.overfetch = overfetch
+        self.batching = batching
+        self.block = block
+        self.max_wait_ms = max_wait_ms
+        self.max_queue = max_queue
         self.stats = ServiceStats()
+        self.scheduler = None
 
     def complete(self, queries: list[str], k: int = 10):
         t0 = time.perf_counter()
@@ -128,10 +183,51 @@ class CompletionService:
         self.stats.n_queries += len(queries)
         self.stats.total_seconds += dt
         self.stats.batches += 1
-        _record(self.stats.latencies_ms, dt / max(len(queries), 1) * 1e3)
+        # every request in a synchronous batch waits the full batch wall
+        # time, so each gets the true dt sample — a single dt/batch mean
+        # would understate the tail by the batch width
+        for _ in queries:
+            _record(self.stats.latencies_ms, dt * 1e3)
         return results
 
+    def _scheduler(self):
+        if self.scheduler is None:
+            from repro.serving.scheduler import KeystrokeScheduler
+
+            self.scheduler = KeystrokeScheduler(
+                self.index, block=self.block, max_wait_ms=self.max_wait_ms,
+                max_queue=self.max_queue,
+                on_keystroke=self.stats.record_keystroke)
+        return self.scheduler
+
+    def pump(self) -> int:
+        """Fire due scheduler flushes (batching mode drivers call this in
+        their event loop); returns the number of flushes fired."""
+        return self._scheduler().pump() if self.batching else 0
+
+    def flush(self) -> None:
+        """Force one partial-block flush (e.g. to make room after a
+        SchedulerOverloaded rejection without collapsing the queue)."""
+        if self.batching and self.scheduler is not None:
+            self.scheduler.flush()
+
+    def drain(self) -> None:
+        """Flush the scheduler until no keystroke is in flight."""
+        if self.batching and self.scheduler is not None:
+            self.scheduler.drain()
+
     def open_session(self, k: int = 10) -> ServiceSession:
-        """Start a stateful per-keystroke session (requires an index with
-        ``.session()``, i.e. a local CompletionIndex)."""
+        """Start a stateful per-keystroke session.
+
+        Requires an index with the incremental session entry points (a
+        local :class:`~repro.api.index.CompletionIndex`).  With
+        ``batching=True`` the session transparently rides the service's
+        shared micro-batches."""
+        if not callable(getattr(self.index, "session", None)) or \
+                not callable(getattr(self.index, "_slab_fns", None)):
+            raise NotImplementedError(
+                f"per-keystroke sessions need a local CompletionIndex; "
+                f"{type(self.index).__name__} does not support them yet "
+                f"(sharded sessions would need a resumable cross-shard "
+                f"frontier — use complete() for batch lookups instead)")
         return ServiceSession(self, k)

@@ -82,6 +82,22 @@ def test_real_tree_is_clean():
         "\n".join(f.format() for f in findings)
 
 
+def test_serving_tree_is_scanned_and_clean():
+    """The serving layer (scheduler, service, engine) must be inside the
+    sanitizer's default scan set — a clean default pass that silently
+    skipped serving/ would prove nothing about it."""
+    from repro.analysis.astutil import load_tree
+
+    scanned = {sf.rel for sf in load_tree(default_root())}
+    for mod in ("serving/scheduler.py", "serving/completion_service.py",
+                "serving/engine.py"):
+        assert mod in scanned, f"{mod} missing from sanitizer scan set"
+    findings = [f for f in run_all(default_root() / "serving")
+                if not f.waived]
+    assert not findings, "sanitizer findings on src/repro/serving:\n" + \
+        "\n".join(f.format() for f in findings)
+
+
 def test_cli_gate_fails_on_fixtures_and_passes_on_repo(capsys):
     assert analysis_main([str(FIXTURES), "--fail-on-findings"]) == 1
     capsys.readouterr()

@@ -1,0 +1,258 @@
+"""Continuous-batching keystroke scheduler: coalesced micro-batch results
+must be bit-identical to sequential per-session replay (across substrates
+and on-device layouts), deadline flushes must honor the latency budget,
+and overload must surface as backpressure instead of unbounded queues."""
+
+import numpy as np
+import pytest
+
+from repro.api import IndexSpec, build_index
+from repro.core import make_rules
+from repro.data.strings import make_keystroke_events, make_usps
+from repro.launch.serve import _replay_batched, _replay_sequential
+from repro.serving import CompletionService, SchedulerOverloaded
+from repro.serving.scheduler import KeystrokeScheduler
+
+
+@pytest.fixture(scope="module")
+def paper_idx():
+    strings = ["andrew pavlo", "andrew parker", "andrew packard",
+               "william smith", "bill of rights"]
+    scores = [50, 40, 30, 20, 10]
+    rules = make_rules([("andy", "andrew"), ("bill", "william")])
+    return build_index(strings, scores, rules,
+                       IndexSpec(kind="et", cache_k=4))
+
+
+@pytest.fixture(scope="module")
+def usps():
+    return make_usps(n=400, seed=0)
+
+
+class FakeClock:
+    """Injectable monotonic clock so deadline tests never sleep."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _scheduler(index, **kw):
+    kw.setdefault("max_wait_ms", 1e6)   # only explicit flushes unless asked
+    return KeystrokeScheduler(index, **kw)
+
+
+# -- determinism vs sequential replay -----------------------------------------
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+@pytest.mark.parametrize("compression", ["none", "packed"])
+def test_batched_bit_identical_to_sequential(usps, substrate, compression):
+    """The full serving stack: one interleaved Zipf keystroke stream
+    replayed per-keystroke (Session dispatches) and through the
+    scheduler's coalesced blocks must produce identical per-keystroke
+    top-k, including inexact-fallback lanes."""
+    ds = usps
+    idx = build_index(ds.strings, ds.scores, make_rules(ds.rules),
+                      IndexSpec(kind="et", cache_k=4, substrate=substrate,
+                                compression=compression))
+    sessions = 4
+    events = make_keystroke_events(ds, sessions, n_queries=10, seed=2,
+                                   max_len=10)
+    seq = CompletionService(idx)
+    bat = CompletionService(idx, batching=True, block=sessions,
+                            max_wait_ms=100.0, max_queue=8 * sessions)
+    assert _replay_sequential(seq, events, sessions, k=5) == \
+        _replay_batched(bat, events, sessions, k=5)
+    st = bat.scheduler.stats
+    assert st.n_keystrokes == sum(c >= 0 for _, c in events)
+    assert st.mean_occupancy > 1.0      # keystrokes really coalesced
+
+
+def test_partial_block_flushes_stay_deterministic(usps):
+    """max_wait_ms=0 forces a deadline flush per submit — every block is
+    partial, exercising idle-lane padding — results must not change."""
+    ds = usps
+    idx = build_index(ds.strings, ds.scores, make_rules(ds.rules),
+                      IndexSpec(kind="et", cache_k=4))
+    sessions = 3
+    events = make_keystroke_events(ds, sessions, n_queries=6, seed=5,
+                                   max_len=8)
+    seq = CompletionService(idx)
+    bat = CompletionService(idx, batching=True, block=sessions,
+                            max_wait_ms=0.0, max_queue=64)
+    assert _replay_sequential(seq, events, sessions, k=5) == \
+        _replay_batched(bat, events, sessions, k=5)
+    assert bat.scheduler.stats.deadline_flushes > 0
+
+
+def test_mixed_k_demux_matches_oneshot(paper_idx):
+    """Lanes with different k in one flush each get their own batched
+    top-k group; every lane must land on the one-shot answer."""
+    sched = _scheduler(paper_idx, block=4)
+    a, b = sched.open(k=3), sched.open(k=5)
+    ta = [a.submit(c, want_topk=(i == 3)) for i, c in enumerate(b"andy")]
+    tb = [b.submit(c, want_topk=(i == 3)) for i, c in enumerate(b"bill")]
+    sched.drain()
+    assert all(t.done for t in ta + tb)
+    assert ta[-1].results == paper_idx.complete(["andy"], k=3)[0]
+    assert tb[-1].results == paper_idx.complete(["bill"], k=5)[0]
+    # advance-only keystrokes resolve without results
+    assert ta[0].results is None and ta[0].done
+    assert a.topk() == paper_idx.complete(["andy"], k=3)[0]
+
+
+def test_backspace_reset_and_reopen(paper_idx):
+    sched = _scheduler(paper_idx, block=2)
+    s = sched.open(k=3)
+    assert s.type("andy pa") == paper_idx.complete(["andy pa"], k=3)[0]
+    assert s.backspace(3) == paper_idx.complete(["andy"], k=3)[0]
+    assert s.prefix == "andy"
+    s.reset()
+    assert s.type("bill") == paper_idx.complete(["bill"], k=3)[0]
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.submit(b"x")
+    # the freed lane is recycled and re-initialized for the next session
+    s2 = sched.open(k=3)
+    assert s2.lane == s.lane
+    assert s2.type("an") == paper_idx.complete(["an"], k=3)[0]
+
+
+# -- deadline flushes ----------------------------------------------------------
+
+
+def test_deadline_flush_fires_on_latency_budget(paper_idx):
+    clock = FakeClock()
+    sched = KeystrokeScheduler(paper_idx, block=2, max_wait_ms=2.0,
+                               clock=clock)
+    idle = sched.open(k=3)          # occupied lane with nothing queued
+    s = sched.open(k=3)
+    t = s.submit(b"a")
+    # not a full block (idle lane has no keystroke) and the budget has
+    # not elapsed: no flush may fire
+    assert sched.pump() == 0
+    assert sched.stats.n_flushes == 0 and not t.done
+    clock.t += 0.0015
+    assert sched.pump() == 0        # 1.5ms < 2ms budget
+    clock.t += 0.001
+    assert sched.pump() == 1        # 2.5ms: deadline flush of a partial block
+    assert sched.stats.deadline_flushes == 1
+    sched.drain()                   # settle the pipelined demux
+    assert t.done
+    assert t.results == paper_idx.complete(["a"], k=3)[0]
+    assert t.latency_s == pytest.approx(clock.t - t.created)
+    idle.close()
+
+
+def test_full_block_flushes_immediately(paper_idx):
+    clock = FakeClock()
+    sched = KeystrokeScheduler(paper_idx, block=2, max_wait_ms=1e6,
+                               clock=clock)
+    a, b = sched.open(k=3), sched.open(k=3)
+    a.submit(b"a")
+    assert sched.stats.n_flushes == 0       # waiting on lane b
+    b.submit(b"b")                          # every occupied lane ready
+    assert sched.stats.full_flushes == 1    # fired inside submit's pump
+
+
+# -- backpressure --------------------------------------------------------------
+
+
+def test_admission_queue_backpressure(paper_idx):
+    clock = FakeClock()
+    sched = KeystrokeScheduler(paper_idx, block=2, max_wait_ms=1e6,
+                               max_queue=2, clock=clock)
+    idle = sched.open(k=3)          # keeps full-flush from firing
+    s = sched.open(k=3)
+    s.submit(b"a")
+    s.submit(b"n")
+    with pytest.raises(SchedulerOverloaded, match="admission queue full"):
+        s.submit(b"d")
+    assert sched.stats.rejected == 1
+    # a rejected submit must not corrupt the session's prefix
+    assert s.prefix == "an"
+    # one forced flush makes room (one ticket per lane per flush)
+    sched.flush()
+    t = s.submit(b"d")
+    sched.drain()
+    assert t.results == paper_idx.complete(["and"], k=3)[0]
+    assert s.prefix == "and"
+    idle.close()
+
+
+def test_lane_table_exhaustion(paper_idx):
+    sched = _scheduler(paper_idx, block=2)
+    a, b = sched.open(k=3), sched.open(k=3)
+    with pytest.raises(SchedulerOverloaded, match="lanes"):
+        sched.open(k=3)
+    a.close()
+    c = sched.open(k=3)             # freed lane is reusable
+    assert c.lane == a.lane
+    b.close()
+    c.close()
+
+
+def test_close_with_queued_keystrokes_defers_release(paper_idx):
+    """Closing a session with keystrokes in flight must not force partial
+    flushes: the lane drains through normal flushes, then frees."""
+    sched = _scheduler(paper_idx, block=2)
+    a, b = sched.open(k=3), sched.open(k=3)
+    tickets = [a.submit(c) for c in b"an"]
+    a.close()
+    assert sched._draining[a.lane]          # lane still held by the drain
+    out = b.type("bil")                     # normal traffic drains lane a
+    sched.drain()
+    assert out == paper_idx.complete(["bil"], k=3)[0]
+    assert all(t.done for t in tickets)
+    assert tickets[-1].results == paper_idx.complete(["an"], k=3)[0]
+    assert sched._lanes[a.lane] is None     # release completed
+    assert not sched._draining[a.lane]
+    b.close()
+
+
+def test_ready_occupied_counters_track_scans(paper_idx):
+    """The O(1) pump counters must agree with full lane scans through a
+    mixed open/submit/close/flush workload."""
+    sched = _scheduler(paper_idx, block=3)
+    def check():
+        assert sched._n_ready == len(sched._ready_lanes())
+        assert sched._n_occupied == sched._occupied()
+    sessions = [sched.open(k=3) for _ in range(3)]
+    check()
+    sessions[0].submit(b"a"); check()
+    sessions[0].submit(b"n"); check()
+    sessions[1].submit(b"b"); check()
+    sessions[2].submit(b"w"); check()       # full block -> auto flush
+    sessions[1].close(); check()
+    sched.drain(); check()
+    sessions[0].close(); sessions[2].close(); check()
+    assert sched._n_occupied == 0 and sched._n_ready == 0
+
+
+# -- service integration -------------------------------------------------------
+
+
+def test_service_batched_sessions_share_stats(paper_idx):
+    svc = CompletionService(paper_idx, batching=True, block=2,
+                            max_wait_ms=100.0)
+    a, b = svc.open_session(k=3), svc.open_session(k=3)
+    ra = [a.submit(c) for c in b"andy"]
+    rb = [b.submit(c) for c in b"bill"]
+    svc.drain()
+    assert ra[-1].result(svc.scheduler) == \
+        paper_idx.complete(["andy"], k=3)[0]
+    assert rb[-1].result(svc.scheduler) == \
+        paper_idx.complete(["bill"], k=3)[0]
+    assert svc.stats.n_keystrokes == 8      # scheduler demux hook fed stats
+    assert svc.stats.p99_keystroke_ms() >= svc.stats.p50_keystroke_ms() >= 0
+    a.close(); b.close()
+
+
+def test_unbatched_submit_raises(paper_idx):
+    svc = CompletionService(paper_idx)
+    sess = svc.open_session(k=3)
+    with pytest.raises(RuntimeError, match="batching"):
+        sess.submit(b"a")

@@ -166,6 +166,49 @@ def test_append_run_dedups_by_commit(tmp_path):
     assert [e["commit"] for e in out] == ["c1", "c2"]
 
 
+def test_append_folds_multiple_smoke_files_into_one_entry(tmp_path):
+    """Smoke files from different benchmarks (substrates + serving) of the
+    same CI run must land as ONE trajectory entry: entries are replaced
+    per commit, so appending them one call at a time would leave only the
+    last file's rows."""
+    hist = tmp_path / "hist.json"
+    sub = tmp_path / "substrates.json"
+    srv = tmp_path / "serving.json"
+    _write_smoke(sub, [_row(us=100.0)])
+    srv.write_text(json.dumps({
+        "benchmark": "serving", "backend": "cpu", "smoke": True,
+        "rows": [_row(engine="serving_batch", substrate="jnp", us=90.0,
+                      fused_walk=False, fused_beam=False)]}))
+    out = tj.append_run([str(sub), str(srv)], str(hist), commit="c1",
+                        timestamp=1.0)
+    assert len(out) == 1
+    assert [r["engine"] for r in out[0]["rows"]] == ["beam", "serving_batch"]
+    # re-running the same commit still replaces, not duplicates
+    out = tj.append_run([str(sub), str(srv)], str(hist), commit="c1",
+                        timestamp=2.0)
+    assert len(out) == 1 and len(out[0]["rows"]) == 2
+
+
+def test_check_reads_multiple_smoke_files(tmp_path):
+    """--check flattens rows across all smoke files; serving rows are
+    substrate=jnp, so their regressions warn instead of failing CI."""
+    hist = tmp_path / "hist.json"
+    sub = tmp_path / "substrates.json"
+    srv = tmp_path / "serving.json"
+    serving = lambda us: _row(engine="serving_batch", substrate="jnp",
+                              us=us, fused_walk=False, fused_beam=False)
+    _write_history(hist, [_hist_entry("c1", [_row(us=100.0), serving(90.0)]),
+                          _hist_entry("c2", [_row(us=100.0), serving(90.0)])])
+    _write_smoke(sub, [_row(us=400.0)])
+    srv.write_text(json.dumps({"benchmark": "serving", "backend": "cpu",
+                               "smoke": True, "rows": [serving(400.0)]}))
+    fails, warns = tj.check_run([str(sub), str(srv)], str(hist),
+                                commit="fresh")
+    assert len(fails) == 1          # the pallas substrates row
+    assert len(warns) == 1          # the serving row warns only
+    assert "serving_batch" in warns[0]
+
+
 def test_render_labels_streamed_rows(tmp_path):
     hist = [_hist_entry("c1", [
         _row(us=100.0),
