@@ -110,15 +110,15 @@ def bench_substrates(k: int = 10, batch: int = 256, name: str = "usps",
     for engine, kind, kw, streamed, compression, budget in CASES:
         idx = build_index(ds, kind, compression=compression, **kw)
         if streamed:
-            idx.set_memory_budget(_streamed_budget(idx))
+            idx.reconfigure(memory_budget=_streamed_budget(idx))
         elif budget is not None:
-            idx.set_memory_budget(budget)
+            idx.reconfigure(memory_budget=budget)
         # streamed and fixed-budget rows only make sense on the pallas
         # substrate (the jnp reference ignores the VMEM budget) — the
         # resident cases keep the jnp twin as the reference column
         for substrate in (SUBSTRATES if not streamed and budget is None
                           else ("pallas",)):
-            idx.set_substrate(substrate)
+            idx.reconfigure(substrate=substrate)
             sub = eng.get_substrate(substrate)
             walk_v = sub.walk_variant(idx.device, idx.cfg, seq_len) \
                 if substrate == "pallas" else None

@@ -1,14 +1,26 @@
-"""CompletionIndex: the queryable, persistable completion index.
+"""CompletionIndex: the queryable, persistable, *mutable* completion index.
 
 Construction lives in :mod:`repro.api.build` (driven by an
 :class:`~repro.api.spec.IndexSpec`); this module owns the device arrays,
 the bounded compile cache, batched lookup with the exactness-retry guard,
-persistence, and the session entry points.
+persistence, the session entry points, and the online-mutation surface:
+
+- ``insert``/``delete``/``update_score`` absorb changes into a
+  :class:`~repro.core.engine.overlay.DeltaOverlay` (tombstones + a small
+  side-index) merged into results at top-k time — no rebuild per change;
+- ``compact()`` folds the overlay into a freshly built index and
+  hot-swaps it in place.  The index is *epoch-versioned*: every swap (and
+  every :meth:`reconfigure`) bumps ``epoch``, and live sessions /
+  scheduler slabs migrate onto the new epoch at their next keystroke
+  boundary by replaying their retained prefixes;
+- ``reconfigure(...)`` is the single runtime-knob entry point (substrate,
+  memory budget, engine widths), revalidating through ``IndexSpec``.
 """
 
 from __future__ import annotations
 
-from dataclasses import replace
+import warnings
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
@@ -75,12 +87,32 @@ def _to_device(trie: tb.DictTrie, rule_trie: tb.RuleTrie) -> eng.DeviceTrie:
     )
 
 
+#: IndexSpec fields :meth:`CompletionIndex.reconfigure` may change at
+#: runtime — they ride ``EngineConfig`` (and thus every compile-cache
+#: key), so flipping them never touches the built structures.
+RUNTIME_FIELDS = ("substrate", "memory_budget", "frontier", "gens",
+                  "expand", "max_steps")
+#: fields baked into the built structures at construction time; changing
+#: them means a rebuild (``build_index`` or the next ``compact()``).
+BUILD_FIELDS = ("kind", "alpha", "cache_k", "compression")
+
+
+@dataclass
+class PreparedCompaction:
+    """A compaction ready to hot-swap: the freshly built index plus the
+    {string: score} snapshot it was built from (mutations landing after
+    the snapshot are re-applied as a new overlay at apply time)."""
+
+    index: "CompletionIndex"
+    snapshot: dict
+
+
 class CompletionIndex:
     """A synonym-aware top-k completion index (TT, ET, HT or plain)."""
 
     def __init__(self, spec: IndexSpec, trie, rule_trie, rules, strings,
                  scores, cfg: eng.EngineConfig, stats: BuildStats,
-                 compile_cache_size: int = 32):
+                 compile_cache_size: int = 32, epoch: int = 0):
         self.spec = spec
         self.trie = trie
         self.rule_trie = rule_trie
@@ -91,6 +123,10 @@ class CompletionIndex:
         self.stats = stats
         self.device = _to_device(trie, rule_trie)
         self._compile_cache = CompileCache(maxsize=compile_cache_size)
+        #: bumped by every hot-swap (compact) and reconfigure; sessions
+        #: and scheduler slabs compare against it to know when to migrate
+        self.epoch = epoch
+        self._overlay: eng.DeltaOverlay | None = None
 
     @property
     def kind(self) -> str:
@@ -100,19 +136,6 @@ class CompletionIndex:
     def substrate(self) -> str:
         """The resolved execution substrate lookups run on."""
         return self.cfg.substrate
-
-    def set_substrate(self, name: str) -> "CompletionIndex":
-        """Switch the execution substrate ("jnp", "pallas", or "auto").
-
-        Cheap: host/device structures are untouched; the substrate rides
-        ``EngineConfig`` (and thus every compile-cache key), so the next
-        lookup compiles through the new substrate while executables for
-        the old one stay cached.  Returns ``self`` for chaining.
-        """
-        resolved = eng.resolve_substrate(name)
-        self.spec = self.spec.replace(substrate=name)
-        self.cfg = replace(self.cfg, substrate=resolved)
-        return self
 
     @property
     def compression(self) -> str:
@@ -124,17 +147,62 @@ class CompletionIndex:
         """VMEM byte budget for table residency (0 = substrate default)."""
         return self.cfg.memory_budget
 
-    def set_memory_budget(self, n: int) -> "CompletionIndex":
-        """Set the VMEM byte budget for table residency (0 = substrate
-        default).  Cheap, like :meth:`set_substrate`: the budget rides
-        ``EngineConfig`` (and thus every compile-cache key), so the next
-        lookup re-probes resident vs DMA-streamed kernel variants while
-        executables for the old budget stay cached.  Returns ``self``."""
-        if n < 0:
-            raise ValueError("memory_budget must be >= 0")
-        self.spec = self.spec.replace(memory_budget=n)
-        self.cfg = replace(self.cfg, memory_budget=n)
+    # -- runtime reconfiguration -------------------------------------------
+
+    def reconfigure(self, **changes) -> "CompletionIndex":
+        """Change runtime knobs in one validated step; returns ``self``.
+
+        Accepts the :data:`RUNTIME_FIELDS` subset of ``IndexSpec``
+        (``substrate``, ``memory_budget``, ``frontier``, ``gens``,
+        ``expand``, ``max_steps``), revalidates the resulting spec like a
+        build would, and folds the changes into ``EngineConfig`` — which
+        keys every jit/compile-cache entry, so stale executables can
+        never be hit while ones for the old configuration stay cached.
+        Any actual change bumps :attr:`epoch`: compiled sessions hold
+        closures over the old config and re-derive their state at the
+        next keystroke boundary, exactly like a hot-swap.
+
+        Build-time fields (:data:`BUILD_FIELDS`) are rejected — rebuild
+        via ``build_index`` or fold them into the next :meth:`compact`.
+        """
+        build_time = set(changes) & set(BUILD_FIELDS)
+        if build_time:
+            raise ValueError(
+                f"{sorted(build_time)} are build-time fields baked into "
+                f"the index structures; rebuild with build_index(...) or "
+                f"fold the change into the next compact()")
+        unknown = set(changes) - set(RUNTIME_FIELDS)
+        if unknown:
+            raise ValueError(
+                f"unknown reconfigure field(s) {sorted(unknown)}; "
+                f"runtime knobs are {RUNTIME_FIELDS}")
+        changes = {k: v for k, v in changes.items()
+                   if getattr(self.spec, k) != v}
+        if not changes:
+            return self
+        spec = self.spec.replace(**changes).validate()
+        cfg_kw = dict(changes)
+        if "substrate" in cfg_kw:
+            cfg_kw["substrate"] = eng.resolve_substrate(cfg_kw["substrate"])
+        self.spec = spec
+        self.cfg = replace(self.cfg, **cfg_kw)
+        self.epoch += 1
         return self
+
+    def set_substrate(self, name: str) -> "CompletionIndex":
+        """Deprecated alias of ``reconfigure(substrate=...)``."""
+        warnings.warn(
+            "CompletionIndex.set_substrate() is deprecated; use "
+            "reconfigure(substrate=...)", DeprecationWarning, stacklevel=2)
+        return self.reconfigure(substrate=name)
+
+    def set_memory_budget(self, n: int) -> "CompletionIndex":
+        """Deprecated alias of ``reconfigure(memory_budget=...)``."""
+        warnings.warn(
+            "CompletionIndex.set_memory_budget() is deprecated; use "
+            "reconfigure(memory_budget=...)", DeprecationWarning,
+            stacklevel=2)
+        return self.reconfigure(memory_budget=n)
 
     # -- construction ------------------------------------------------------
 
@@ -160,7 +228,17 @@ class CompletionIndex:
 
     def save(self, path: str) -> None:
         """Write a versioned npz container; ``CompletionIndex.load(path)``
-        restores it without re-running trie construction."""
+        restores it without re-running trie construction.
+
+        The container holds only the built base structures, so saving
+        with uncompacted mutations would silently drop them — fold them
+        first (``compact()``, or ``compact(handoff_path=...)`` to write
+        the folded container in the same step)."""
+        if self.has_mutations:
+            raise ValueError(
+                "index has uncompacted mutations that save() would drop; "
+                "call compact() first — compact(handoff_path=path) writes "
+                "the folded container as part of the swap")
         from repro.api.persist import save_index
         save_index(self, path)
 
@@ -169,7 +247,151 @@ class CompletionIndex:
         from repro.api.persist import load_index_parts
         p = load_index_parts(path)
         return cls(p["spec"], p["trie"], p["rule_trie"], p["rules"],
-                   p["strings"], p["scores"], p["cfg"], p["stats"])
+                   p["strings"], p["scores"], p["cfg"], p["stats"],
+                   epoch=p["epoch"])
+
+    # -- mutations (delta overlay) -----------------------------------------
+
+    @staticmethod
+    def _as_key(string) -> bytes:
+        b = string.encode() if isinstance(string, str) else bytes(string)
+        if not b:
+            raise ValueError("cannot mutate the empty string")
+        return b
+
+    def _overlay_mut(self) -> eng.DeltaOverlay:
+        if self._overlay is None:
+            self._overlay = eng.DeltaOverlay()
+        return self._overlay
+
+    @property
+    def has_mutations(self) -> bool:
+        """True while the overlay holds uncompacted mutations; queries
+        route through the merged path and sessions fall back to the
+        one-shot lookup until :meth:`compact` folds them away."""
+        ov = self._overlay
+        return ov is not None and ov.active
+
+    @property
+    def mutation_backlog(self) -> int:
+        """Pending overlay entries (inserts/re-scores + tombstones) — the
+        serving loop's compaction trigger."""
+        ov = self._overlay
+        return 0 if ov is None else len(ov.added) + len(ov.tombstones)
+
+    def insert(self, string, score: int) -> "CompletionIndex":
+        """Insert (upsert: re-score if already present) without rebuild."""
+        if score < 0:
+            raise ValueError("scores are non-negative")
+        self._overlay_mut().upsert(self.strings, self._as_key(string),
+                                   int(score))
+        return self
+
+    def delete(self, string) -> "CompletionIndex":
+        """Delete a live string; raises KeyError when it is not live."""
+        self._overlay_mut().remove(self.strings, self._as_key(string))
+        return self
+
+    def update_score(self, string, score: int) -> "CompletionIndex":
+        """Re-score a live string; raises KeyError when it is not live
+        (unlike the upserting :meth:`insert`)."""
+        b = self._as_key(string)
+        ov = self._overlay
+        live = (ov.is_live(self.strings, b) if ov is not None
+                else eng.DeltaOverlay._base_sid(self.strings, b) >= 0)
+        if not live:
+            raise KeyError(f"{b!r} is not in the index; use insert()")
+        return self.insert(b, score)
+
+    @property
+    def live_strings(self) -> list:
+        """The current dictionary (base − deletions + inserts), sorted;
+        merged-path sids index this list exactly as base sids index
+        :attr:`strings`."""
+        if not self.has_mutations:
+            return self.strings
+        self._overlay.refresh(self)
+        return self._overlay.live
+
+    def live_items(self) -> dict:
+        """{string: score} of the current dictionary contents."""
+        live = {s: int(r) for s, r in zip(
+            self.strings, np.asarray(self.scores).tolist())}
+        ov = self._overlay
+        if ov is not None:
+            for s in ov.tombstones:
+                live.pop(s, None)
+            live.update(ov.added)
+        return live
+
+    # -- compaction / hot-swap ---------------------------------------------
+
+    def prepare_compaction(self) -> PreparedCompaction:
+        """Fold the current contents into a freshly built index.
+
+        The expensive half of a compaction, safe to run off-thread: it
+        reads one consistent snapshot and mutates nothing; the cheap
+        :meth:`apply_compaction` swaps it in at a convenient boundary."""
+        snapshot = self.live_items()
+        strings = sorted(snapshot)
+        scores = [snapshot[s] for s in strings]
+        fresh = build_index(strings, scores, self.rules, self.spec)
+        return PreparedCompaction(index=fresh, snapshot=snapshot)
+
+    def apply_compaction(
+            self, prepared: PreparedCompaction) -> "CompletionIndex":
+        """Hot-swap a prepared compaction in place (cheap, synchronous).
+
+        Adopts the fresh structures, drops the compile cache — its
+        closures captured the old epoch's device tables under keys that
+        do not name the epoch — and bumps :attr:`epoch` so live sessions
+        re-derive their state at the next keystroke boundary.  Mutations
+        that landed after the snapshot survive: they are diffed against
+        it and re-applied as a new overlay on the fresh base."""
+        current = self.live_items()
+        fresh = prepared.index
+        desired_spec = self.spec
+        self.spec = fresh.spec
+        self.trie, self.rule_trie = fresh.trie, fresh.rule_trie
+        self.rules = fresh.rules
+        self.strings, self.scores = fresh.strings, fresh.scores
+        self.cfg, self.stats = fresh.cfg, fresh.stats
+        self.device = fresh.device
+        self._compile_cache = CompileCache(
+            maxsize=self._compile_cache.maxsize)
+        self._overlay = None
+        self.epoch += 1
+        snap = prepared.snapshot
+        for s, sc in current.items():
+            if snap.get(s) != sc:
+                self.insert(s, sc)
+        for s in snap:
+            if s not in current:
+                self.delete(s)
+        if desired_spec != self.spec:
+            # a reconfigure() raced the prepare; re-apply its runtime
+            # knobs on top of the adopted spec (build-time fields cannot
+            # diverge — reconfigure rejects them)
+            runtime = {f: getattr(desired_spec, f) for f in RUNTIME_FIELDS
+                       if getattr(desired_spec, f) != getattr(self.spec, f)}
+            if runtime:
+                self.reconfigure(**runtime)
+        return self
+
+    def compact(self, handoff_path: str | None = None) -> "CompletionIndex":
+        """Fold the overlay into a fresh index and hot-swap it in place.
+
+        ``handoff_path`` routes the swap through the versioned npz
+        container (save + load) — the restart-without-downtime shape: the
+        folded index lands on disk as a side effect, and what is swapped
+        in is bit-for-bit what a restarting process would load."""
+        prepared = self.prepare_compaction()
+        if handoff_path is not None:
+            prepared.index.save(handoff_path)
+            prepared = PreparedCompaction(
+                index=CompletionIndex.load(handoff_path),
+                snapshot=prepared.snapshot)
+        return self.apply_compaction(prepared)
 
     # -- lookup ------------------------------------------------------------
 
@@ -253,7 +475,17 @@ class CompletionIndex:
         """Device entry point: qs int32[B, L] (-1 padded). Shapes are
         bucketed to powers of two before jit so drifting batch sizes share
         executables. Retries inexact queries with widened search (exactness
-        guard of §2.2)."""
+        guard of §2.2).
+
+        With pending mutations the answer is the overlay-merged one
+        (:meth:`_complete_mutated`) and the returned sids index
+        :attr:`live_strings`; otherwise they index :attr:`strings` — the
+        two coincide exactly when :attr:`has_mutations` is False."""
+        if self.has_mutations:
+            return self._complete_mutated(qs, qlens, k)
+        return self._complete_base(qs, qlens, k)
+
+    def _complete_base(self, qs: np.ndarray, qlens: np.ndarray, k: int):
         B, L = qs.shape
         Bb, Lb = bucket_size(B, minimum=1), bucket_size(L)
         if (Bb, Lb) != (B, L):
@@ -288,6 +520,54 @@ class CompletionIndex:
             tries += 1
         return scores[:B], sids[:B]
 
+    def _merge_fn(self, B: int, C: int, k: int):
+        """Jitted overlay merge (sort-by-grank + substrate top-k), cached
+        per candidate shape like every other compiled entry point."""
+        key = ("overlay_merge", B, C, k, self.cfg)
+
+        def factory():
+            sub = eng.get_substrate(self.cfg.substrate)
+            return jax.jit(
+                lambda s, g: eng.merge_overlay_topk(s, g, k, sub))
+
+        return self._compile_cache.get(key, factory)
+
+    def _complete_mutated(self, qs: np.ndarray, qlens: np.ndarray, k: int):
+        """Merged lookup under pending mutations.
+
+        Base is over-fetched to k + D' (D' = tombstone count bucketed to
+        a power of two, so a growing backlog reuses executables) — every
+        result row can lose at most every tombstone — then tombstoned
+        hits are masked out host-side and both candidate sets are
+        relabeled to *global ranks* (their sid in a from-scratch rebuild;
+        see :mod:`repro.core.engine.overlay`).  One substrate-routed
+        fused selection returns the top-k bit-identical to that rebuild,
+        and the grank "sids" decode against :attr:`live_strings`."""
+        ov = self._overlay
+        ov.refresh(self)
+        n_dead = int(ov.base_dead.sum())
+        k_base = k + (bucket_size(n_dead, minimum=1) if n_dead else 0)
+        b_scores, b_sids = self._complete_base(qs, qlens, k_base)
+        valid = b_sids >= 0
+        sid0 = np.where(valid, b_sids, 0)
+        keep = valid & ~ov.base_dead[sid0]
+        cand_s = np.where(keep, b_scores, -1).astype(np.int32)
+        cand_g = np.where(keep, ov.base_grank[sid0],
+                          eng.INT_MAX).astype(np.int32)
+        if ov.index is not None:
+            o_scores, o_sids = ov.index.complete_batch_padded(qs, qlens, k)
+            o_valid = o_sids >= 0
+            o_sid0 = np.where(o_valid, o_sids, 0)
+            cand_s = np.concatenate(
+                [cand_s, np.where(o_valid, o_scores, -1).astype(np.int32)],
+                axis=1)
+            cand_g = np.concatenate(
+                [cand_g, np.where(o_valid, ov.ov_grank[o_sid0],
+                                  eng.INT_MAX).astype(np.int32)], axis=1)
+        fn = self._merge_fn(cand_s.shape[0], cand_s.shape[1], k)
+        scores, granks = jax.tree.map(np.asarray, fn(cand_s, cand_g))
+        return scores, granks
+
     def complete(self, queries: list[str | bytes], k: int = 10):
         """Top-k completions for a batch of query strings.
 
@@ -307,7 +587,7 @@ class CompletionIndex:
         # serving paths decode thousands of these, and looping numpy
         # scalars costs more than the decode itself
         row = []
-        strings = self.strings
+        strings = self.live_strings
         for score, sid in zip(np.asarray(scores).tolist(),
                               np.asarray(sids).tolist()):
             if score < 0 or sid < 0:

@@ -91,6 +91,9 @@ def save_index(index, path: str) -> None:
     meta = {
         "format_version": FORMAT_VERSION,
         "spec": index.spec.to_dict(),
+        # hot-swap generation: a restarting service resumes epoch
+        # numbering instead of rewinding live sessions' comparisons
+        "epoch": getattr(index, "epoch", 0),
         "cfg": dataclasses.asdict(index.cfg),
         "stats": dataclasses.asdict(index.stats),
         "trie_scalars": {"max_depth": trie.max_depth,
@@ -197,4 +200,5 @@ def load_index_parts(path: str) -> dict:
         "scores": scores,
         "cfg": cfg,
         "stats": BuildStats(**meta["stats"]),
+        "epoch": int(meta.get("epoch", 0)),   # pre-mutation containers: 0
     }

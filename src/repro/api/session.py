@@ -25,8 +25,11 @@ def resolve_topk(index, scores, sids, exact, prefix: bytes, k: int):
     When the result is inexact (frontier overflow or a failed beam bound)
     the widened one-shot ``index.complete`` path recovers exactness from
     the raw prefix — the single exactness contract shared by the
-    sequential :class:`Session` and the batched scheduler demux."""
-    if not bool(exact):
+    sequential :class:`Session` and the batched scheduler demux.  Pending
+    mutations take the same escape hatch: the compiled session top-k sees
+    only the base epoch's tables, so the overlay-merged one-shot path
+    answers from the raw prefix until the next ``compact()``."""
+    if getattr(index, "has_mutations", False) or not bool(exact):
         return index.complete([bytes(prefix)], k=k)[0]
     return index._decode_row(scores, sids)
 
@@ -40,6 +43,26 @@ class Session:
         self._init, self._advance, self._topk = index._session_fns(k)
         self._prefix = bytearray()
         self._states = [jax.block_until_ready(self._init())]
+        self._epoch = index.epoch
+
+    def _sync_epoch(self) -> None:
+        """Migrate onto the index's current epoch.
+
+        After a hot-swap (``compact``) or ``reconfigure`` the compiled
+        fns hold closures over the previous epoch's tables/config, so
+        refetch them and re-derive the whole per-char state history by
+        replaying the retained prefix — the keystroke-boundary migration
+        the epoch versioning exists for."""
+        if self._epoch == self.index.epoch:
+            return
+        self._init, self._advance, self._topk = \
+            self.index._session_fns(self.k)
+        states = [self._init()]
+        for byte in self._prefix:
+            states.append(self._advance(states[-1], np.int32(byte)))
+        jax.block_until_ready(states[-1])
+        self._states = states
+        self._epoch = self.index.epoch
 
     # -- typing ------------------------------------------------------------
 
@@ -49,6 +72,7 @@ class Session:
 
     def type(self, text: str | bytes) -> list[tuple[int, str]]:
         """Append keystrokes and return the top-k for the new prefix."""
+        self._sync_epoch()
         data = text.encode() if isinstance(text, str) else bytes(text)
         for byte in data:
             self._states.append(
@@ -58,6 +82,7 @@ class Session:
 
     def backspace(self, n: int = 1) -> list[tuple[int, str]]:
         """Remove the last ``n`` keystrokes (restores the saved frontier)."""
+        self._sync_epoch()
         n = min(n, len(self._prefix))
         if n:
             del self._states[len(self._states) - n:]
@@ -75,6 +100,7 @@ class Session:
         if k is not None and k != self.k:
             # different k: no compiled session fn for it; one-shot path
             return self.index.complete([bytes(self._prefix)], k=k)[0]
+        self._sync_epoch()
         scores, sids, exact = jax.tree.map(
             np.asarray, self._topk(self._states[-1]))
         return resolve_topk(self.index, scores, sids, exact,

@@ -81,6 +81,24 @@ class IndexSpec:
                 raise ValueError(f"{name} must be positive")
         return self
 
+    def validate_sharded(self) -> "IndexSpec":
+        """Validate for use across ``ShardedCompletionIndex`` shards.
+
+        The packed (format v4) layout cannot be stacked: shard stacking
+        pads every table to the widest shard, which breaks the packed
+        side tables' sorted-rank invariants.  Rejecting the spec here
+        surfaces the problem at construction time with the workaround,
+        instead of a ``NotImplementedError`` deep in ``stack_shards``."""
+        self.validate()
+        if self.compression != "none":
+            raise ValueError(
+                f"compression={self.compression!r} is unsupported on "
+                f"sharded indexes: stacking pads the packed side tables "
+                f"and breaks their sorted-rank invariants. Build shards "
+                f"with compression='none'; to keep large shards off VMEM "
+                f"set memory_budget so they run the DMA-streamed tier")
+        return self
+
     def replace(self, **kw) -> "IndexSpec":
         return dataclasses.replace(self, **kw)
 

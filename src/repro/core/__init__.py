@@ -7,6 +7,8 @@ from repro.core.trie_build import SynonymRule, make_rules
 # The index/API layer lives in repro.api, which itself builds on the
 # submodules above — resolve those names lazily (PEP 562) so importing
 # repro.core.trie_build from repro.api doesn't recurse through this package.
+# Resolution goes straight to repro.api (not the deprecated repro.core.api
+# shim), so `from repro.core import CompletionIndex` stays warning-free.
 _API_NAMES = ("BuildStats", "CompletionIndex", "IndexSpec", "Session",
               "build_index")
 
@@ -26,6 +28,6 @@ __all__ = [
 
 def __getattr__(name):
     if name in _API_NAMES:
-        from repro.core import api as _api
+        from repro import api as _api
         return getattr(_api, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,9 +1,18 @@
-"""Back-compat shim: the public API moved to :mod:`repro.api`.
+"""Deprecated back-compat shim: the public API moved to :mod:`repro.api`.
 
-``CompletionIndex.build(...)`` / ``.complete(...)`` keep working from this
-import path; new code should use ``repro.api`` (IndexSpec, build_index,
-Session, save/load).
+Importing this module warns; the re-exports below keep PR-1-era code
+(``from repro.core.api import CompletionIndex``) working for one more
+release.  New code imports from ``repro.api`` (IndexSpec, build_index,
+Session, save/load) — or ``repro.core``, whose lazy attributes resolve
+there without touching this shim.
 """
+
+import warnings
+
+warnings.warn(
+    "repro.core.api is deprecated and will be removed; import from "
+    "repro.api instead (e.g. `from repro.api import CompletionIndex`)",
+    DeprecationWarning, stacklevel=2)
 
 from repro.api.build import BuildStats, build_index
 from repro.api.index import CompletionIndex, _to_device

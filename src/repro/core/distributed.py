@@ -51,6 +51,15 @@ SHARDING_SKIP_REASON = (
 ) if _MISSING_SHARDING_APIS else ""
 
 
+class UnsupportedOnShardedIndex(NotImplementedError):
+    """An operation that needs a local :class:`CompletionIndex` was called
+    on a :class:`ShardedCompletionIndex` (or a service wrapping one).
+
+    Raised instead of a bare ``NotImplementedError`` so callers can catch
+    the *category* — per-keystroke sessions, mutation/compaction — and
+    the message always names the local-mode alternative."""
+
+
 def require_modern_sharding() -> None:
     """Raise a clear error (instead of an AttributeError mid-trace) when
     the running jax cannot execute the shard_map paths."""
@@ -217,6 +226,7 @@ class ShardedCompletionIndex:
             spec = IndexSpec(kind=kind or "et", **build_kwargs)
         elif kind is not None or build_kwargs:
             raise TypeError("pass either spec= or IndexSpec kwargs, not both")
+        spec.validate_sharded()   # before any shard is built, not after
         if mesh is not None:
             n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
         elif n_shards is None:
@@ -237,7 +247,10 @@ class ShardedCompletionIndex:
         self.mesh = mesh
         self.model_axis = model_axis
         self.data_axes = data_axes
-        self.spec = spec
+        # fail unsupported-on-sharded spec combinations (packed layout)
+        # here, with the workaround in the message, instead of deep in
+        # stack_shards — every construction path funnels through this
+        self.spec = spec.validate_sharded()
         self.shards = shards
         stacked, self.cfg, self.stride = stack_shards(self.shards)
         if mesh is not None:
@@ -356,7 +369,14 @@ class ShardedCompletionIndex:
         return out
 
     def session(self, k: int = 10):
-        raise NotImplementedError(
+        raise UnsupportedOnShardedIndex(
+            "ShardedCompletionIndex has no per-keystroke session: a "
+            "resumable locus frontier would have to live on every shard "
+            "and merge per keystroke — use complete() for batch lookups, "
+            "or a local CompletionIndex for incremental typing")
+
+    def open_session(self, k: int = 10):
+        raise UnsupportedOnShardedIndex(
             "ShardedCompletionIndex has no per-keystroke session: a "
             "resumable locus frontier would have to live on every shard "
             "and merge per keystroke — use complete() for batch lookups, "

@@ -37,6 +37,7 @@ from repro.core.engine.incremental import (LocusState, advance_loci,
                                            init_locus_batch,
                                            init_locus_state, topk_from_loci,
                                            topk_from_loci_batch)
+from repro.core.engine.overlay import DeltaOverlay, merge_overlay_topk
 # substrate last: it pulls the sibling modules above off the (partially
 # initialized) package, so they must already be bound
 from repro.core.engine.substrate import (PallasSubstrate, Substrate,
@@ -55,6 +56,7 @@ __all__ = [
     "LocusState", "init_locus_state", "advance_locus_state", "advance_loci",
     "topk_from_loci", "init_locus_batch", "advance_loci_batch",
     "topk_from_loci_batch",
+    "DeltaOverlay", "merge_overlay_topk",
     "Substrate", "PallasSubstrate", "register_substrate", "get_substrate",
     "available_substrates", "resolve_substrate",
     "topk_phase2", "topk_phase2_batch", "complete_one", "complete_batch",

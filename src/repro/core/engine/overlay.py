@@ -1,0 +1,167 @@
+"""Delta overlay: mutation-without-rebuild for a completion index.
+
+The base index is immutable (its device tables, caches and packed planes
+are all derived from the full sorted dictionary), so online
+``insert``/``delete``/``update_score`` land in a :class:`DeltaOverlay`
+instead:
+
+- ``added`` maps overlay strings to scores — brand-new strings *and*
+  re-scored base strings (a re-score tombstones the base entry and
+  carries the new score here, so the base tables never lie);
+- ``tombstones`` holds base strings masked out of query results
+  (deletions and the base half of every re-score).
+
+At query time the index answers from **base top-(k + D)** (D bounds the
+tombstones a result row can lose) plus **overlay top-k** — the overlay is
+itself a small index built through the normal pipeline, so synonym rules
+apply to mutated entries identically — and fuses the two candidate sets
+with :func:`merge_overlay_topk` through the substrate's
+``topk_with_payload`` seam.  The fused kernels never see the overlay.
+
+**Global ranks.** Merged results must be bit-identical to a from-scratch
+rebuild, including score-tie order (the oracle contract: score desc,
+string asc — and sids are lexicographic ranks because the dictionary is
+stored sorted).  ``refresh`` therefore assigns every live string its
+*global rank*: the sid it would have in the rebuilt index.  Candidates
+enter the merge sorted by grank, so the substrate's
+ties-toward-lower-index selection reproduces the rebuilt tie order, and
+the returned "sids" are already rebuilt-index sids (they decode against
+``live`` rather than the base string list).
+
+``refresh`` is O(N + overlay) on the host and runs once per mutation
+batch (results are reused until the next mutation, spec change or
+epoch); folding the overlay away entirely is ``CompletionIndex.compact``.
+"""
+
+from __future__ import annotations
+
+import bisect
+
+import jax
+import numpy as np
+
+from repro.core.engine.structs import INT_MAX
+
+
+def merge_overlay_topk(scores: jax.Array, granks: jax.Array, k: int, sub):
+    """Select the global top-k from base+overlay candidate rows.
+
+    scores int32[B, C] / granks int32[B, C]; invalid slots carry score -1
+    and grank INT_MAX.  Rows are pre-sorted ascending by grank so the
+    substrate's ``topk_with_payload`` — which breaks score ties toward
+    the lower candidate index — lands ties on the lexicographically
+    smaller string, i.e. the rebuilt index's order.  Returns
+    (scores[B, k], granks[B, k]).
+    """
+    granks_sorted, scores_sorted = jax.lax.sort((granks, scores),
+                                                num_keys=1)
+    return sub.topk_with_payload(scores_sorted, granks_sorted, k)
+
+
+class DeltaOverlay:
+    """Mutable side-state over an immutable base index (see module doc).
+
+    Mutation entry points take the base's sorted string list explicitly —
+    the overlay never holds a reference to its index, so a compaction can
+    simply drop it.
+    """
+
+    def __init__(self):
+        self.added: dict[bytes, int] = {}
+        self.tombstones: set[bytes] = set()
+        self.mutations = 0            # monotonic; dirties compiled state
+        # refresh() products (None / stale until the token matches)
+        self._token = None
+        self.index = None             # side-index over `added`, or None
+        self.live: list[bytes] = []   # sorted live strings == rebuilt dict
+        self.base_dead = None         # bool[N]: base sid is tombstoned
+        self.base_grank = None        # int32[N]: base sid -> global rank
+        self.ov_grank = None          # int32[max(Nov,1)]: overlay sid -> rank
+
+    # -- membership --------------------------------------------------------
+
+    @property
+    def active(self) -> bool:
+        return bool(self.added or self.tombstones)
+
+    @staticmethod
+    def _base_sid(base_strings: list[bytes], s: bytes) -> int:
+        i = bisect.bisect_left(base_strings, s)
+        if i < len(base_strings) and base_strings[i] == s:
+            return i
+        return -1
+
+    def is_live(self, base_strings: list[bytes], s: bytes) -> bool:
+        return s in self.added or (
+            s not in self.tombstones
+            and self._base_sid(base_strings, s) >= 0)
+
+    # -- mutations ---------------------------------------------------------
+
+    def upsert(self, base_strings: list[bytes], s: bytes,
+               score: int) -> None:
+        """Insert or re-score: a base entry is tombstoned and re-carried
+        here, a pure-overlay entry just changes score."""
+        if self._base_sid(base_strings, s) >= 0:
+            self.tombstones.add(s)
+        self.added[s] = score
+        self._touch()
+
+    def remove(self, base_strings: list[bytes], s: bytes) -> None:
+        """Delete a live string; raises KeyError when it is not live."""
+        in_overlay = s in self.added
+        in_base = self._base_sid(base_strings, s) >= 0
+        if not in_overlay and (not in_base or s in self.tombstones):
+            raise KeyError(f"{s!r} is not in the index")
+        if in_overlay:
+            del self.added[s]
+        if in_base:
+            self.tombstones.add(s)
+        self._touch()
+
+    def _touch(self) -> None:
+        self.mutations += 1
+
+    # -- compiled-state refresh --------------------------------------------
+
+    def refresh(self, base) -> None:
+        """(Re)build the side-index and rank tables for the current
+        mutation set against ``base`` (a CompletionIndex).  Idempotent
+        until the next mutation / spec change / epoch."""
+        token = (self.mutations, base.spec, base.epoch)
+        if token == self._token:
+            return
+        base_strings = base.strings
+        n = len(base_strings)
+        dead = np.zeros(max(n, 1), dtype=bool)
+        for s in self.tombstones:
+            sid = self._base_sid(base_strings, s)
+            if sid >= 0:
+                dead[sid] = True
+        ov_strings = sorted(self.added)
+        live = sorted(
+            {s for i, s in enumerate(base_strings) if not dead[i]}
+            | self.added.keys())
+        rank = {s: i for i, s in enumerate(live)}
+        base_grank = np.full(max(n, 1), INT_MAX, dtype=np.int32)
+        for i, s in enumerate(base_strings):
+            if not dead[i]:
+                base_grank[i] = rank[s]
+        ov_grank = np.asarray(
+            [rank[s] for s in ov_strings] or [int(INT_MAX)],
+            dtype=np.int32)
+        if ov_strings:
+            # build through the normal pipeline so synonym rules apply to
+            # mutated entries too; the packed layout buys nothing on a
+            # dictionary this small, so the side-index stays full-width
+            from repro.api.build import build_index
+            self.index = build_index(
+                ov_strings, [self.added[s] for s in ov_strings],
+                base.rules, base.spec.replace(compression="none"))
+        else:
+            self.index = None
+        self.live = live
+        self.base_dead = dead
+        self.base_grank = base_grank
+        self.ov_grank = ov_grank
+        self._token = token

@@ -40,10 +40,13 @@ def _make_index(spec, args):
         # loading re-resolves the *saved* spec's substrate for this host;
         # only an explicit --substrate flag overrides it
         idx = CompletionIndex.load(args.load_index)
+        overrides = {}
         if args.substrate is not None:
-            idx.set_substrate(args.substrate)
+            overrides["substrate"] = args.substrate
         if args.memory_budget is not None:
-            idx.set_memory_budget(args.memory_budget)
+            overrides["memory_budget"] = args.memory_budget
+        if overrides:
+            idx.reconfigure(**overrides)
     else:
         idx = build_index(
             ds.strings, ds.scores, make_rules(ds.rules),
@@ -220,6 +223,111 @@ def serve_zipf(spec, args):
     return out
 
 
+def serve_churn(spec, args):
+    """Zipf keystroke stream with the dictionary churning underneath it.
+
+    Every ``--churn-every`` keystrokes a mutation batch lands on the live
+    index (one trending insert, one delete, one re-score); once the
+    overlay backlog reaches ``--compact-at`` the service compacts —
+    rebuilding in the background shape and hot-swapping under the open
+    scheduler lanes, which migrate at their next flush.  Reports
+    keystroke throughput alongside mutation/compaction cost, and
+    verifies zero lost keystrokes plus probe-query agreement between the
+    final overlay-merged answers and the post-compaction rebuilt index.
+    """
+    ds, idx, build_s = _make_index(spec, args)
+    events = make_keystroke_events(ds, args.sessions, args.queries, seed=1)
+    svc = CompletionService(idx, batching=True, block=args.block,
+                            max_wait_ms=args.max_wait_ms,
+                            max_queue=args.max_queue)
+    rng = np.random.default_rng(2)
+    base_strings = list(idx.strings)
+    deleted: set[bytes] = set()
+    remaining = [0] * args.sessions
+    for s, _ in events:
+        remaining[s] += 1
+    sessions = [svc.open_session(k=10) for _ in range(args.sessions)]
+    tickets = []
+    mutations = {"insert": 0, "delete": 0, "rescore": 0}
+    compactions = n_hot = 0
+    mut_s = compact_s = 0.0
+    t0 = time.perf_counter()
+    for i, (s, c) in enumerate(events):
+        if i and i % args.churn_every == 0:
+            m0 = time.perf_counter()
+            idx.insert(b"zz~trending-%d" % n_hot,
+                       int(rng.integers(1, 1000)))
+            n_hot += 1
+            mutations["insert"] += 1
+            victim = base_strings[int(rng.integers(len(base_strings)))]
+            if victim not in deleted:
+                idx.delete(victim)
+                deleted.add(victim)
+                mutations["delete"] += 1
+            target = base_strings[int(rng.integers(len(base_strings)))]
+            if target not in deleted:
+                idx.update_score(target, int(rng.integers(1, 1000)))
+                mutations["rescore"] += 1
+            mut_s += time.perf_counter() - m0
+            if idx.mutation_backlog >= args.compact_at:
+                c0 = time.perf_counter()
+                svc.compact()
+                compact_s += time.perf_counter() - c0
+                compactions += 1
+        if c < 0:
+            sessions[s].reset()
+        else:
+            try:
+                tickets.append(sessions[s].submit(c))
+            except SchedulerOverloaded:
+                svc.flush()
+                tickets.append(sessions[s].submit(c))
+        remaining[s] -= 1
+        if remaining[s] == 0:
+            sessions[s].close()
+    svc.drain()
+    dt = time.perf_counter() - t0
+    lost = sum(t.results is None for t in tickets)
+    # verification: the overlay-merged answers must survive the fold —
+    # compact() rebuilds from scratch internally, so pre/post agreement
+    # on a probe batch is a merged-path-vs-rebuild differential for free
+    probe = sorted({bytes(t.prefix)[:3] for t in tickets})[:24]
+    pre = idx.complete(probe, k=10)
+    c0 = time.perf_counter()
+    svc.compact()
+    compact_s += time.perf_counter() - c0
+    compactions += 1
+    post = idx.complete(probe, k=10)
+    bstats = svc.scheduler.stats
+    n = len(tickets)
+    out = {
+        "arch": spec.arch_id, "kind": idx.kind,
+        "substrate": idx.substrate,
+        "compression": idx.compression,
+        "workload": "churn",
+        "n_strings": idx.stats.n_strings,
+        "build_seconds": round(build_s, 2),
+        "sessions": args.sessions, "block": args.block,
+        "keystrokes": n,
+        "us_per_keystroke": round(dt / max(n, 1) * 1e6, 1),
+        "p50_ms": round(svc.stats.p50_keystroke_ms(), 3),
+        "p99_ms": round(svc.stats.p99_keystroke_ms(), 3),
+        "mutations": mutations,
+        "mutation_ms_mean": round(
+            mut_s / max(sum(mutations.values()), 1) * 1e3, 3),
+        "compactions": compactions,
+        "compact_ms_mean": round(compact_s / max(compactions, 1) * 1e3, 1),
+        "migrations": bstats.migrations,
+        "final_epoch": idx.epoch,
+        "lost_keystrokes": lost,
+        "verified": pre == post,
+        "flushes": bstats.n_flushes,
+        "mean_occupancy": round(bstats.mean_occupancy, 2),
+    }
+    print(json.dumps(out))
+    return out
+
+
 def serve_lm(spec, args):
     from repro.models import transformer as tf
 
@@ -273,11 +381,21 @@ def main():
                          "to built and --load-index'd indexes, batch and "
                          "keystroke workloads alike")
     ap.add_argument("--workload", default="batch",
-                    choices=["batch", "keystroke", "zipf"],
+                    choices=["batch", "keystroke", "zipf", "churn"],
                     help="batch = one-shot query batches; keystroke = one "
                          "session typing char-by-char; zipf = many "
                          "concurrent sessions under Zipf-skewed traffic, "
-                         "sequential vs continuous-batching comparison")
+                         "sequential vs continuous-batching comparison; "
+                         "churn = zipf traffic with live insert/delete/"
+                         "re-score batches and periodic compaction "
+                         "hot-swaps under the open sessions")
+    ap.add_argument("--churn-every", type=int, default=64,
+                    help="keystrokes between mutation batches for "
+                         "--workload churn")
+    ap.add_argument("--compact-at", type=int, default=48,
+                    help="overlay backlog (pending inserts+tombstones) "
+                         "that triggers a compaction hot-swap for "
+                         "--workload churn")
     ap.add_argument("--sessions", type=int, default=8,
                     help="concurrent typing sessions for --workload zipf")
     ap.add_argument("--block", type=int, default=8,
@@ -305,6 +423,8 @@ def main():
             serve_keystroke(spec, args)
         elif args.workload == "zipf":
             serve_zipf(spec, args)
+        elif args.workload == "churn":
+            serve_churn(spec, args)
         else:
             serve_autocomplete(spec, args)
     elif spec.family == "lm":

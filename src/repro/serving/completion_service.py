@@ -216,6 +216,26 @@ class CompletionService:
         if self.batching and self.scheduler is not None:
             self.scheduler.drain()
 
+    def compact(self, handoff_path: str | None = None
+                ) -> "CompletionService":
+        """Fold the index's pending mutations into a fresh index and
+        hot-swap it under the live sessions.
+
+        The swap bumps the index epoch; sequential sessions and the
+        scheduler's slab migrate at their next keystroke boundary by
+        replaying their retained prefixes, so no open session drops a
+        keystroke or loses its prefix.  ``handoff_path`` routes the swap
+        through the npz container (restart-without-downtime shape)."""
+        compact = getattr(self.index, "compact", None)
+        if not callable(compact):
+            from repro.core.distributed import UnsupportedOnShardedIndex
+            raise UnsupportedOnShardedIndex(
+                f"compact() needs a local CompletionIndex; "
+                f"{type(self.index).__name__} has no mutation overlay — "
+                f"mutate and compact the per-shard indexes instead")
+        compact(handoff_path)
+        return self
+
     def open_session(self, k: int = 10) -> ServiceSession:
         """Start a stateful per-keystroke session.
 
@@ -225,7 +245,8 @@ class CompletionService:
         shared micro-batches."""
         if not callable(getattr(self.index, "session", None)) or \
                 not callable(getattr(self.index, "_slab_fns", None)):
-            raise NotImplementedError(
+            from repro.core.distributed import UnsupportedOnShardedIndex
+            raise UnsupportedOnShardedIndex(
                 f"per-keystroke sessions need a local CompletionIndex; "
                 f"{type(self.index).__name__} does not support them yet "
                 f"(sharded sessions would need a resumable cross-shard "

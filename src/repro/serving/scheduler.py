@@ -97,6 +97,7 @@ class BatchStats:
     rejected: int = 0              # submits refused by backpressure
     fallbacks: int = 0             # inexact lanes resolved via one-shot path
     sum_occupancy: int = 0         # lanes consumed across all flushes
+    migrations: int = 0            # slab rebuilds onto a new index epoch
 
     @property
     def mean_occupancy(self) -> float:
@@ -246,6 +247,12 @@ class KeystrokeScheduler:
         self._queues: list[collections.deque[Ticket]] = [
             collections.deque() for _ in range(block)]
         self._draining = [False] * block
+        # per-lane prefix as of the last *consumed* ticket (== what the
+        # slab's frontier actually encodes — the session's own _prefix
+        # runs ahead of it by whatever is still queued); this is the
+        # replay source for epoch migration
+        self._consumed: list[bytes] = [b""] * block
+        self._epoch = index.epoch
         self._pending = 0
         # O(1) mirrors of _ready_lanes()/_occupied() for the per-submit
         # pump hot path (scanning every lane per keystroke is measurable)
@@ -264,6 +271,7 @@ class KeystrokeScheduler:
                 # re-init rides the first ticket's flush like reset()
                 session._reset_pending = True
                 self._lanes[lane] = session
+                self._consumed[lane] = b""
                 self._n_occupied += 1
                 return session
         raise SchedulerOverloaded(
@@ -280,6 +288,7 @@ class KeystrokeScheduler:
             self._draining[session.lane] = True
         else:
             self._lanes[session.lane] = None
+            self._consumed[session.lane] = b""
             self._n_occupied -= 1
 
     # -- admission ---------------------------------------------------------
@@ -357,6 +366,8 @@ class KeystrokeScheduler:
         self._settle()
 
     def _flush(self, kind: str) -> None:
+        if self._epoch != self.index.epoch:
+            self._migrate()
         # one ticket per lane, FIFO within the lane
         taken: list[Ticket] = []
         chars = np.full((self.block,), -1, np.int32)
@@ -366,11 +377,16 @@ class KeystrokeScheduler:
             taken.append(t)
             chars[lane] = t.char
             resets[lane] = t.reset_first
+            # t.prefix is the lane prefix after this keystroke (resets
+            # included), which is exactly what the slab encodes once this
+            # flush's advance lands
+            self._consumed[lane] = t.prefix
             if not self._queues[lane]:
                 self._n_ready -= 1
                 if self._draining[lane]:
                     self._lanes[lane] = None   # deferred close completes
                     self._draining[lane] = False
+                    self._consumed[lane] = b""
                     self._n_occupied -= 1
         self._pending -= len(taken)
         self._slab = self._advance_fn(self._slab, chars, resets)
@@ -411,6 +427,33 @@ class KeystrokeScheduler:
             self._unsettled = stash
         if prev:
             self._settle_handles(prev)
+
+    def _migrate(self) -> None:
+        """Rebuild the slab on the index's current epoch (hot-swap /
+        reconfigure migration at the flush boundary).
+
+        The stashed flush settles first — its handles are plain device
+        arrays computed on the old tables, still valid to demux.  Then
+        the slab fns are refetched (the swap cleared the compile cache /
+        the reconfigure changed the cfg key) and every lane's *consumed*
+        prefix is replayed column-wise: one batched advance per step of
+        the longest prefix, idle lanes riding as -1 no-ops.  Queued
+        keystrokes are untouched — they consume from the rebuilt slab on
+        the flushes that follow, so nothing is lost or reordered."""
+        self._settle()
+        self._init_fn, self._advance_fn = self.index._slab_fns(self.block)
+        self._topk_fns = {}
+        slab = self._init_fn()
+        no_reset = np.zeros((self.block,), bool)
+        for step in range(max(map(len, self._consumed), default=0)):
+            chars = np.full((self.block,), -1, np.int32)
+            for lane, p in enumerate(self._consumed):
+                if step < len(p):
+                    chars[lane] = p[step]
+            slab = self._advance_fn(slab, chars, no_reset)
+        self._slab = jax.block_until_ready(slab)
+        self._epoch = self.index.epoch
+        self.stats.migrations += 1
 
     def _settle(self) -> None:
         """Resolve the stashed flush, if any (the pipeline's tail)."""

@@ -83,14 +83,14 @@ def test_real_tree_is_clean():
 
 
 def test_serving_tree_is_scanned_and_clean():
-    """The serving layer (scheduler, service, engine) must be inside the
-    sanitizer's default scan set — a clean default pass that silently
-    skipped serving/ would prove nothing about it."""
+    """The serving layer (scheduler, service, engine) and the mutation
+    overlay must be inside the sanitizer's default scan set — a clean
+    default pass that silently skipped them would prove nothing."""
     from repro.analysis.astutil import load_tree
 
     scanned = {sf.rel for sf in load_tree(default_root())}
     for mod in ("serving/scheduler.py", "serving/completion_service.py",
-                "serving/engine.py"):
+                "serving/engine.py", "core/engine/overlay.py"):
         assert mod in scanned, f"{mod} missing from sanitizer scan set"
     findings = [f for f in run_all(default_root() / "serving")
                 if not f.waived]

@@ -154,3 +154,61 @@ def test_service_open_session_raises_targeted_error(corpus):
     assert "complete()" in str(ei.value)
     out = svc.complete(["andy"], k=3)
     assert out[0][0][1] == "andrew pavlo"
+
+
+def test_targeted_errors_are_the_dedicated_type(corpus):
+    """The session-shaped entry points raise UnsupportedOnShardedIndex
+    (a NotImplementedError subclass, so older match-based callers keep
+    working) rather than a bare NotImplementedError."""
+    from repro.core.distributed import UnsupportedOnShardedIndex
+
+    assert issubclass(UnsupportedOnShardedIndex, NotImplementedError)
+    strings, scores, rules = corpus
+    idx = ShardedCompletionIndex(strings, scores, rules, n_shards=2,
+                                 kind="et")
+    with pytest.raises(UnsupportedOnShardedIndex):
+        idx.session(k=5)
+    with pytest.raises(UnsupportedOnShardedIndex):
+        idx.open_session(k=5)
+
+
+def test_service_compact_raises_targeted_error(corpus):
+    """compact() is an overlay operation; on a sharded index the service
+    points at the per-shard workaround instead of AttributeError-ing."""
+    from repro.core.distributed import UnsupportedOnShardedIndex
+    from repro.serving import CompletionService
+
+    strings, scores, rules = corpus
+    svc = CompletionService(ShardedCompletionIndex(
+        strings, scores, rules, n_shards=2, kind="et"))
+    with pytest.raises(UnsupportedOnShardedIndex, match="per-shard"):
+        svc.compact()
+
+
+# -- packed layout is rejected at spec validation, not deep in stacking --------
+
+
+def test_packed_spec_rejected_at_construction(corpus):
+    strings, scores, rules = corpus
+    with pytest.raises(ValueError, match="unsupported on sharded"):
+        ShardedCompletionIndex(strings, scores, rules, n_shards=2,
+                               kind="et", compression="packed")
+
+
+def test_packed_shards_rejected_by_from_shards(corpus):
+    """Pre-built packed shards fail at wrap time with the workaround in
+    the message (build with compression='none'), before any stacking."""
+    strings, scores, rules = corpus
+    spec = IndexSpec(kind="et", compression="packed")
+    shards = [build_index(strings[i::2], scores[i::2], rules, spec)
+              for i in range(2)]
+    with pytest.raises(ValueError, match="compression='none'"):
+        ShardedCompletionIndex.from_shards(shards)
+
+
+def test_packed_spec_still_validates_unsharded():
+    """The rejection is sharded-only: the same spec stays buildable as a
+    local index (regression guard for the validate/validate_sharded
+    split)."""
+    spec = IndexSpec(kind="et", compression="packed")
+    assert spec.validate() is spec
