@@ -76,6 +76,12 @@ CASES = [
     ("cached_k16", "et", {"cache_k": 16}, False, "packed", None),
     ("beam", "et", {}, False, "none", FLIP_BUDGET),
     ("beam", "et", {}, False, "packed", FLIP_BUDGET),
+    # query-mode rows: the typo-tolerant walk (edit_budget=1 widens the
+    # frontier sweep with substitute/insert/delete transitions) and the
+    # multi-term index (build-time token-skip rule synthesis; the beam
+    # phase is unchanged, the walk consumes the synthesized teleports)
+    ("edit1_walk", "et", {"edit_budget": 1}, False, "none", None),
+    ("multiterm_beam", "multiterm", {}, False, "none", None),
 ]
 SUBSTRATES = ("jnp", "pallas")
 

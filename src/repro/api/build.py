@@ -15,7 +15,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.api.spec import (BuildContext, IndexSpec, get_builder,
-                            register_builder)
+                            get_synthesizer, register_builder,
+                            register_rule_synthesizer)
 from repro.core import engine as eng
 from repro.core import knapsack as ks
 from repro.core import trie_build as tb
@@ -73,6 +74,54 @@ def _build_ht(ctx: BuildContext):
     return expand_mask, ~expand_mask
 
 
+@register_builder("multiterm")
+def _build_multiterm(ctx: BuildContext):
+    # multi-term completion = ET-style expansion of the synthesized
+    # token-skip rules (plus any user rules): every rule becomes synonym
+    # branches with teleports, so a typed space fans out to the
+    # gram-skipping targets through the ordinary teleport plane — a
+    # vectorized gather, not a per-rule link-store loop (the synthesized
+    # rules all share the one-byte lhs b" ", which would otherwise make
+    # every space position match every rule)
+    n = len(ctx.rules)
+    return np.ones(n, bool), np.zeros(n, bool)
+
+
+def multiterm_rules(strings, gap: int, existing=()) -> list[tb.SynonymRule]:
+    """Token-skip rules for multi-term completion.
+
+    For every contiguous run of 1..``gap`` interior tokens ``G`` that
+    appears between spaces in some dictionary string, emit the rule
+    ``b" " -> b" " + G + b" "``: typing a space may skip those tokens, so
+    the *last* typed token completes conditioned on an earlier-token
+    context ("the t" -> "the new york times").  Grams are deduplicated
+    corpus-wide and against ``existing`` rules (so re-building from an
+    index's persisted rule list does not double up).
+    """
+    seen = {(r.lhs, r.rhs) for r in existing}
+    out: list[tb.SynonymRule] = []
+    for s in strings:
+        s = s.encode() if isinstance(s, str) else bytes(s)
+        toks = [t for t in s.split(b" ") if t]
+        # a gram must sit strictly between tokens: a space precedes it and
+        # a completable token follows it
+        for i in range(1, len(toks)):
+            for n in range(1, gap + 1):
+                if i + n > len(toks) - 1:
+                    break
+                gram = b" ".join(toks[i:i + n])
+                key = (b" ", b" " + gram + b" ")
+                if key not in seen:
+                    seen.add(key)
+                    out.append(tb.SynonymRule(*key))
+    return out
+
+
+@register_rule_synthesizer("multiterm")
+def _synthesize_multiterm(spec: IndexSpec, strings, rules):
+    return multiterm_rules(strings, spec.multiterm_gap, existing=rules)
+
+
 # ---------------------------------------------------------------------------
 # shared pipeline
 # ---------------------------------------------------------------------------
@@ -96,6 +145,9 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
 
     t0 = time.perf_counter()
     rules = list(rules)
+    synthesizer = get_synthesizer(spec.kind)
+    if synthesizer is not None:
+        rules = rules + list(synthesizer(spec, strings, rules))
     trie, ss, sc = tb.build_dict_trie(strings, scores)
     anchors, rids, targets = tb.find_links(trie, rules)
     n_rules = len(rules)
@@ -143,6 +195,8 @@ def build_index(strings, scores, rules, spec: IndexSpec | None = None,
         teleports=trie.max_syn_targets,
         tele_width=trie.tele_plane.shape[1],
         term_width=rule_trie.term_plane.shape[1],
+        edit_budget=spec.edit_budget,
+        branch_width=max(int(np.diff(trie.first_child).max(initial=0)), 1),
         walk_tile=trie.walk_tile, emit_tile=trie.emit_tile,
         link_tile=trie.link_tile,
         memory_budget=spec.memory_budget,

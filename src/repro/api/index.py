@@ -91,10 +91,10 @@ def _to_device(trie: tb.DictTrie, rule_trie: tb.RuleTrie) -> eng.DeviceTrie:
 #: runtime — they ride ``EngineConfig`` (and thus every compile-cache
 #: key), so flipping them never touches the built structures.
 RUNTIME_FIELDS = ("substrate", "memory_budget", "frontier", "gens",
-                  "expand", "max_steps")
+                  "expand", "max_steps", "edit_budget")
 #: fields baked into the built structures at construction time; changing
 #: them means a rebuild (``build_index`` or the next ``compact()``).
-BUILD_FIELDS = ("kind", "alpha", "cache_k", "compression")
+BUILD_FIELDS = ("kind", "alpha", "cache_k", "compression", "multiterm_gap")
 
 
 @dataclass
@@ -154,7 +154,8 @@ class CompletionIndex:
 
         Accepts the :data:`RUNTIME_FIELDS` subset of ``IndexSpec``
         (``substrate``, ``memory_budget``, ``frontier``, ``gens``,
-        ``expand``, ``max_steps``), revalidates the resulting spec like a
+        ``expand``, ``max_steps``, ``edit_budget``), revalidates the
+        resulting spec like a
         build would, and folds the changes into ``EngineConfig`` — which
         keys every jit/compile-cache entry, so stale executables can
         never be hit while ones for the old configuration stay cached.
@@ -210,13 +211,16 @@ class CompletionIndex:
     def build(strings, scores, rules, kind: str = "et", *,
               alpha: float = 0.5, cache_k: int = 0,
               frontier: int = 32, gens: int = 48, expand: int = 8,
-              max_steps: int = 512,
-              compression: str = "none") -> "CompletionIndex":
+              max_steps: int = 512, compression: str = "none",
+              edit_budget: int = 0,
+              multiterm_gap: int = 2) -> "CompletionIndex":
         """Back-compat keyword constructor; equivalent to
         ``build_index(strings, scores, rules, IndexSpec(...))``."""
         spec = IndexSpec(kind=kind, alpha=alpha, cache_k=cache_k,
                          frontier=frontier, gens=gens, expand=expand,
-                         max_steps=max_steps, compression=compression)
+                         max_steps=max_steps, compression=compression,
+                         edit_budget=edit_budget,
+                         multiterm_gap=multiterm_gap)
         return build_index(strings, scores, rules, spec)
 
     @staticmethod

@@ -179,6 +179,18 @@ def load_index_parts(path: str) -> dict:
         substrate=eng.resolve_substrate(spec.substrate),
         term_width=rule_trie.term_plane.shape[1],
         table_widths=tuple((str(n), str(d)) for n, d in cfg.table_widths))
+    # branch_width (max dict fanout; sizes the bounded-edit child windows)
+    # is recomputed from the structures so pre-edit-mode containers load
+    # with a correct value instead of the dataclass default
+    if trie.first_child is not None:
+        bw = int(np.diff(trie.first_child).max(initial=0))
+    else:
+        # packed container without the dense CSR: branch rows carry every
+        # fanout >= 2 node; any DICT_UNARY flag means fanout 1 exists
+        bw = int(np.diff(trie.b_ptr.astype(np.int64)).max(initial=0))
+        if (trie.p_flags & tb.PACK_DICT_UNARY).any():
+            bw = max(bw, 1)
+    replace_kw["branch_width"] = max(bw, 1)
     if trie.tele_plane is not None:
         replace_kw.update(
             tele_width=trie.tele_plane.shape[1],

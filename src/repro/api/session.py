@@ -81,12 +81,29 @@ class Session:
         return self.topk()
 
     def backspace(self, n: int = 1) -> list[tuple[int, str]]:
-        """Remove the last ``n`` keystrokes (restores the saved frontier)."""
+        """Remove the last ``n`` *characters* (restores the saved
+        frontier).
+
+        The prefix is a byte string with one engine state per byte, but a
+        user-facing backspace removes a codepoint: deleting single bytes
+        would leave a dangling multi-byte UTF-8 head whose loci match
+        nothing (and which ``prefix`` can't even render).  Each character
+        removed pops its full byte run — a continuation byte is
+        ``0b10xxxxxx``, so scanning back over them finds the head."""
         self._sync_epoch()
-        n = min(n, len(self._prefix))
-        if n:
-            del self._states[len(self._states) - n:]
-            del self._prefix[len(self._prefix) - n:]
+        nbytes = 0
+        for _ in range(n):
+            if nbytes >= len(self._prefix):
+                break
+            # skip the character's continuation bytes, then its head
+            while nbytes < len(self._prefix) - 1 and \
+                    0x80 <= self._prefix[len(self._prefix) - 1 - nbytes] \
+                    < 0xC0:
+                nbytes += 1
+            nbytes += 1
+        if nbytes:
+            del self._states[len(self._states) - nbytes:]
+            del self._prefix[len(self._prefix) - nbytes:]
         return self.topk()
 
     def reset(self) -> None:

@@ -55,6 +55,18 @@ class IndexSpec:
     substrate: str = "auto"
     memory_budget: int = 0
     compression: str = "none"
+    # bounded-edit (typo-tolerant) matching: up to edit_budget
+    # substitutions/insertions/deletions may be spent on the literal
+    # characters of a query (rule lhs and synonym-variant characters must
+    # still be typed exactly).  Static — joins EngineConfig and every
+    # compile-cache key; runtime-reconfigurable via
+    # ``CompletionIndex.reconfigure(edit_budget=...)``.  0 = exact.
+    edit_budget: int = 0
+    # multi-term mode (kind="multiterm"): max token-gap bridged by the
+    # synthesized skip rules — typing a space may skip up to this many
+    # dictionary tokens, so the last token completes conditioned on an
+    # earlier-token context.  Ignored by other kinds.
+    multiterm_gap: int = 2
 
     def validate(self) -> "IndexSpec":
         if self.kind not in _BUILDERS:
@@ -76,9 +88,13 @@ class IndexSpec:
         for name in ("cache_k", "memory_budget"):
             if getattr(self, name) < 0:
                 raise ValueError(f"{name} must be >= 0")
-        for name in ("frontier", "gens", "expand", "max_steps"):
+        for name in ("frontier", "gens", "expand", "max_steps",
+                     "multiterm_gap"):
             if getattr(self, name) <= 0:
                 raise ValueError(f"{name} must be positive")
+        if not 0 <= self.edit_budget <= 2:
+            raise ValueError(
+                f"edit_budget must be in [0, 2], got {self.edit_budget}")
         return self
 
     def validate_sharded(self) -> "IndexSpec":
@@ -145,6 +161,31 @@ def register_builder(kind: str):
         return fn
 
     return deco
+
+
+# Optional per-kind rule synthesizers: run before link finding, they map
+# (spec, strings, user rules) to extra SynonymRules the kind derives from
+# the corpus itself (e.g. the multiterm token-skip rules).
+Synthesizer = Callable[[IndexSpec, list, list], list]
+
+_SYNTHESIZERS: dict[str, Synthesizer] = {}
+
+
+def register_rule_synthesizer(kind: str):
+    """Register a corpus-driven rule synthesizer for an index kind."""
+
+    def deco(fn: Synthesizer) -> Synthesizer:
+        if kind in _SYNTHESIZERS:
+            raise ValueError(f"synthesizer for kind {kind!r} already "
+                             "registered")
+        _SYNTHESIZERS[kind] = fn
+        return fn
+
+    return deco
+
+
+def get_synthesizer(kind: str) -> Synthesizer | None:
+    return _SYNTHESIZERS.get(kind)
 
 
 def get_builder(kind: str) -> Builder:

@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import packed as pk
-from repro.core.engine.locus import finalize_loci, link_lookup, teleport_expand
+from repro.core.engine.locus import (decode_states, dict_child_window,
+                                     encode_states, expand_frontier,
+                                     finalize_loci, link_lookup)
 from repro.core.engine.primitives import iters_for, resolve_sub
 from repro.core.engine.structs import DeviceTrie, EngineConfig, NEG_ONE
 
@@ -44,7 +46,7 @@ def init_locus_state(t: DeviceTrie, cfg: EngineConfig, sub=None) -> LocusState:
     F = cfg.frontier
     H = max(cfg.max_lhs_len, 1)
     row = jnp.full((F,), NEG_ONE, jnp.int32).at[0].set(0)
-    row, drop = teleport_expand(t, cfg, row, sub)
+    row, drop = expand_frontier(t, cfg, row, sub)
     rows = jnp.full((H, F), NEG_ONE, jnp.int32).at[0].set(row)
     return LocusState(rows=rows,
                       rnodes=jnp.full((H,), NEG_ONE, jnp.int32),
@@ -63,24 +65,43 @@ def advance_locus_state(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
     """
     sub = resolve_sub(cfg, sub)
     F = cfg.frontier
+    E = cfg.edit_budget
     H = state.rows.shape[0]
     c = jnp.asarray(c, jnp.int32)
     row = state.rows[0]
+    nodes, d = decode_states(row, E)
 
     packed = pk.is_packed(t)
     if packed:
-        parts = [pk.dict_children(t, row, c)]
+        parts = [encode_states(pk.dict_children(t, nodes, c), d, E)]
         if pk.has_syn_edges(t):
-            parts.append(pk.syn_children(t, row, c))
+            parts.append(encode_states(pk.syn_children(t, nodes, c), d, E))
     else:
         d_iters = iters_for(int(t.edge_char.shape[0]))
-        parts = [sub.csr_child_lookup(t.first_child, t.edge_char,
-                                      t.edge_child, row, c, d_iters)]
+        parts = [encode_states(
+            sub.csr_child_lookup(t.first_child, t.edge_char,
+                                 t.edge_child, nodes, c, d_iters), d, E)]
         if int(t.s_edge_child.shape[0]) > 0:
             s_iters = iters_for(int(t.s_edge_char.shape[0]))
-            parts.append(sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
-                                              t.s_edge_child, row, c,
-                                              s_iters))
+            parts.append(encode_states(
+                sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
+                                     t.s_edge_child, nodes, c, s_iters),
+                d, E))
+    if E > 0:
+        # bounded-edit keystroke transitions (mirror locus_dp's step):
+        # substitute into any non-matching dict child / insert in place,
+        # both at d+1; delete closure rides expand_frontier below
+        wchars, wchildren = dict_child_window(t, cfg, nodes)
+        can = (c >= 0) & (d < E)
+        s_ok = can[:, None] & (wchildren >= 0) & (wchars != c)
+        parts.append(encode_states(
+            jnp.where(s_ok, wchildren, NEG_ONE),
+            (d + 1)[:, None], E).reshape(-1))
+        n0 = jnp.where(nodes >= 0, nodes, 0)
+        is_syn = pk.syn_mask_of(t, n0) if packed else t.syn_mask[n0]
+        i_ok = can & (nodes >= 0) & ~is_syn
+        parts.append(encode_states(
+            jnp.where(i_ok, nodes, NEG_ONE), d + 1, E))
 
     rnodes = state.rnodes
     if cfg.rule_matches > 0 and cfg.max_lhs_len > 0:
@@ -96,19 +117,21 @@ def advance_locus_state(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
             terms = t.r_term_plane[nn]          # [term_width], -1 padded
             # lhs of length j+1 anchors at the frontier j keystrokes back
             anchor_row = state.rows[j]
-            anchor_ok = anchor_row >= 0
-            an = jnp.where(anchor_row >= 0, anchor_row, 0)
+            a_nodes, a_d = decode_states(anchor_row, E)
+            anchor_ok = a_nodes >= 0
+            an = jnp.where(anchor_ok, a_nodes, 0)
             anchor_ok &= ~(pk.syn_mask_of(t, an) if packed
                            else t.syn_mask[an])
-            anchors = jnp.where(anchor_ok, anchor_row, NEG_ONE)
+            anchors = jnp.where(anchor_ok, a_nodes, NEG_ONE)
             for j2 in range(cfg.max_terms_per_node):
                 rid = terms[j2]
                 has = ok & (rid >= 0)
                 tgt = link_lookup(t, anchors, rid)
-                parts.append(jnp.where(has, tgt, NEG_ONE))
+                parts.append(encode_states(
+                    jnp.where(has, tgt, NEG_ONE), a_d, E))
 
     merged, d1 = sub.dedup_compact(jnp.concatenate(parts), F)
-    merged, d2 = teleport_expand(t, cfg, merged, sub)
+    merged, d2 = expand_frontier(t, cfg, merged, sub)
     new_rows = jnp.concatenate([merged[None], state.rows[:-1]], axis=0)
     ok = c >= 0
     return LocusState(
@@ -164,7 +187,7 @@ def topk_from_loci(t: DeviceTrie, cfg: EngineConfig, state: LocusState,
     from repro.core.engine.substrate import topk_phase2
 
     sub = resolve_sub(cfg, sub)
-    loci = finalize_loci(t, state.rows[0])
+    loci = finalize_loci(t, decode_states(state.rows[0], cfg.edit_budget)[0])
     scores, sids, exact = topk_phase2(t, cfg, loci, k, sub)
     return scores, sids, exact & (state.overflow == 0)
 
@@ -181,6 +204,7 @@ def topk_from_loci_batch(t: DeviceTrie, cfg: EngineConfig,
     from repro.core.engine.substrate import topk_phase2_batch
 
     sub = resolve_sub(cfg, sub)
-    loci = jax.vmap(lambda row: finalize_loci(t, row))(states.rows[:, 0])
+    loci = jax.vmap(lambda row: finalize_loci(
+        t, decode_states(row, cfg.edit_budget)[0]))(states.rows[:, 0])
     scores, sids, exact = topk_phase2_batch(t, cfg, loci, k, sub)
     return scores, sids, exact & (states.overflow == 0)

@@ -9,6 +9,18 @@ rule-side lookups read the packed rule plane
 rows for teleports, ``link_ptr`` + one binary search for link steps, and
 ``r_term_plane`` rows for full-lhs matches.
 
+Bounded-edit mode (``cfg.edit_budget`` = E > 0) generalizes the frontier:
+each entry becomes the packed state ``node * (E + 1) + edits_used`` and
+the sweep gains three extra transition families on the dictionary side —
+*substitute* (consume a query char into any non-matching dict child at
+d+1), *insert* (consume a query char staying put at d+1) and *delete*
+(take any dict child without consuming a query char, applied as an
+E-round closure when a position's row completes).  Synonym-branch chars
+and rule lhs occurrences must still be typed exactly; teleports and rule
+steps carry the edit count through unchanged.  At E = 0 the packing and
+every edit transition degenerate to the exact pre-edit computation, so
+results (including overflow counts) are bit-identical.
+
 Every inner CSR lookup / dedup-compaction routes through the active
 :class:`~repro.core.engine.substrate.Substrate` (threaded as ``sub``), so
 kernel-backed substrates can replace the primitives without touching the
@@ -69,21 +81,104 @@ def match_table(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, sub=None):
     return jax.vmap(at_pos)(jnp.arange(L, dtype=jnp.int32))
 
 
+def encode_states(nodes: jax.Array, d, E: int) -> jax.Array:
+    """Pack (node, edits-used d) into one frontier entry: node*(E+1)+d.
+    Identity at E=0, so exact-mode traces are untouched; -1 stays -1."""
+    if E == 0:
+        return nodes
+    return jnp.where(nodes < 0, NEG_ONE, nodes * (E + 1) + d)
+
+
+def decode_states(states: jax.Array, E: int):
+    """Inverse of :func:`encode_states`: (nodes, d); -1 -> (-1, 0)."""
+    if E == 0:
+        return states, jnp.zeros_like(states)
+    nodes = jnp.where(states < 0, NEG_ONE, states // (E + 1))
+    d = jnp.where(states < 0, 0, states % (E + 1))
+    return nodes, d
+
+
+def dict_child_window(t: DeviceTrie, cfg: EngineConfig, nodes: jax.Array):
+    """All dict children of each node: (chars, children) [..., BW] with
+    BW = cfg.branch_width (static max dict fanout), -1 padded.  Feeds the
+    substitute/delete edit transitions, which need *every* child rather
+    than the one matching a char."""
+    if pk.is_packed(t):
+        return pk.dict_child_window(t, nodes, cfg.branch_width)
+    BW = cfg.branch_width
+    shape = tuple(nodes.shape) + (BW,)
+    if int(t.edge_char.shape[0]) == 0:
+        z = jnp.full(shape, NEG_ONE, jnp.int32)
+        return z, z
+    valid = nodes >= 0
+    n = jnp.where(valid, nodes, 0)
+    lo = t.first_child[n]
+    cnt = jnp.where(valid, t.first_child[n + 1] - lo, 0)
+    js = jnp.arange(BW, dtype=jnp.int32)
+    idx = jnp.clip(lo[..., None] + js, 0, int(t.edge_char.shape[0]) - 1)
+    m = js < cnt[..., None]
+    chars = jnp.where(m, t.edge_char[idx], NEG_ONE)
+    children = jnp.where(m, t.edge_child[idx], NEG_ONE)
+    return chars, children
+
+
 def teleport_expand(t: DeviceTrie, cfg: EngineConfig, row: jax.Array,
                     sub=None):
-    """row [F] -> row plus teleport targets, dedup'd back to [F]."""
+    """row [F] -> row plus teleport targets, dedup'd back to [F].  In
+    bounded-edit mode the row carries packed states: targets inherit the
+    source state's edit count."""
     if cfg.teleports == 0:
         return row, jnp.int32(0)
     sub = resolve_sub(cfg, sub)
     F = row.shape[0]
+    E = cfg.edit_budget
+    nodes, d = decode_states(row, E)
     if pk.is_packed(t):
-        tgt = pk.tele_rows(t, row)
+        tgt = pk.tele_rows(t, nodes)
     else:
-        valid = row >= 0
-        n = jnp.where(valid, row, 0)
+        valid = nodes >= 0
+        n = jnp.where(valid, nodes, 0)
         tgt = jnp.where(valid[:, None], t.tele_plane[n], NEG_ONE)
+    tgt = encode_states(tgt, d[:, None], E)
     merged = jnp.concatenate([row, tgt.reshape(-1)])
     return sub.dedup_compact(merged, F)
+
+
+def delete_close(t: DeviceTrie, cfg: EngineConfig, row: jax.Array,
+                 sub=None):
+    """Bounded-edit delete closure: E rounds of "take any dict child at
+    d+1 without consuming a query char" over a frontier row.  E static
+    rounds reach the fixpoint because each round raises d and d < E gates
+    the step.  No-op (0 drops) at E=0."""
+    E = cfg.edit_budget
+    if E == 0:
+        return row, jnp.int32(0)
+    sub = resolve_sub(cfg, sub)
+    F = row.shape[0]
+    drop_total = jnp.int32(0)
+    for _ in range(E):
+        nodes, d = decode_states(row, E)
+        _, children = dict_child_window(t, cfg, nodes)
+        ok = (children >= 0) & (d < E)[:, None]
+        tgt = encode_states(jnp.where(ok, children, NEG_ONE),
+                            (d + 1)[:, None], E)
+        row, drop = sub.dedup_compact(
+            jnp.concatenate([row, tgt.reshape(-1)]), F)
+        drop_total += drop
+    return row, drop_total
+
+
+def expand_frontier(t: DeviceTrie, cfg: EngineConfig, row: jax.Array,
+                    sub=None):
+    """Teleport expansion then delete closure — the combined fixpoint a
+    row needs once all its position's contributions have landed.
+    Teleports attach only to synonym nodes and delete steps only descend
+    dict children (which never carry teleports), so one expansion
+    followed by E delete rounds reaches the joint fixpoint."""
+    sub = resolve_sub(cfg, sub)
+    row, drop = teleport_expand(t, cfg, row, sub)
+    row, drop2 = delete_close(t, cfg, row, sub)
+    return row, drop + drop2
 
 
 def link_lookup(t: DeviceTrie, anchors: jax.Array, rid: jax.Array):
@@ -140,6 +235,7 @@ def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array,
     sub = resolve_sub(cfg, sub)
     L = int(q.shape[0])
     F = cfg.frontier
+    E = cfg.edit_budget
     packed = pk.is_packed(t)
     if packed:
         has_syn_edges = pk.has_syn_edges(t)
@@ -152,47 +248,74 @@ def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array,
 
     mrule, mend = match_table(t, cfg, q, sub)
 
+    # write-back sweep: each completed row is expanded (teleports + delete
+    # closure) exactly once, as the last write of the step that completes
+    # it, so step i reads buf[i] ready-made.  Equivalent (content and
+    # overflow) to expanding at read time: every write into row i+1 —
+    # char/edit parts of step i, rule steps from positions <= i — has
+    # landed by the end of step i, and re-expanding an expanded row
+    # changes nothing and drops nothing.
     buf = jnp.full((L + 1, F), NEG_ONE, jnp.int32)
-    buf = buf.at[0, 0].set(0)
-    overflow = jnp.int32(0)
+    buf = buf.at[0, 0].set(0)   # root at d=0 encodes to 0 for any E
+    row0, drop0 = expand_frontier(t, cfg, buf[0], sub)
+    buf = buf.at[0].set(row0)
+    overflow = drop0
 
     def step(i, carry):
         buf, overflow = carry
         row = jax.lax.dynamic_slice(buf, (i, 0), (1, F))[0]
-        row, drop = teleport_expand(t, cfg, row, sub)
-        overflow += drop
         c = jax.lax.dynamic_index_in_dim(q, i, keepdims=False)
+        nodes, d = decode_states(row, E)
 
         # literal char step: dict children + synonym-branch children
         if packed:
-            nd = pk.dict_children(t, row, c)
+            nd = pk.dict_children(t, nodes, c)
         else:
             nd = sub.csr_child_lookup(t.first_child, t.edge_char,
-                                      t.edge_child, row, c, d_iters)
-        parts = [nd]
+                                      t.edge_child, nodes, c, d_iters)
+        parts = [encode_states(nd, d, E)]
         if has_syn_edges:
             if packed:
-                ns = pk.syn_children(t, row, c)
+                ns = pk.syn_children(t, nodes, c)
             else:
                 ns = sub.csr_child_lookup(t.s_first_child, t.s_edge_char,
-                                          t.s_edge_child, row, c, s_iters)
-            parts.append(ns)
+                                          t.s_edge_child, nodes, c, s_iters)
+            parts.append(encode_states(ns, d, E))
+        if E > 0:
+            # substitute: any dict child whose edge char differs from c,
+            # at d+1 (matching children already ride the literal part)
+            wchars, wchildren = dict_child_window(t, cfg, nodes)
+            can = (c >= 0) & (d < E)
+            s_ok = can[:, None] & (wchildren >= 0) & (wchars != c)
+            parts.append(encode_states(
+                jnp.where(s_ok, wchildren, NEG_ONE),
+                (d + 1)[:, None], E).reshape(-1))
+            # insert: the query has an extra char; stay put at d+1.
+            # Synonym-branch chars must be typed exactly, so mid-variant
+            # nodes don't absorb inserted chars
+            n0 = jnp.where(nodes >= 0, nodes, 0)
+            is_syn = pk.syn_mask_of(t, n0) if packed else t.syn_mask[n0]
+            i_ok = can & (nodes >= 0) & ~is_syn
+            parts.append(encode_states(
+                jnp.where(i_ok, nodes, NEG_ONE), d + 1, E))
         nxt_row = jax.lax.dynamic_slice(buf, (i + 1, 0), (1, F))[0]
         merged, drop = sub.dedup_compact(jnp.concatenate([nxt_row] + parts), F)
         overflow += drop
         buf = jax.lax.dynamic_update_slice(buf, merged[None], (i + 1, 0))
 
-        # rule steps through the link store (anchors must be dict nodes)
+        # rule steps through the link store (anchors must be dict nodes;
+        # the lhs is typed exactly and the edit count carries through)
         if M > 0:
-            anchor_ok = row >= 0
-            ar = jnp.where(row >= 0, row, 0)
+            anchor_ok = nodes >= 0
+            ar = jnp.where(anchor_ok, nodes, 0)
             anchor_ok &= ~(pk.syn_mask_of(t, ar) if packed else t.syn_mask[ar])
-            anchors = jnp.where(anchor_ok, row, NEG_ONE)
+            anchors = jnp.where(anchor_ok, nodes, NEG_ONE)
             for m in range(M):
                 rid = mrule[i, m]
                 end = mend[i, m]
                 tgt = link_lookup(t, anchors, rid)
                 tgt = jnp.where((rid >= 0), tgt, NEG_ONE)
+                tgt = encode_states(tgt, d, E)
                 j = jnp.clip(jnp.where(end >= 0, end, 0), 0, L)
                 dst = jax.lax.dynamic_slice(buf, (j, 0), (1, F))[0]
                 merged, drop = sub.dedup_compact(jnp.concatenate([dst, tgt]), F)
@@ -200,11 +323,15 @@ def locus_dp(t: DeviceTrie, cfg: EngineConfig, q: jax.Array, qlen: jax.Array,
                 merged = jnp.where(any_tgt, merged, dst)
                 overflow += jnp.where(any_tgt, drop, 0)
                 buf = jax.lax.dynamic_update_slice(buf, merged[None], (j, 0))
+
+        # write-back: row i+1 is complete (rule ends are > i), expand it
+        nxt = jax.lax.dynamic_slice(buf, (i + 1, 0), (1, F))[0]
+        nxt, drop = expand_frontier(t, cfg, nxt, sub)
+        overflow += drop
+        buf = jax.lax.dynamic_update_slice(buf, nxt[None], (i + 1, 0))
         return buf, overflow
 
     buf, overflow = jax.lax.fori_loop(0, L, step, (buf, overflow))
 
     row = jax.lax.dynamic_slice(buf, (jnp.clip(qlen, 0, L), 0), (1, F))[0]
-    row, drop = teleport_expand(t, cfg, row, sub)
-    overflow += drop
-    return finalize_loci(t, row), overflow
+    return finalize_loci(t, decode_states(row, E)[0]), overflow

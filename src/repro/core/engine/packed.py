@@ -95,6 +95,34 @@ def syn_children(t, nodes, ch):
                      SYN_UNARY, nodes, ch)
 
 
+def dict_child_window(t, nodes, width: int):
+    """All dict children of each node: (chars, children) [..., width],
+    -1 padded — the packed mirror of the dense ``first_child`` row window
+    feeding the bounded-edit substitute/delete transitions.  A unary
+    node's window is its single (label, v+1) pair in column 0; branching
+    nodes read their sparse ``b_*`` row."""
+    n_nodes = int(t.p_labels.shape[0])
+    valid = nodes >= 0
+    n = jnp.where(valid, nodes, 0)
+    fl = t.p_flags[n].astype(jnp.int32)
+    lbl = t.p_labels[jnp.clip(n + 1, 0, n_nodes - 1)].astype(jnp.int32)
+    js = jnp.arange(width, dtype=jnp.int32)
+    u_ok = (((fl & DICT_UNARY) != 0) & valid)[..., None] & (js == 0)
+    chars = jnp.where(u_ok, lbl[..., None], NEG_ONE)
+    children = jnp.where(u_ok, (n + 1)[..., None], NEG_ONE)
+    if int(t.b_ids.shape[0]) == 0:
+        return chars, children
+    rc, isrow = _rank(t.b_ids, n)
+    lo = t.b_ptr[rc].astype(jnp.int32)
+    cnt = jnp.where(isrow & valid,
+                    t.b_ptr[rc + 1].astype(jnp.int32) - lo, 0)
+    idx = jnp.clip(lo[..., None] + js, 0, int(t.b_char.shape[0]) - 1)
+    m = js < cnt[..., None]
+    chars = jnp.where(m, t.b_char[idx].astype(jnp.int32), chars)
+    children = jnp.where(m, t.b_child[idx].astype(jnp.int32), children)
+    return chars, children
+
+
 def tele_rows(t, nodes):
     """Teleport-target rows [..., tele_width]; all -1 for nodes without
     teleports (== the dense ``tele_plane`` gather, rows masked by the

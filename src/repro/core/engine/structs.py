@@ -100,6 +100,17 @@ class EngineConfig:
     max_steps: int = 256        # beam step cap
     rule_matches: int = 0       # M: max lhs matches per query position
     max_lhs_len: int = 0        # rule-trie walk depth
+    # bounded-edit mode: a frontier entry is a packed state
+    # ``node * (edit_budget + 1) + edits_used`` and the sweep gains
+    # substitute / insert / delete transitions on the dictionary side.
+    # 0 = exact matching (the packing degenerates to plain node ids and
+    # the edit transitions trace away, so results are bit-identical to
+    # the pre-edit engine).  Static: part of every compile-cache key.
+    edit_budget: int = 0        # E: max edits spent rewriting the query
+    # static upper bound on a dict-CSR row length (max node fanout),
+    # recorded at build/load time; sizes the substitute/delete child
+    # windows of the bounded-edit sweep.  <= walk_tile by construction.
+    branch_width: int = 1
     max_terms_per_node: int = 1
     teleports: int = 0          # Ts: max teleport targets per node
     # static widths of the packed rule plane (tele_plane / r_term_plane

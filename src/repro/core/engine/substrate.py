@@ -171,6 +171,11 @@ class PallasSubstrate(Substrate):
     _FUSE_MAX_LHS = 24
     _FUSE_MAX_TERMS = 4
     _FUSE_MAX_TELEPORTS = 16
+    # bounded-edit additions: the edit budget multiplies the delete-closure
+    # rounds per step, and the substitute/delete transitions stage
+    # [lanes, branch_width] child windows in scratch, so both are bounded
+    _FUSE_MAX_EDITS = 2
+    _FUSE_MAX_BRANCH = 64
 
     # fused beam static-shape envelope: the selection network unrolls
     # W + P + k (argmax, mask) rounds per fixed-trip step, so the pool
@@ -245,9 +250,12 @@ class PallasSubstrate(Substrate):
     def _rule_free(t: DeviceTrie, cfg: EngineConfig) -> bool:
         """True when the walk is a pure prefix descent (plain kind, or a
         rule-free build): no link store, no teleports, no synonym edges —
-        the frontier then never holds more than one node."""
+        the frontier then never holds more than one node.  A nonzero edit
+        budget breaks the single-node invariant, so edit-mode walks always
+        take the full DP (fused sweep or jnp reference)."""
         return (cfg.rule_matches == 0 and cfg.teleports == 0
-                and int(t.s_edge_child.shape[0]) == 0)
+                and int(t.s_edge_child.shape[0]) == 0
+                and cfg.edit_budget == 0)
 
     def _fuse_shapes_ok(self, cfg: EngineConfig, seq_len: int) -> bool:
         """The fused locus-DP kernel's static shape envelope (both tiers)."""
@@ -258,7 +266,9 @@ class PallasSubstrate(Substrate):
                     or cfg.max_terms_per_node > self._FUSE_MAX_TERMS
                     or cfg.teleports > self._FUSE_MAX_TELEPORTS
                     or cfg.tele_width > self._FUSE_MAX_TELEPORTS
-                    or cfg.term_width > self._FUSE_MAX_TERMS)
+                    or cfg.term_width > self._FUSE_MAX_TERMS
+                    or cfg.edit_budget > self._FUSE_MAX_EDITS
+                    or cfg.branch_width > self._FUSE_MAX_BRANCH)
 
     def walk_variant(self, t: DeviceTrie, cfg: EngineConfig,
                      seq_len: int) -> str | None:

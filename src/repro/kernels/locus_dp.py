@@ -101,6 +101,24 @@ def _csr_children(ptr, chars, children, nodes, ch):
     return jnp.where(found, jnp.take(children, posc), _NEG_ONE)
 
 
+def _enc(nodes, d, E: int):
+    """Pack (node, edits-used d) into one frontier state: node*(E+1)+d.
+    Identity at E=0 (exact-mode traces untouched); -1 stays -1.  Mirrors
+    ``engine.locus.encode_states``."""
+    if E == 0:
+        return nodes
+    return jnp.where(nodes < 0, _NEG_ONE, nodes * (E + 1) + d)
+
+
+def _dec(states, E: int):
+    """Inverse of :func:`_enc`: (nodes, d); -1 -> (-1, 0)."""
+    if E == 0:
+        return states, jnp.zeros_like(states)
+    nodes = jnp.where(states < 0, _NEG_ONE, states // (E + 1))
+    d = jnp.where(states < 0, 0, states % (E + 1))
+    return nodes, d
+
+
 def _dedup(cand, width: int):
     """Row-wise unique-compact of cand [BQ, V] to [BQ, width] ascending,
     -1 padded; returns (out, n_dropped[BQ]).  Bit-identical to
@@ -166,6 +184,25 @@ class _ResidentTables:
     def syn_children(self, nodes, ch):
         return _csr_children(self.sfc, self.sec, self.sechild, nodes, ch)
 
+    def dict_child_window(self, nodes, width: int):
+        """All dict children of each node: (chars, children) [..., width],
+        -1 padded — the bounded-edit substitute/delete source.  The
+        tile-aligned edge arrays are padded a whole tile past their real
+        length and width <= walk_tile, so the window loads stay in
+        bounds."""
+        valid = nodes >= 0
+        nn = jnp.where(valid, nodes, 0)
+        lo = jnp.take(self.fc, nn)
+        cnt = jnp.where(valid, jnp.take(self.fc, nn + 1) - lo, 0)
+        js = jax.lax.broadcasted_iota(
+            jnp.int32, tuple(nodes.shape) + (width,), nodes.ndim)
+        size = max(int(self.ec.shape[0]), 1)
+        idx = jnp.clip(lo[..., None] + js, 0, size - 1)
+        m = js < cnt[..., None]
+        chars = jnp.where(m, jnp.take(self.ec, idx), _NEG_ONE)
+        children = jnp.where(m, jnp.take(self.echild, idx), _NEG_ONE)
+        return chars, children
+
     def tele_rows(self, nodes):
         return _plane_rows(self.tele_plane, nodes)
 
@@ -204,6 +241,24 @@ class _StreamedTables:
     def syn_children(self, nodes, ch):
         return stream_csr_children(self.sfc_t, self.sec_t, self.sek_t,
                                    nodes, ch, self.walk_iters)
+
+    def dict_child_window(self, nodes, width: int):
+        """Streamed form of the resident window: the (lo, hi) pointer
+        pairs and the ``[lo, lo + walk_tile)`` row windows ride the same
+        staging buffers as the CSR child lookups; walk_tile >= the real
+        fanout, so the returned (wider) window carries the same children,
+        -1 beyond each row's count — content-identical to the resident
+        window for every downstream merge."""
+        del width   # the staged window is walk_tile wide; extras mask off
+        valid = nodes >= 0
+        nn = jnp.where(valid, nodes, 0)
+        lo, hi = self.fc_t.pairs(nn)
+        cnt = jnp.where(valid, hi - lo, 0)
+        wc = self.ec_t.windows(lo)
+        wk = self.ek_t.windows(lo)
+        js = jax.lax.broadcasted_iota(jnp.int32, wc.shape, wc.ndim - 1)
+        m = js < cnt[..., None]
+        return jnp.where(m, wc, _NEG_ONE), jnp.where(m, wk, _NEG_ONE)
 
     def tele_rows(self, nodes):
         return self.tele_t.windows(nodes)
@@ -303,6 +358,34 @@ class _PackedResidentTables:
         return self._children(self.sb_ids, self.sb_ptr, self.sb_char,
                               self.sb_child, _PK_SYN_UNARY, nodes, ch)
 
+    def dict_child_window(self, nodes, width: int):
+        """Packed form of the dict-child window (mirrors
+        ``engine.packed.dict_child_window``): a unary node's window is its
+        single (label, v+1) pair in column 0; branching nodes read their
+        sparse ``b_*`` row.  Inherited by the streamed packed tier — only
+        the flag/label plane reads differ there."""
+        valid = nodes >= 0
+        n = jnp.where(valid, nodes, 0)
+        js = jax.lax.broadcasted_iota(
+            jnp.int32, tuple(nodes.shape) + (width,), nodes.ndim)
+        u_ok = (((self._flags(n) & _PK_DICT_UNARY) != 0) & valid)[..., None] \
+            & (js == 0)
+        chars = jnp.where(u_ok, self._label_next(n)[..., None], _NEG_ONE)
+        children = jnp.where(u_ok, (n + 1)[..., None], _NEG_ONE)
+        rc, isrow = _packed_rank(self.b_ids, n)
+        lo = jnp.take(self.b_ptr, rc).astype(jnp.int32)
+        cnt = jnp.where(isrow & valid,
+                        jnp.take(self.b_ptr, rc + 1).astype(jnp.int32) - lo,
+                        0)
+        size = max(int(self.b_char.shape[0]), 1)
+        idx = jnp.clip(lo[..., None] + js, 0, size - 1)
+        m = js < cnt[..., None]
+        chars = jnp.where(
+            m, jnp.take(self.b_char, idx).astype(jnp.int32), chars)
+        children = jnp.where(
+            m, jnp.take(self.b_child, idx).astype(jnp.int32), children)
+        return chars, children
+
     def tele_rows(self, nodes):
         rc, exact = _packed_rank(self.t_ids, nodes)
         rows = _plane_rows(self.tele_plane, rc)
@@ -354,20 +437,45 @@ class _PackedStreamedTables(_PackedResidentTables):
             jnp.clip(nodes + 1, 0, self.n_nodes - 1))
 
 
-def _tele_expand(tabs, row, width: int):
-    """Frontier row [BQ, F] -> row plus teleport targets, dedup'd back."""
+def _tele_expand(tabs, row, width: int, E: int):
+    """Frontier row [BQ, F] -> row plus teleport targets, dedup'd back.
+    In bounded-edit mode targets inherit the source state's edit count."""
     bq, f = row.shape
-    valid = row >= 0
-    nn = jnp.where(valid, row, 0)
+    nodes, d = _dec(row, E)
+    valid = nodes >= 0
+    nn = jnp.where(valid, nodes, 0)
     tgt = jnp.where(valid[:, :, None], tabs.tele_rows(nn), _NEG_ONE)
+    tgt = _enc(tgt, d[:, :, None], E)
     return _dedup(jnp.concatenate([row, tgt.reshape(bq, -1)], axis=1), width)
+
+
+def _expand_frontier(tabs, row, width: int, E: int, BW: int,
+                     has_tele: bool):
+    """Teleport expansion + E-round delete closure — mirrors
+    ``engine.locus.expand_frontier`` (teleports attach only to synonym
+    nodes, deletes only descend dict children, so this order reaches the
+    joint fixpoint)."""
+    bq = row.shape[0]
+    drop_total = jnp.zeros((bq,), jnp.int32)
+    if has_tele:
+        row, drop = _tele_expand(tabs, row, width, E)
+        drop_total += drop
+    for _ in range(E):
+        nodes, d = _dec(row, E)
+        _, children = tabs.dict_child_window(nodes, BW)
+        ok = (children >= 0) & (d < E)[..., None]
+        tgt = _enc(jnp.where(ok, children, _NEG_ONE), (d + 1)[..., None], E)
+        row, drop = _dedup(
+            jnp.concatenate([row, tgt.reshape(bq, -1)], axis=1), width)
+        drop_total += drop
+    return row, drop_total
 
 
 def _sweep(tabs, rfc, rec, rechild, rterm, q, qlen,
            loci_ref, ov_ref, *,
            frontier: int, rule_matches: int, max_lhs_len: int,
            max_terms: int, has_syn: bool, has_tele: bool, has_links: bool,
-           seq_len: int):
+           seq_len: int, edit_budget: int = 0, branch_width: int = 1):
     """The fused frontier sweep, written once against the accessor seam;
     ``tabs`` is resident or streamed, the rule trie (rfc/rec/rechild/
     rterm) is always VMEM-resident.
@@ -380,9 +488,22 @@ def _sweep(tabs, rfc, rec, rechild, rterm, q, qlen,
     out-of-range lanes, exactly the reference DP's shape.
     """
     bq = q.shape[0]
-    F, L, M = frontier, seq_len, rule_matches
+    F, L, M, E = frontier, seq_len, rule_matches, edit_budget
+    BW = branch_width
 
+    # write-back discipline (mirrors the jnp reference): each completed
+    # row is expanded — teleports + delete closure — exactly once, as the
+    # last write of the step that completes it, so step i reads buf[:, i]
+    # ready-made.  Equivalent to the old expand-at-read style: every
+    # write into row i+1 has landed by the end of step i, and
+    # re-expanding an expanded row changes nothing and drops nothing.
     buf0 = jnp.full((bq, L + 1, F), _NEG_ONE, jnp.int32).at[:, 0, 0].set(0)
+    ov0 = jnp.zeros((bq,), jnp.int32)
+    if has_tele or E > 0:
+        row0, drop0 = _expand_frontier(tabs, buf0[:, 0, :], F, E, BW,
+                                       has_tele)
+        buf0 = buf0.at[:, 0, :].set(row0)
+        ov0 += drop0
     # query extended with -1s so the rule descent can probe past the end
     # of short suffixes (a -1 char kills the walk, like the reference's)
     qx = jnp.concatenate(
@@ -401,15 +522,27 @@ def _sweep(tabs, rfc, rec, rechild, rterm, q, qlen,
     def step(i, carry):
         buf, overflow = carry
         row = buf_row(buf, i)
-        if has_tele:
-            row, drop = _tele_expand(tabs, row, F)
-            overflow += drop
         c = at_col(q, i)
+        nodes, d = _dec(row, E)
 
         # literal char step: dict children + synonym-branch children
-        parts = [tabs.dict_children(row, c[:, None])]
+        parts = [_enc(tabs.dict_children(nodes, c[:, None]), d, E)]
         if has_syn:
-            parts.append(tabs.syn_children(row, c[:, None]))
+            parts.append(_enc(tabs.syn_children(nodes, c[:, None]), d, E))
+        if E > 0:
+            # substitute: any dict child whose edge char differs from c,
+            # at d+1 (matching children already ride the literal part)
+            wchars, wchildren = tabs.dict_child_window(nodes, BW)
+            can = (c[:, None] >= 0) & (d < E)
+            s_ok = can[..., None] & (wchildren >= 0) \
+                & (wchars != c[:, None, None])
+            parts.append(_enc(jnp.where(s_ok, wchildren, _NEG_ONE),
+                              (d + 1)[..., None], E).reshape(bq, -1))
+            # insert: stay put at d+1; synonym-branch chars must be typed
+            # exactly, so mid-variant nodes don't absorb inserted chars
+            n0 = jnp.where(nodes >= 0, nodes, 0)
+            i_ok = can & (nodes >= 0) & (tabs.syn_mask_of(n0) == 0)
+            parts.append(_enc(jnp.where(i_ok, nodes, _NEG_ONE), d + 1, E))
         merged, drop = _dedup(
             jnp.concatenate([buf_row(buf, i + 1)] + parts, axis=1), F)
         overflow += drop
@@ -417,11 +550,12 @@ def _sweep(tabs, rfc, rec, rechild, rterm, q, qlen,
 
         # rule steps: inline rule-trie descent from position i; a full-lhs
         # match at depth j lands at the frontier row i + j + 1 (descents
-        # running past the query end read the -1 extension and die)
+        # running past the query end read the -1 extension and die).
+        # Anchors must be dict nodes; the edit count carries through
         if M > 0:
-            amask = (row >= 0) & \
-                (tabs.syn_mask_of(jnp.where(row >= 0, row, 0)) == 0)
-            anchors = jnp.where(amask, row, _NEG_ONE)
+            amask = (nodes >= 0) & \
+                (tabs.syn_mask_of(jnp.where(nodes >= 0, nodes, 0)) == 0)
+            anchors = jnp.where(amask, nodes, _NEG_ONE)
             node = jnp.zeros((bq,), jnp.int32)       # rule-trie root
             cnt = jnp.zeros((bq,), jnp.int32)
             for j in range(max_lhs_len):
@@ -438,6 +572,7 @@ def _sweep(tabs, rfc, rec, rechild, rterm, q, qlen,
                     if has_links:
                         tgt = tabs.link_lookup(anchors, rid)
                         tgt = jnp.where(has[:, None], tgt, _NEG_ONE)
+                        tgt = _enc(tgt, d, E)
                     else:
                         tgt = jnp.full((bq, F), _NEG_ONE, jnp.int32)
                     dst = buf_row(buf, end)
@@ -447,17 +582,22 @@ def _sweep(tabs, rfc, rec, rechild, rterm, q, qlen,
                     merged = jnp.where(any_tgt[:, None], merged, dst)
                     overflow += jnp.where(any_tgt, drop, 0)
                     buf = buf_put(buf, end, merged)
+
+        # write-back: row i+1 is complete (rule ends are > i), expand it
+        if has_tele or E > 0:
+            nxt = buf_row(buf, i + 1)
+            nxt, drop = _expand_frontier(tabs, nxt, F, E, BW, has_tele)
+            overflow += drop
+            buf = buf_put(buf, i + 1, nxt)
         return buf, overflow
 
-    buf, overflow = jax.lax.fori_loop(
-        0, L, step, (buf0, jnp.zeros((bq,), jnp.int32)))
+    buf, overflow = jax.lax.fori_loop(0, L, step, (buf0, ov0))
 
-    # final frontier: the row at each query's own length
+    # final frontier: the row at each query's own length (already
+    # expanded by the write-back discipline), decoded to plain node ids
     sel = jnp.broadcast_to(jnp.clip(qlen, 0, L)[:, None, None], (bq, 1, F))
     row = jnp.take_along_axis(buf, sel, axis=1)[:, 0, :]
-    if has_tele:
-        row, drop = _tele_expand(tabs, row, F)
-        overflow += drop
+    row = _dec(row, E)[0]
 
     # finalize: strict semantics drop mid-variant (synonym) loci, then
     # antichain reduction over preorder intervals [id, tout)
@@ -587,7 +727,8 @@ def _call(kernel, tables, table_specs, queries, qlens, scratch, *,
 
 @functools.partial(jax.jit, static_argnames=(
     "frontier", "rule_matches", "max_lhs_len", "max_terms", "has_syn",
-    "has_tele", "has_links", "block_q", "interpret"))
+    "has_tele", "has_links", "edit_budget", "branch_width", "block_q",
+    "interpret"))
 def locus_dp_walk(first_child, edge_char, edge_child,
                   s_first_child, s_edge_char, s_edge_child,
                   syn_mask, tout, tele_plane,
@@ -596,7 +737,9 @@ def locus_dp_walk(first_child, edge_char, edge_child,
                   queries, qlens, *,
                   frontier: int, rule_matches: int, max_lhs_len: int,
                   max_terms: int, has_syn: bool, has_tele: bool,
-                  has_links: bool, block_q: int = 8, interpret: bool = True):
+                  has_links: bool, edit_budget: int = 0,
+                  branch_width: int = 1, block_q: int = 8,
+                  interpret: bool = True):
     """Fused locus DP over a query batch (VMEM-resident tables).
 
     queries int32[B, L] (-1 padded, B divisible by block_q; the wrapper in
@@ -612,8 +755,8 @@ def locus_dp_walk(first_child, edge_char, edge_child,
     kernel = functools.partial(
         _kernel, frontier=frontier, rule_matches=rule_matches,
         max_lhs_len=max_lhs_len, max_terms=max_terms, has_syn=has_syn,
-        has_tele=has_tele, has_links=has_links,
-        seq_len=int(queries.shape[1]))
+        has_tele=has_tele, has_links=has_links, edit_budget=edit_budget,
+        branch_width=branch_width, seq_len=int(queries.shape[1]))
     tables = [first_child, edge_char, edge_child,
               s_first_child, s_edge_char, s_edge_child,
               syn_mask, tout, tele_plane,
@@ -625,8 +768,8 @@ def locus_dp_walk(first_child, edge_char, edge_child,
 
 @functools.partial(jax.jit, static_argnames=(
     "frontier", "rule_matches", "max_lhs_len", "max_terms", "has_syn",
-    "has_tele", "has_links", "walk_tile", "link_tile", "block_q",
-    "interpret"))
+    "has_tele", "has_links", "edit_budget", "branch_width", "walk_tile",
+    "link_tile", "block_q", "interpret"))
 def locus_dp_walk_streamed(first_child, edge_char, edge_child,
                            s_first_child, s_edge_char, s_edge_child,
                            syn_mask, tout, tele_plane,
@@ -636,8 +779,10 @@ def locus_dp_walk_streamed(first_child, edge_char, edge_child,
                            queries, qlens, *,
                            frontier: int, rule_matches: int,
                            max_lhs_len: int, max_terms: int, has_syn: bool,
-                           has_tele: bool, has_links: bool, walk_tile: int,
-                           link_tile: int, block_q: int = 4,
+                           has_tele: bool, has_links: bool,
+                           edit_budget: int = 0, branch_width: int = 1,
+                           walk_tile: int = 8,
+                           link_tile: int = 8, block_q: int = 4,
                            interpret: bool = True):
     """HBM-resident variant of :func:`locus_dp_walk`: same contract, same
     results, but the dictionary-sized tables stay in HBM and every access
@@ -653,7 +798,8 @@ def locus_dp_walk_streamed(first_child, edge_char, edge_child,
     kernel = functools.partial(
         _kernel_streamed, frontier=frontier, rule_matches=rule_matches,
         max_lhs_len=max_lhs_len, max_terms=max_terms, has_syn=has_syn,
-        has_tele=has_tele, has_links=has_links, walk_tile=walk_tile,
+        has_tele=has_tele, has_links=has_links, edit_budget=edit_budget,
+        branch_width=branch_width, walk_tile=walk_tile,
         link_tile=link_tile, seq_len=int(queries.shape[1]))
     tables = [first_child, edge_char, edge_child,
               s_first_child, s_edge_char, s_edge_child,
@@ -681,7 +827,8 @@ def locus_dp_walk_streamed(first_child, edge_char, edge_child,
 
 @functools.partial(jax.jit, static_argnames=(
     "frontier", "rule_matches", "max_lhs_len", "max_terms", "has_syn",
-    "has_tele", "has_links", "block_q", "interpret"))
+    "has_tele", "has_links", "edit_budget", "branch_width", "block_q",
+    "interpret"))
 def locus_dp_walk_packed(p_labels, p_flags, c_ids, c_tout,
                          b_ids, b_ptr, b_char, b_child,
                          sb_ids, sb_ptr, sb_char, sb_child,
@@ -691,7 +838,8 @@ def locus_dp_walk_packed(p_labels, p_flags, c_ids, c_tout,
                          r_term_plane, queries, qlens, *,
                          frontier: int, rule_matches: int, max_lhs_len: int,
                          max_terms: int, has_syn: bool, has_tele: bool,
-                         has_links: bool, block_q: int = 8,
+                         has_links: bool, edit_budget: int = 0,
+                         branch_width: int = 1, block_q: int = 8,
                          interpret: bool = True):
     """Fused locus DP over the compressed (packed) layout, every table
     VMEM-resident.  Same contract and bit-identical results as
@@ -705,8 +853,8 @@ def locus_dp_walk_packed(p_labels, p_flags, c_ids, c_tout,
     kernel = functools.partial(
         _kernel_packed, frontier=frontier, rule_matches=rule_matches,
         max_lhs_len=max_lhs_len, max_terms=max_terms, has_syn=has_syn,
-        has_tele=has_tele, has_links=has_links,
-        seq_len=int(queries.shape[1]))
+        has_tele=has_tele, has_links=has_links, edit_budget=edit_budget,
+        branch_width=branch_width, seq_len=int(queries.shape[1]))
     tables = [p_labels, p_flags, c_ids, c_tout,
               b_ids, b_ptr, b_char, b_child,
               sb_ids, sb_ptr, sb_char, sb_child,
@@ -718,7 +866,8 @@ def locus_dp_walk_packed(p_labels, p_flags, c_ids, c_tout,
 
 @functools.partial(jax.jit, static_argnames=(
     "frontier", "rule_matches", "max_lhs_len", "max_terms", "has_syn",
-    "has_tele", "has_links", "block_q", "interpret"))
+    "has_tele", "has_links", "edit_budget", "branch_width", "block_q",
+    "interpret"))
 def locus_dp_walk_packed_streamed(p_labels, p_flags, c_ids, c_tout,
                                   b_ids, b_ptr, b_char, b_child,
                                   sb_ids, sb_ptr, sb_char, sb_child,
@@ -729,7 +878,8 @@ def locus_dp_walk_packed_streamed(p_labels, p_flags, c_ids, c_tout,
                                   frontier: int, rule_matches: int,
                                   max_lhs_len: int, max_terms: int,
                                   has_syn: bool, has_tele: bool,
-                                  has_links: bool, block_q: int = 4,
+                                  has_links: bool, edit_budget: int = 0,
+                                  branch_width: int = 1, block_q: int = 4,
                                   interpret: bool = True):
     """HBM-resident variant of :func:`locus_dp_walk_packed`: only the two
     N-sized u8 planes (labels/flags) stay in HBM and stream per access as
@@ -746,7 +896,8 @@ def locus_dp_walk_packed_streamed(p_labels, p_flags, c_ids, c_tout,
         _kernel_packed_streamed, frontier=frontier,
         rule_matches=rule_matches, max_lhs_len=max_lhs_len,
         max_terms=max_terms, has_syn=has_syn, has_tele=has_tele,
-        has_links=has_links, seq_len=int(queries.shape[1]))
+        has_links=has_links, edit_budget=edit_budget,
+        branch_width=branch_width, seq_len=int(queries.shape[1]))
     tables = [p_labels, p_flags, c_ids, c_tout,
               b_ids, b_ptr, b_char, b_child,
               sb_ids, sb_ptr, sb_char, sb_child,

@@ -156,6 +156,7 @@ def locus_walk(t, cfg, queries, qlens, block_q: int = 8,
             or int(t.sb_child.shape[0]) > 0,
             has_tele=cfg.teleports > 0,
             has_links=int(t.link_rule.shape[0]) > 0,
+            edit_budget=cfg.edit_budget, branch_width=cfg.branch_width,
             block_q=block_q, interpret=_interpret())
         fn = _locus_dp_packed_streamed if streamed else _locus_dp_packed
         loci, overflow = fn(*tables, q, ql, **statics)
@@ -173,6 +174,7 @@ def locus_walk(t, cfg, queries, qlens, block_q: int = 8,
         has_syn=int(t.s_edge_char.shape[0]) > 0,
         has_tele=cfg.teleports > 0,
         has_links=int(t.link_rule.shape[0]) > 0,
+        edit_budget=cfg.edit_budget, branch_width=cfg.branch_width,
         block_q=block_q, interpret=_interpret())
     if streamed:
         loci, overflow = _locus_dp_streamed(

@@ -205,6 +205,13 @@ class CompletionService:
         their event loop); returns the number of flushes fired."""
         return self._scheduler().pump() if self.batching else 0
 
+    def poll(self) -> int:
+        """Like :meth:`pump` but also settles the scheduler's pipelined
+        result stash once the queue is empty, so the last flush's tickets
+        resolve even when no further keystrokes arrive.  Event-loop
+        drivers should prefer this over ``pump``."""
+        return self._scheduler().poll() if self.batching else 0
+
     def flush(self) -> None:
         """Force one partial-block flush (e.g. to make room after a
         SchedulerOverloaded rejection without collapsing the queue)."""

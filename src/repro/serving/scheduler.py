@@ -351,6 +351,20 @@ class KeystrokeScheduler:
             break
         return fired
 
+    def poll(self, now: float | None = None) -> int:
+        """Non-blocking driver tick: :meth:`pump`, plus idle settling.
+
+        ``pump`` alone starves the pipeline's tail — the last flush's
+        results stay stashed (computed on device, never demuxed) until
+        another flush or an explicit ``flush()``/``drain()``, so a driver
+        looping on ``pump()`` and checking ``ticket.done`` spins forever
+        once the queue empties.  ``poll`` settles the stash as soon as
+        nothing is queued, making it the one call an event loop needs."""
+        fired = self.pump(now)
+        if not self._pending:
+            self._settle()
+        return fired
+
     def flush(self) -> None:
         """Force one partial-block flush (drain/result paths); settles
         stashed results when nothing is queued."""

@@ -10,6 +10,15 @@ def walk_kernel(qs, cols, node, *, walk_tile=8, frontier=4):
     return qs, cols, node, scratch
 
 
+def edit_sweep_kernel(qs, *, edit_budget=2):
+    # nothing bounds the edit budget here: the (node, edits-used) state
+    # plane scales scratch by edit_budget + 1 past any probe-admitted
+    # budget
+    lanes = 8 * (edit_budget + 1)
+    buf = pltpu.VMEM((lanes, 8), jnp.int32)  # PLANT: ENV002
+    return qs, buf
+
+
 def packed_stage_kernel(labels):
     # narrow-dtype staging for the compressed layout: the u16 itemsize
     # must be what the scratch accounting multiplies by — 2 B/elem over

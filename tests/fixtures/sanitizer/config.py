@@ -15,3 +15,4 @@ class EngineConfig:  # PLANT: KEY002
     walk_tile: int = 8
     emit_tile: int = 8
     memory_budget: int = 0
+    edit_budget: int = 0

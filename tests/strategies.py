@@ -71,12 +71,20 @@ if HAVE_HYPOTHESIS:
 
     score_seeds = st.integers(0, 2**31 - 1)
 
+    #: query streams for the bounded-edit differential: longer and over
+    #: the widened alphabet, so draws land near-misses (one substitution
+    #: / insertion / deletion away from dictionary prefixes) as often as
+    #: exact hits and outright misses
+    edit_query_streams = st.lists(
+        st.text(alphabet="abcdxy", min_size=0, max_size=7),
+        min_size=1, max_size=4)
+
     settings.register_profile(
         "differential", derandomize=True, deadline=None,
         print_blob=True)
 else:
     words = dictionaries = rule_sets = query_streams = None
-    topk_values = score_seeds = None
+    topk_values = score_seeds = edit_query_streams = None
 
 
 def clean_rules(pairs):

@@ -166,6 +166,8 @@ def test_waiver_without_reason_is_itself_reported(tmp_path):
     ("link_tile", 16),
     ("compression", "packed"),
     ("table_widths", (("c_tout", "uint16"),)),
+    ("edit_budget", 1),
+    ("branch_width", 4),
 ])
 def test_config_field_changes_produce_distinct_cache_entries(field, value):
     cache = CompileCache(maxsize=8)
@@ -289,3 +291,13 @@ def test_fuse_envelope_bounds_rule_plane_widths():
         EngineConfig(tele_width=PallasSubstrate._FUSE_MAX_TELEPORTS + 1), 16)
     assert not sub._fuse_shapes_ok(
         EngineConfig(term_width=PallasSubstrate._FUSE_MAX_TERMS + 1), 16)
+    # bounded-edit mode: the budget and the dict-fanout window are config
+    # symbols that size kernel work; both must be envelope-gated
+    assert sub._fuse_shapes_ok(
+        EngineConfig(edit_budget=PallasSubstrate._FUSE_MAX_EDITS), 16)
+    assert not sub._fuse_shapes_ok(
+        EngineConfig(edit_budget=PallasSubstrate._FUSE_MAX_EDITS + 1), 16)
+    assert sub._fuse_shapes_ok(
+        EngineConfig(branch_width=PallasSubstrate._FUSE_MAX_BRANCH), 16)
+    assert not sub._fuse_shapes_ok(
+        EngineConfig(branch_width=PallasSubstrate._FUSE_MAX_BRANCH + 1), 16)

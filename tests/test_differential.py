@@ -114,6 +114,69 @@ if strat.HAVE_HYPOTHESIS:
             valid = oracle.matches(q)
             for _, s in row:
                 assert s.encode() in valid, (q, s, kind)
+    # bounded-edit mode: the frontier carries (node, edits-used) states,
+    # so it runs wider than the exact-match SPEC; gens >= frontier is a
+    # beam seeding requirement (loci fill the generator pool)
+    EDIT_SPEC = dict(frontier=16, gens=16, expand=2, max_steps=64)
+
+    def _edit_distance(a: bytes, b: bytes) -> int:
+        m, n = len(a), len(b)
+        d = list(range(n + 1))
+        for i in range(1, m + 1):
+            prev, d[0] = d[0], i
+            for j in range(1, n + 1):
+                prev, d[j] = d[j], min(d[j] + 1, d[j - 1] + 1,
+                                       prev + (a[i - 1] != b[j - 1]))
+        return d[n]
+
+    @pytest.mark.parametrize("compression", ["none", "packed"])
+    @pytest.mark.parametrize("e", [0, 1, 2])
+    @diff_settings
+    @given(strings=strat.dictionaries, scores_seed=strat.score_seeds,
+           rules=strat.rule_sets, queries=strat.edit_query_streams)
+    def test_differential_bounded_edit(e, compression, strings,
+                                       scores_seed, rules, queries):
+        """Bounded-edit walks agree bit-identically across jnp /
+        pallas-resident / pallas-streamed on both on-device layouts, and
+        end-to-end with the edit-aware oracle; on rule-free indexes the
+        oracle itself is cross-checked against brute-force
+        prefix-edit-distance."""
+        from dataclasses import replace
+
+        rules = make_rules(strat.clean_rules(rules))
+        rng = np.random.default_rng(scores_seed)
+        scores = rng.integers(1, 1000, len(strings)).tolist()
+        idx = build_index(strings, scores, rules,
+                          IndexSpec(kind="et", edit_budget=e,
+                                    compression=compression, **EDIT_SPEC))
+        qs, qlens = pad_queries(queries, SEQ_LEN)
+        qs, qlens = jnp.asarray(qs), jnp.asarray(qlens)
+
+        sub = eng.get_substrate("pallas")
+        cfg_res = idx.cfg
+        cfg_str = replace(idx.cfg, memory_budget=_force_streamed_budget(idx))
+        assert sub.walk_variant(idx.device, cfg_res, SEQ_LEN) == "resident"
+        assert sub.walk_variant(idx.device, cfg_str, SEQ_LEN) == "streamed"
+
+        ref = _run(idx, cfg_res, "jnp", qs, qlens)
+        for label, cfg in (("resident", cfg_res), ("streamed", cfg_str)):
+            got = _run(idx, cfg, "pallas", qs, qlens)
+            for a, b, nm in zip(got, ref, ("scores", "sids", "exact")):
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"e={e}/{compression}/{label}/{nm}")
+
+        oracle = OracleIndex(strings, scores, rules, edit_budget=e)
+        for q, row in zip(queries, idx.complete(queries, k=K)):
+            assert [s for s, _ in row] == oracle.topk_scores(q, K), (q, e)
+
+        if not rules:   # rule-free draw: pin the oracle itself to the
+            by = {s.encode(): sc for s, sc in zip(strings, scores)}
+            for q in queries:   # brute-force edit-distance definition
+                p = q.encode()
+                want = {s for s in by
+                        if any(_edit_distance(p, s[:i]) <= e
+                               for i in range(len(s) + 1))}
+                assert oracle.matches(q) == want, (q, e)
 else:  # hypothesis absent: explicit skips, not collection errors
     @strat.needs_hypothesis
     def test_differential_engine_paths():
@@ -121,4 +184,8 @@ else:  # hypothesis absent: explicit skips, not collection errors
 
     @strat.needs_hypothesis
     def test_differential_oracle_end_to_end():
+        pass
+
+    @strat.needs_hypothesis
+    def test_differential_bounded_edit():
         pass

@@ -1,0 +1,312 @@
+"""Query-mode coverage: bounded-edit and multi-term completion.
+
+Deterministic matrices (the random-draw counterparts live in
+``test_differential.py``):
+
+- bounded-edit (``edit_budget`` e in {0,1,2}): jnp == pallas-resident ==
+  pallas-streamed bit-identically, and the end-to-end lookup equals both
+  the edit-aware ``OracleIndex`` and an inline brute-force
+  prefix-edit-distance scan;
+- multi-term: last-token completion conditioned on the previous tokens
+  answers identically through ``complete``, ``Session`` and the
+  scheduler's slab path;
+- empty-prefix audit: ``complete([b""])``, a fresh ``Session`` and a
+  depth-0 scheduler lane must all return the whole-dictionary top-k,
+  also on an index with uncompacted overlay mutations;
+- ``Session.backspace`` over multi-byte UTF-8 (the keystroke state is
+  per *byte*, a user backspace removes a *codepoint*).
+"""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import IndexSpec, build_index
+from repro.core import engine as eng
+from repro.core import make_rules
+from repro.core.alphabet import pad_queries
+from repro.core.oracle import OracleIndex
+from repro.serving import CompletionService
+
+SEQ_LEN = 8
+K = 3
+# edit mode multiplies live frontier states by the budget dimension, so
+# these matrices run wider than the exact-match differential SPEC
+SPEC = dict(frontier=16, gens=16, expand=2, max_steps=64)
+
+STRINGS = [b"andy pavlo", b"android", b"andrew", b"banana", b"sand",
+           b"andyp"]
+SCORES = [60, 50, 40, 30, 20, 10]
+RULES = [("andy", "andrew"), ("ny", "new york")]
+EDIT_QUERIES = [b"andy", b"andt", b"xndy", b"ady", b"anddy", b"ba", b"ny",
+                b"sund", b""]
+
+
+def edit_distance(a: bytes, b: bytes) -> int:
+    m, n = len(a), len(b)
+    d = list(range(n + 1))
+    for i in range(1, m + 1):
+        prev, d[0] = d[0], i
+        for j in range(1, n + 1):
+            prev, d[j] = d[j], min(d[j] + 1, d[j - 1] + 1,
+                                   prev + (a[i - 1] != b[j - 1]))
+    return d[n]
+
+
+def brute_edit_topk(strings, scores, p: bytes, e: int, k: int):
+    """Reference semantics: s matches iff some prefix of s is within
+    edit distance e of p (rules aside — use on rule-free indexes)."""
+    hits = [(sc, s.decode()) for s, sc in zip(strings, scores)
+            if any(edit_distance(p, s[:i]) <= e
+                   for i in range(len(s) + 1))]
+    hits.sort(key=lambda t: (-t[0], t[1]))
+    return hits[:k]
+
+
+def _run(idx, cfg, sub_name, qs, qlens):
+    sub = eng.get_substrate(sub_name)
+    s, i, e = eng.complete_batch(idx.device, cfg, qs, qlens, K, sub)
+    return np.asarray(s), np.asarray(i), np.asarray(e)
+
+
+# -- bounded-edit -------------------------------------------------------------
+
+
+@pytest.mark.streamed
+@pytest.mark.parametrize("compression", ["none", "packed"])
+@pytest.mark.parametrize("e", [0, 1, 2])
+def test_bounded_edit_substrates_bit_identical(e, compression):
+    """jnp == pallas-resident == pallas-streamed on an edit-budget index
+    with synonym rules, bit for bit (scores, sids AND exact flags)."""
+    idx = build_index(STRINGS, SCORES, make_rules(RULES),
+                      IndexSpec(kind="et", edit_budget=e,
+                                compression=compression, **SPEC))
+    qs, qlens = pad_queries(EDIT_QUERIES, SEQ_LEN)
+    qs, qlens = jnp.asarray(qs), jnp.asarray(qlens)
+
+    sub = eng.get_substrate("pallas")
+    cfg_res = idx.cfg
+    cfg_str = replace(idx.cfg,
+                      memory_budget=sub.min_streamed_budget(idx.device))
+    assert sub.walk_variant(idx.device, cfg_res, SEQ_LEN) == "resident"
+    assert sub.walk_variant(idx.device, cfg_str, SEQ_LEN) == "streamed"
+
+    ref = _run(idx, cfg_res, "jnp", qs, qlens)
+    for label, cfg in (("resident", cfg_res), ("streamed", cfg_str)):
+        got = _run(idx, cfg, "pallas", qs, qlens)
+        for a, b, nm in zip(got, ref, ("scores", "sids", "exact")):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"e={e}/{compression}/{label}/{nm}")
+
+
+@pytest.mark.parametrize("e", [0, 1, 2])
+def test_bounded_edit_matches_oracles(e):
+    """End-to-end: the edit-aware OracleIndex with rules, and the
+    brute-force prefix-edit-distance scan on a rule-free index."""
+    rules = make_rules(RULES)
+    idx = build_index(STRINGS, SCORES, rules,
+                      IndexSpec(kind="et", edit_budget=e, **SPEC))
+    oracle = OracleIndex(STRINGS, SCORES, rules, edit_budget=e)
+    for q, row in zip(EDIT_QUERIES, idx.complete(EDIT_QUERIES, k=K)):
+        want = [(s, b.decode()) for s, b in oracle.complete(q, K)]
+        assert row == want, (q, e)
+
+    plain = build_index(STRINGS, SCORES, make_rules([]),
+                        IndexSpec(kind="plain", edit_budget=e, **SPEC))
+    for q, row in zip(EDIT_QUERIES, plain.complete(EDIT_QUERIES, k=K)):
+        assert row == brute_edit_topk(STRINGS, SCORES, q, e, K), (q, e)
+
+
+def test_edit_budget_is_a_runtime_reconfigure_field():
+    """edit_budget rides reconfigure (no rebuild): the same built trie
+    answers exact at e=0 and typo-tolerantly at e=1."""
+    idx = build_index(STRINGS, SCORES, make_rules([]),
+                      IndexSpec(kind="plain", **SPEC))
+    assert idx.complete([b"andt"], k=K)[0] == []
+    relaxed = idx.reconfigure(edit_budget=1)
+    assert relaxed.complete([b"andt"], k=K)[0] == \
+        brute_edit_topk(STRINGS, SCORES, b"andt", 1, K)
+
+
+# -- multi-term ---------------------------------------------------------------
+
+
+MT_STRINGS = [b"the new york times", b"new york", b"san francisco giants",
+              b"the giants", b"new jersey", b"times square"]
+MT_SCORES = [60, 50, 40, 30, 20, 10]
+# query -> expected completions: the last token completes against any
+# token whose preceding tokens match, skipping up to multiterm_gap
+# interior tokens
+MT_EXPECT = {
+    b"the t": [(60, "the new york times")],
+    b"the times": [(60, "the new york times")],
+    b"the york t": [(60, "the new york times")],
+    b"new y": [(50, "new york")],
+    b"san g": [(40, "san francisco giants")],
+    b"the g": [(30, "the giants")],
+    b"t": [(60, "the new york times"), (30, "the giants"),
+           (10, "times square")],
+}
+
+
+@pytest.fixture(scope="module")
+def mt_idx():
+    return build_index(MT_STRINGS, MT_SCORES, make_rules([]),
+                       IndexSpec(kind="multiterm", frontier=32, gens=32,
+                                 expand=4, max_steps=128, multiterm_gap=2))
+
+
+def test_multiterm_complete(mt_idx):
+    queries = list(MT_EXPECT)
+    for q, row in zip(queries, mt_idx.complete(queries, k=K)):
+        assert row == MT_EXPECT[q], q
+
+
+def test_multiterm_session_parity(mt_idx):
+    """The incremental Session must answer every multi-term query the
+    way the one-shot path does, per keystroke."""
+    for q, want in MT_EXPECT.items():
+        sess = mt_idx.session(k=K)
+        assert sess.type(q.decode()) == want, q
+        # and the intermediate backspace state stays consistent
+        assert sess.backspace(1) == \
+            mt_idx.complete([q[:-1]], k=K)[0], q
+
+
+@pytest.mark.streamed
+@pytest.mark.parametrize("compression", ["none", "packed"])
+def test_multiterm_substrates_bit_identical(compression):
+    """jnp == pallas-resident == pallas-streamed on a multiterm index
+    (the synthesized token-skip teleports ride the same planes the
+    kernel already fuses)."""
+    idx = build_index(MT_STRINGS, MT_SCORES, make_rules([]),
+                      IndexSpec(kind="multiterm", frontier=32, gens=32,
+                                expand=4, max_steps=128, multiterm_gap=2,
+                                compression=compression))
+    queries = list(MT_EXPECT)
+    seq_len = 16
+    qs, qlens = pad_queries(queries, seq_len)
+    qs, qlens = jnp.asarray(qs), jnp.asarray(qlens)
+
+    sub = eng.get_substrate("pallas")
+    cfg_res = idx.cfg
+    cfg_str = replace(idx.cfg,
+                      memory_budget=sub.min_streamed_budget(idx.device))
+    assert sub.walk_variant(idx.device, cfg_res, seq_len) == "resident"
+    assert sub.walk_variant(idx.device, cfg_str, seq_len) == "streamed"
+
+    def run(cfg, sub_name):
+        s = eng.get_substrate(sub_name)
+        out = eng.complete_batch(idx.device, cfg, qs, qlens, K, s)
+        return tuple(np.asarray(x) for x in out)
+
+    ref = run(cfg_res, "jnp")
+    for label, cfg in (("resident", cfg_res), ("streamed", cfg_str)):
+        got = run(cfg, "pallas")
+        for a, b, nm in zip(got, ref, ("scores", "sids", "exact")):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"{compression}/{label}/{nm}")
+
+
+def test_multiterm_scheduler_parity(mt_idx):
+    """Multi-term queries through the batched slab path == one-shot."""
+    svc = CompletionService(mt_idx, batching=True, block=2,
+                            max_wait_ms=100.0)
+    a, b = svc.open_session(k=K), svc.open_session(k=K)
+    got_a = a.type("the t")
+    got_b = b.type("san g")
+    assert got_a == MT_EXPECT[b"the t"]
+    assert got_b == MT_EXPECT[b"san g"]
+    a.close(), b.close()
+
+
+# -- empty prefix -------------------------------------------------------------
+
+
+def _whole_dict_topk(strings, scores, k):
+    ranked = sorted(((sc, s.decode()) for s, sc in zip(strings, scores)),
+                    key=lambda t: (-t[0], t[1]))
+    return ranked[:k]
+
+
+def test_empty_prefix_all_paths_agree():
+    """complete([b""]), a fresh Session and a depth-0 scheduler lane all
+    return the whole-dictionary top-k (== oracle)."""
+    rules = make_rules(RULES)
+    idx = build_index(STRINGS, SCORES, rules, IndexSpec(kind="et", **SPEC))
+    oracle = OracleIndex(STRINGS, SCORES, rules)
+    want = [(s, b.decode()) for s, b in oracle.complete(b"", K)]
+    assert want == _whole_dict_topk(STRINGS, SCORES, K)
+
+    assert idx.complete([b""], k=K)[0] == want
+    assert idx.session(k=K).topk() == want
+
+    svc = CompletionService(idx, batching=True, block=2, max_wait_ms=100.0)
+    lane = svc.open_session(k=K)
+    assert lane._session.topk() == want      # depth-0 reset-only flush
+    lane.close()
+
+
+def test_empty_prefix_on_mutated_overlay():
+    """The audit must hold on an index with uncompacted mutations: the
+    overlay-merged one-shot path backs every empty-prefix answer."""
+    idx = build_index(STRINGS, SCORES, make_rules([]),
+                      IndexSpec(kind="plain", **SPEC))
+    idx.insert(b"zeta", 99)
+    idx.delete(b"banana")
+    strings = [s for s in STRINGS if s != b"banana"] + [b"zeta"]
+    scores = [sc for s, sc in zip(STRINGS, SCORES) if s != b"banana"] + [99]
+    want = _whole_dict_topk(strings, scores, K)
+
+    assert idx.complete([b""], k=K)[0] == want
+    assert idx.session(k=K).topk() == want
+
+    svc = CompletionService(idx, batching=True, block=2, max_wait_ms=100.0)
+    lane = svc.open_session(k=K)
+    assert lane._session.topk() == want
+    lane.close()
+
+
+def test_empty_prefix_edit_budget_stays_whole_dict():
+    """At the empty prefix every string already matches exactly; an edit
+    budget must not perturb the answer (deletes only widen the reach)."""
+    idx = build_index(STRINGS, SCORES, make_rules([]),
+                      IndexSpec(kind="plain", edit_budget=2, **SPEC))
+    assert idx.complete([b""], k=K)[0] == \
+        _whole_dict_topk(STRINGS, SCORES, K)
+
+
+# -- UTF-8 backspace ----------------------------------------------------------
+
+
+def test_session_backspace_multibyte():
+    """backspace() removes whole codepoints, not single bytes: deleting
+    one byte of a 2- or 3-byte UTF-8 char would leave a dangling head
+    whose loci match nothing."""
+    strings = ["café", "cafe", "caf", "日本語", "日本", "日記"]
+    scores = [60, 50, 40, 30, 20, 10]
+    idx = build_index(strings, scores, make_rules([]),
+                      IndexSpec(kind="plain", **SPEC))
+
+    sess = idx.session(k=K)
+    sess.type("café")                         # é = 2 bytes
+    assert sess.backspace() == idx.complete(["caf"], k=K)[0]
+    assert sess.prefix == "caf"
+
+    sess = idx.session(k=K)
+    sess.type("日本語")                        # 3 bytes per char
+    assert sess.backspace() == idx.complete(["日本"], k=K)[0]
+    assert sess.prefix == "日本"
+    assert sess.backspace(2) == idx.complete([""], k=K)[0]
+    assert sess.prefix == ""
+
+    # n spanning mixed widths, and over-deleting clamps at empty
+    sess = idx.session(k=K)
+    sess.type("café日")
+    assert sess.backspace(2) == idx.complete(["caf"], k=K)[0]
+    assert sess.prefix == "caf"
+    assert sess.backspace(99) == idx.complete([""], k=K)[0]
+    assert sess.prefix == ""

@@ -158,6 +158,46 @@ def test_full_block_flushes_immediately(paper_idx):
     assert sched.stats.full_flushes == 1    # fired inside submit's pump
 
 
+def test_poll_settles_idle_pipeline(paper_idx):
+    """The idle-starvation regression: the demux is pipelined one flush
+    deep, so after the LAST flush its results sit stashed on device and
+    ``pump()`` alone never resolves them (nothing is pending, so no
+    further flush fires).  A non-blocking driver looping on pump() and
+    checking ticket.done would spin forever; ``poll()`` must settle the
+    stash once the queue is empty."""
+    clock = FakeClock()
+    sched = KeystrokeScheduler(paper_idx, block=2, max_wait_ms=2.0,
+                               clock=clock)
+    idle = sched.open(k=3)          # keeps the block partial
+    s = sched.open(k=3)
+    t = s.submit(b"a")
+    clock.t += 0.010
+    assert sched.pump() == 1        # deadline flush consumed the keystroke
+    # the flush computed the result but stashed it: pump() can never
+    # finish the job from here
+    assert sched.pending == 0 and not t.done
+    assert sched.pump() == 0 and not t.done
+    assert sched.poll() == 0        # fires nothing...
+    assert t.done                   # ...but settles the stashed demux
+    assert t.results == paper_idx.complete(["a"], k=3)[0]
+    idle.close()
+
+
+def test_service_poll_delegates(paper_idx):
+    """CompletionService.poll() is the event-loop entry point: pump plus
+    idle settling in batching mode, a no-op otherwise."""
+    svc = CompletionService(paper_idx, batching=True, block=2,
+                            max_wait_ms=0.0)
+    a, b = svc.open_session(k=3), svc.open_session(k=3)
+    ta, tb = a.submit(b"a"), b.submit(b"b")
+    svc.pump()                      # consume anything still queued
+    assert svc.scheduler.pending == 0
+    assert svc.poll() == 0
+    assert ta.done and tb.done      # poll settled the pipeline's tail
+    a.close(), b.close()
+    assert CompletionService(paper_idx).poll() == 0   # unbatched no-op
+
+
 # -- backpressure --------------------------------------------------------------
 
 
